@@ -1,0 +1,26 @@
+"""Shared benchmark utilities: timing, CSV emission, scaled-down dataset
+sizes (full paper sizes via --full; CPU-friendly defaults otherwise)."""
+from __future__ import annotations
+
+import time
+
+
+def time_fit(fn, *args, repeats: int = 1, **kw):
+    """Returns (result_of_last_call, best_seconds)."""
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.time()
+        out = fn(*args, **kw)
+        best = min(best, time.time() - t0)
+    return out, best
+
+
+def emit(rows: list[dict], name: str):
+    """Print `name,us_per_call,derived` CSV rows per the harness contract,
+    then a human-readable table."""
+    for r in rows:
+        us = r.get("us_per_call", r.get("seconds", 0.0) * 1e6)
+        derived = ";".join(f"{k}={v}" for k, v in r.items()
+                           if k not in ("name", "us_per_call", "seconds"))
+        print(f"{name}/{r['name']},{us:.1f},{derived}")

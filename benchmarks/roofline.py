@@ -1,0 +1,72 @@
+"""§Roofline report generator: reads runs/dryrun/*.json (written by
+repro.launch.dryrun) and emits the per-(arch x shape x mesh) table with
+the three roofline terms, the dominant bottleneck, MODEL_FLOPS/HLO ratio,
+and a one-line what-would-move-it note."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_ADVICE = {
+    "compute_s": ("cut replicated/wasted FLOPs: head-divisible TP layout, "
+                  "causal block skipping, lower remat factor"),
+    "memory_s": ("stream less HBM: bf16 activations everywhere, larger "
+                 "fusion tiles, fewer elementwise round-trips"),
+    "collective_s": ("shrink reduction payloads: triangle/bf16-compressed "
+                     "reduce, overlap collectives with compute, "
+                     "reduce-scatter instead of all-reduce"),
+}
+
+
+def load(run_dir: str = "runs/dryrun") -> list[dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(run_dir, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(recs: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute_s | memory_s | collective_s | "
+           "dominant | fits HBM | model/HLO flops | note |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in recs:
+        if r.get("skipped"):
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"skipped | — | — | {r['reason'][:60]} |")
+            continue
+        if not r.get("ok"):
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"ERROR | — | — | {r.get('error', '')[:60]} |")
+            continue
+        t = r["terms"]
+        dom = t["dominant"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {t['compute_s']:.3g} | {t['memory_s']:.3g} "
+            f"| {t['collective_s']:.3g} | {dom.replace('_s','')} "
+            f"| {'Y' if r['memory']['fits_16gb_hbm'] else 'N'} "
+            f"| {r['useful_flops_ratio']:.3f} | {_ADVICE[dom][:58]} |")
+    return "\n".join(lines)
+
+
+def run(run_dir: str = "runs/dryrun", full: bool = False):
+    recs = load(run_dir)
+    if not recs:
+        print(f"roofline,no_records,dir={run_dir}")
+        return []
+    print(table(recs))
+    ok = [r for r in recs if r.get("ok") and not r.get("skipped")]
+    for r in ok:
+        dom = r["terms"]["dominant"]
+        print(f"roofline/{r['arch']}_{r['shape']}_{r['mesh']},0.0,"
+              f"dominant={dom};ratio={r['useful_flops_ratio']:.3f}")
+    return recs

@@ -1,0 +1,53 @@
+"""Paper Table 5: LIN-EM-CLS on the dna dataset vs baseline solvers.
+
+Scaled-down default (N=60k of the paper's 2.5M/25M rows — CPU container);
+the protocol is the paper's: C=1e-5, objective-change stopping rule,
+accuracy parity check. Baselines are the reimplemented LL-Dual (DCD) and
+Pegasos. The paper's headline — parallel scaling to hundreds of cores —
+is measured in fig2_cores.py; the 256/512-chip versions are the
+pemsvm dry-run cells (EXPERIMENTS.md §Dry-run)."""
+from __future__ import annotations
+
+from repro.baselines import DCDSVM, PegasosSVM
+from repro.core import PEMSVM, SVMConfig, lam_from_C
+from repro.data import make_dna_like
+
+from .common import emit, time_fit
+
+
+def run(n: int = 60_000, k: int = 800, full: bool = False):
+    if full:
+        n, k = 2_500_000, 800
+    # Paper protocol: C=1e-5 at N=2.5M. The regularizer 0.5*lam*||w||^2
+    # competes with a sum over N examples, so lam scales with N when the
+    # dataset is scaled down (lam_paper * n/n_paper) — otherwise the
+    # reduced problem is over-regularized to chance accuracy.
+    lam = lam_from_C(1e-5) * n / 2_500_000
+    C_dual = 2.0 / lam
+    X, y = make_dna_like(n, k)
+    n_te = min(10_000, n // 5)
+    Xte, yte = X[-n_te:], y[-n_te:]
+    Xtr, ytr = X[:-n_te], y[:-n_te]
+
+    rows = []
+    svm = PEMSVM(SVMConfig(lam=lam, max_iters=100))
+    res, secs = time_fit(svm.fit, Xtr, ytr)
+    rows.append({"name": "LIN-EM-CLS", "seconds": secs,
+                 "acc": round(svm.score(Xte, yte), 4),
+                 "iters": res.n_iters, "converged": res.converged})
+
+    # Pegasos's lambda is per-example (obj: lam/2||w||^2 + mean hinge);
+    # the paper's is per-sum — divide by 2N for the equivalent problem.
+    peg = PegasosSVM(lam=lam / (2 * len(Xtr)), n_steps=8_000,
+                     batch_size=512)
+    _, secs = time_fit(peg.fit, Xtr, ytr)
+    rows.append({"name": "Pegasos", "seconds": secs,
+                 "acc": round(peg.score(Xte, yte), 4)})
+
+    dcd = DCDSVM(C=C_dual, n_epochs=3)
+    _, secs = time_fit(dcd.fit, Xtr, ytr)
+    rows.append({"name": "LL-Dual(DCD)", "seconds": secs,
+                 "acc": round(dcd.score(Xte, yte), 4)})
+
+    emit(rows, "table5_dna")
+    return rows

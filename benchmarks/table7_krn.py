@@ -1,0 +1,49 @@
+"""Paper Table 7: KRN-EM-CLS on an N=1800 subset (news20 protocol, C=1).
+
+The synthetic stand-in is a radially-structured problem where the linear
+formulation fails — demonstrating the kernel extension's accuracy, with
+training time independent of K (paper Sec 4.3)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import PEMSVM, SVMConfig, lam_from_C
+from repro.core.nystrom import NystromSVM
+from repro.data import make_circles
+
+from .common import emit, time_fit
+
+
+def run(n: int = 1800, full: bool = False):
+    X, y = make_circles(n)
+    rows = []
+
+    krn = PEMSVM(SVMConfig.from_options(
+        "KRN-EM-CLS", lam=lam_from_C(1.0), sigma=0.7, max_iters=60))
+    res, secs = time_fit(krn.fit, X, y)
+    rows.append({"name": "KRN-EM-CLS", "seconds": secs,
+                 "acc": round(krn.score(X, y), 4), "iters": res.n_iters})
+
+    krn_mc = PEMSVM(SVMConfig.from_options(
+        "KRN-MC-CLS", lam=lam_from_C(1.0), sigma=0.7, max_iters=60))
+    _, secs = time_fit(krn_mc.fit, X, y)
+    rows.append({"name": "KRN-MC-CLS", "seconds": secs,
+                 "acc": round(krn_mc.score(X, y), 4)})
+
+    lin = PEMSVM(SVMConfig(lam=lam_from_C(1.0), max_iters=60))
+    _, secs = time_fit(lin.fit, X, y)
+    rows.append({"name": "LIN-EM-CLS(control)", "seconds": secs,
+                 "acc": round(lin.score(X, y), 4)})
+
+    # Beyond-paper: the paper's own open question (Sec 4.3) — PSVM-style
+    # sqrt(N) Nystrom approximation composed with the sampling SVM. Run
+    # at 5x the exact-KRN N to show the cubic-in-N blocker is gone.
+    Xb, yb = make_circles(5 * n)
+    nys = NystromSVM(SVMConfig.from_options(
+        "KRN-EM-CLS", lam=lam_from_C(1.0), sigma=0.7, max_iters=60))
+    _, secs = time_fit(nys.fit, Xb, yb)
+    rows.append({"name": f"KRN-EM-CLS+nystrom(N={5*n})", "seconds": secs,
+                 "acc": round(nys.score(Xb, yb), 4)})
+
+    emit(rows, "table7_krn")
+    return rows

@@ -1,0 +1,57 @@
+"""Paper Table 9: the rate-limiting Sigma statistic
+sum_d (1/gamma_d) x_d x_d^T at N=250,000, K=500.
+
+The paper measured 1 CPU core (17.1s) vs 512/2048 GPU cores (0.73/0.34s).
+Here: measured XLA-CPU wall time for the jnp path, plus the *derived* TPU
+v5e single-chip roofline time for the Pallas kernel (compute- and
+memory-bound bounds from the exact tile arithmetic — the kernel itself is
+validated in interpret mode in tests/test_kernels_pallas.py)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+from .common import emit
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def run(n: int = 250_000, k: int = 500, full: bool = False):
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(n, k)).astype(np.float32)
+    w = rng.uniform(0.1, 2.0, size=(n,)).astype(np.float32)
+    Xj, wj = jnp.asarray(X), jnp.asarray(w)
+
+    f = jax.jit(lambda a, b: ops.weighted_gram(a, b, backend="ref"))
+    f(Xj, wj).block_until_ready()
+    t0 = time.time()
+    f(Xj, wj).block_until_ready()
+    cpu_s = time.time() - t0
+
+    flops = 2.0 * n * k * k + n * k
+    bytes_moved = 4.0 * (n * k + n + k * k)      # one X pass + w + out (f32)
+    bf16_bytes = 2.0 * n * k + 4.0 * (n + k * k)
+    rows = [
+        {"name": "xla_cpu_1core", "seconds": cpu_s,
+         "gflops": round(flops / cpu_s / 1e9, 1)},
+        {"name": "tpu_v5e_compute_bound", "seconds": flops / PEAK_FLOPS,
+         "derivation": "2NK^2/peak"},
+        {"name": "tpu_v5e_memory_bound_f32", "seconds": bytes_moved / HBM_BW,
+         "derivation": "one-pass X stream"},
+        {"name": "tpu_v5e_memory_bound_bf16",
+         "seconds": bf16_bytes / HBM_BW,
+         "derivation": "bf16 X stream (beyond-paper)"},
+    ]
+    # paper reference points for the same statistic
+    rows.append({"name": "paper_1_cpu_core", "seconds": 17.1,
+                 "source": "Table 9"})
+    rows.append({"name": "paper_2048_gpu_cores", "seconds": 0.34,
+                 "source": "Table 9"})
+    emit(rows, "table9_gram")
+    return rows

@@ -1,0 +1,54 @@
+"""Composite max-margin model (paper Sec 1 / DESIGN.md §4): a frozen LM
+backbone + PEMSVM head — the MedLDA-style use case the paper motivates,
+with any assigned architecture as the feature extractor.
+
+    PYTHONPATH=src python examples/lm_feature_svm.py [--arch smollm-135m]
+"""
+import argparse
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.core import MaxMarginHead, SVMConfig, mean_pool  # noqa: E402
+from repro.models import build_model  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        get_config(args.arch), n_layers=2, d_model=128, n_heads=4,
+        n_kv_heads=2, head_dim=32, d_ff=256, vocab=256)
+    model = build_model(cfg, q_chunk=32, kv_chunk=32)
+    params = model.init(jax.random.PRNGKey(0))
+
+    # synthetic "document classification": token-range signal
+    rng = np.random.default_rng(0)
+    N, S = 1200, 32
+    cls = rng.random(N) > 0.5
+    toks = np.where(cls[:, None], rng.integers(0, 96, (N, S)),
+                    rng.integers(160, 256, (N, S))).astype(np.int32)
+    y = np.where(cls, 1.0, -1.0)
+
+    def feature_fn(tokens):
+        h = model.hidden_seq(params, {"tokens": tokens}, remat=False)
+        return mean_pool(h.astype(jnp.float32))
+
+    head = MaxMarginHead(SVMConfig(lam=0.1, max_iters=60), feature_fn)
+    res = head.fit(toks[:1000], y[:1000])
+    print(f"backbone={args.arch} (frozen, reduced)  head=LIN-EM-CLS")
+    print(f"converged={res.converged} iters={res.n_iters}")
+    print(f"train acc={head.score(toks[:1000], y[:1000]):.4f}  "
+          f"test acc={head.score(toks[1000:], y[1000:]):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Quickstart: train the paper's parallel sampling SVM (PEMSVM).
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Fits LIN-EM-CLS on a synthetic binary problem with the paper's protocol
+(objective-change stopping, gamma clamping), reports accuracy and the
+convergence trace. Runs identically on one device or a TPU pod — pass a
+mesh to PEMSVM(...) to engage the Fig.-1 map-reduce over all devices."""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import PEMSVM, SVMConfig, lam_from_C  # noqa: E402
+from repro.data import make_blobs  # noqa: E402
+
+
+def main():
+    X, y = make_blobs(n=20_000, k=100, seed=0)
+    Xtr, ytr, Xte, yte = X[:16_000], y[:16_000], X[16_000:], y[16_000:]
+
+    config = SVMConfig.from_options("LIN-EM-CLS", lam=lam_from_C(1.0),
+                                    max_iters=100)
+    svm = PEMSVM(config)           # PEMSVM(config, mesh=...) on a pod
+    result = svm.fit(Xtr, ytr)
+
+    print(f"options       : {config.options}")
+    print(f"converged     : {result.converged} "
+          f"({result.n_iters} iterations — paper reports 40-60 for EM)")
+    print(f"train objective: {result.objective[0]:.1f} -> "
+          f"{result.objective[-1]:.1f}")
+    print(f"test accuracy : {svm.score(Xte, yte):.4f}")
+
+    # MCMC flavor: posterior-averaged weights (paper Sec 5.13)
+    mc = PEMSVM(SVMConfig.from_options("LIN-MC-CLS", lam=lam_from_C(1.0),
+                                       max_iters=60, burnin=10))
+    mc.fit(Xtr, ytr)
+    print(f"MC accuracy   : {mc.score(Xte, yte):.4f} (averaged samples)")
+
+
+if __name__ == "__main__":
+    main()

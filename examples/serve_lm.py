@@ -1,0 +1,22 @@
+"""Batched serving example (deliverable (b)): prefill + greedy decode on
+any assigned architecture via repro.launch.serve.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch xlstm-350m
+"""
+import subprocess
+import sys
+
+
+def main():
+    args = sys.argv[1:] or ["--arch", "smollm-135m", "--preset", "tiny",
+                            "--batch", "4", "--prompt-len", "32",
+                            "--steps", "16"]
+    cmd = [sys.executable, "-m", "repro.launch.serve"] + args
+    print("running:", " ".join(cmd))
+    raise SystemExit(subprocess.call(cmd, env={
+        **__import__("os").environ,
+        "PYTHONPATH": "src"}))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""End-to-end LM training driver (deliverable (b)): wraps
+repro.launch.train. The default trains a reduced model for a quick CPU
+demo; ``--preset full --arch smollm-135m`` is the real ~135M-parameter
+run (use on TPU, or be very patient on CPU).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import subprocess
+import sys
+
+
+def main():
+    args = sys.argv[1:] or ["--arch", "smollm-135m", "--preset", "tiny",
+                            "--steps", "200", "--batch", "8",
+                            "--seq", "256", "--ckpt-dir", "runs/train_lm"]
+    cmd = [sys.executable, "-m", "repro.launch.train"] + args
+    print("running:", " ".join(cmd))
+    raise SystemExit(subprocess.call(cmd, env={
+        **__import__("os").environ,
+        "PYTHONPATH": "src"}))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""§Perf hillclimb harness: run a cell under a series of option variants,
+recording the roofline-term deltas per iteration. Used for the three
+chosen cells; each variant is one hypothesis -> change -> re-lower ->
+measure cycle logged into EXPERIMENTS.md §Perf.
+
+    PYTHONPATH=src python scripts/hillclimb.py --cell yi-34b:train_4k \
+        --variant baseline "" --variant skip_blocks skip_masked_blocks=1
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+
+def run_variant(arch, shape, opts, out, multi=False, timeout=2400):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", out]
+    if multi:
+        cmd.append("--multi-pod")
+    for o in opts:
+        if o:
+            cmd += ["--opt", o]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.abspath("src"), env.get("PYTHONPATH", "")])
+    p = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                       timeout=timeout)
+    try:
+        return json.loads(p.stdout[p.stdout.index("{"):])
+    except Exception:  # noqa: BLE001
+        return {"ok": False, "error": (p.stderr or p.stdout)[-800:]}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True)       # arch:shape
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="runs/hillclimb")
+    ap.add_argument("--variant", nargs=2, action="append", required=True,
+                    metavar=("NAME", "OPTS"))      # OPTS: comma-joined k=v
+    args = ap.parse_args()
+    arch, shape = args.cell.split(":")
+    os.makedirs(args.out, exist_ok=True)
+
+    rows = []
+    for name, optstr in args.variant:
+        opts = [o for o in optstr.split(",") if o]
+        rec = run_variant(arch, shape, opts, args.out, args.multi_pod)
+        if not rec.get("ok"):
+            print(f"{name:28s} FAILED: {rec.get('error', '')[:100]}")
+            continue
+        t = rec["terms"]
+        rows.append((name, t, rec))
+        print(f"{name:28s} compute={t['compute_s']:.4g} "
+              f"memory={t['memory_s']:.4g} coll={t['collective_s']:.4g} "
+              f"dom={t['dominant']:12s} "
+              f"fit={'Y' if rec['memory']['fits_16gb_hbm'] else 'N'} "
+              f"temp={rec['memory']['temp_bytes']/1e9:.1f}GB "
+              f"ratio={rec['useful_flops_ratio']:.3f}", flush=True)
+    if len(rows) > 1:
+        base = rows[0][1]
+        print("\ndeltas vs", rows[0][0])
+        for name, t, _ in rows[1:]:
+            for k in ("compute_s", "memory_s", "collective_s"):
+                d = (t[k] - base[k]) / max(base[k], 1e-12) * 100
+                print(f"  {name:26s} {k:13s} {d:+7.1f}%")
+
+
+if __name__ == "__main__":
+    main()

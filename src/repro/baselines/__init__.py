@@ -1,0 +1,11 @@
+"""Baselines the paper compares against (Table 4), reimplemented in JAX.
+
+  * Pegasos  — primal estimated sub-gradient solver (Shalev-Shwartz 2007).
+  * DCD      — dual coordinate descent, the LibLinear "LL-Dual" algorithm
+               (Hsieh et al. 2008) for L1-loss linear SVM.
+
+Used by the benchmark tables to reproduce the paper's accuracy-parity
+claims without external binaries.
+"""
+from .dcd import DCDSVM  # noqa: F401
+from .pegasos import PegasosSVM  # noqa: F401

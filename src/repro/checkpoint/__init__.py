@@ -1,0 +1,2 @@
+"""Fault-tolerant checkpointing (async, atomic, keep-K, elastic restore)."""
+from .checkpointer import Checkpointer  # noqa: F401

@@ -1,0 +1,140 @@
+"""Fault-tolerant checkpointing: async, atomic, keep-K, elastic restore.
+
+Layout (one directory per step):
+    <dir>/step_000100/
+        manifest.json        # tree structure, shapes, dtypes, mesh info
+        arrays/<idx>.npy     # one file per leaf (host-gathered)
+    <dir>/step_000100.COMMIT # written last -> crash-safe atomicity
+
+Design points for 1000+ node deployments (documented where this
+single-host implementation stands in for the multi-host version):
+  * save is ASYNC: the step's arrays are snapshotted to host memory
+    synchronously (cheap device->host copy) and written by a background
+    thread, so training never blocks on the filesystem;
+  * atomicity by COMMIT marker — restore only considers committed steps,
+    so a node failure mid-save never corrupts the restore point;
+  * keep_k garbage collection bounds disk;
+  * ELASTIC restore: arrays are saved as full (host-gathered) logical
+    tensors, so a checkpoint written on a 2x16x16 mesh restores onto a
+    16x16 (or any other) mesh — restore takes target shardings and
+    device_puts each leaf accordingly. On multi-host each host would
+    write only its addressable shards (same manifest format, per-shard
+    files), which is a file-naming change, not a format change.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _tree_flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    return names, [leaf for _, leaf in flat], treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep_k: int = 3):
+        self.dir = directory
+        self.keep_k = keep_k
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+        self._error: Exception | None = None
+
+    # ------------------------------------------------------------- saving
+    def save(self, step: int, tree: Any, *, blocking: bool = False) -> None:
+        """Snapshot to host, then write in the background."""
+        self.wait()  # at most one outstanding save
+        names, leaves, _ = _tree_flatten_with_names(tree)
+        host = [np.asarray(x) for x in leaves]   # device->host snapshot
+
+        def _write():
+            try:
+                tmp = os.path.join(self.dir, f".tmp_step_{step:09d}")
+                final = os.path.join(self.dir, f"step_{step:09d}")
+                shutil.rmtree(tmp, ignore_errors=True)
+                os.makedirs(os.path.join(tmp, "arrays"))
+                manifest = {"step": step, "time": time.time(), "leaves": []}
+                for i, (n, a) in enumerate(zip(names, host)):
+                    np.save(os.path.join(tmp, "arrays", f"{i}.npy"), a)
+                    manifest["leaves"].append(
+                        {"name": n, "idx": i, "shape": list(a.shape),
+                         "dtype": str(a.dtype)})
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump(manifest, f)
+                shutil.rmtree(final, ignore_errors=True)
+                os.rename(tmp, final)
+                open(final + ".COMMIT", "w").close()   # atomic commit mark
+                self._gc()
+            except Exception as e:  # noqa: BLE001
+                self._error = e
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep_k] if self.keep_k else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"),
+                          ignore_errors=True)
+            try:
+                os.remove(os.path.join(self.dir, f"step_{s:09d}.COMMIT"))
+            except OSError:
+                pass
+
+    # ------------------------------------------------------------ restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for f in os.listdir(self.dir):
+            if f.endswith(".COMMIT"):
+                out.append(int(f[len("step_"):-len(".COMMIT")]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, tree_like: Any, step: int | None = None,
+                shardings: Any = None) -> Any:
+        """Restore into the structure of ``tree_like``; with ``shardings``
+        given (a matching tree of NamedSharding / None), each leaf is
+        device_put with its target sharding — this is the elastic-remesh
+        path (checkpoint mesh need not equal restore mesh)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+        final = os.path.join(self.dir, f"step_{step:09d}")
+        with open(os.path.join(final, "manifest.json")) as f:
+            manifest = json.load(f)
+        names, leaves, treedef = _tree_flatten_with_names(tree_like)
+        by_name = {e["name"]: e for e in manifest["leaves"]}
+        sh_leaves = (jax.tree.leaves(shardings, is_leaf=lambda x: x is None)
+                     if shardings is not None else [None] * len(leaves))
+        out = []
+        for n, leaf, sh in zip(names, leaves, sh_leaves):
+            e = by_name[n]
+            a = np.load(os.path.join(final, "arrays", f"{e['idx']}.npy"))
+            want = tuple(getattr(leaf, "shape", a.shape))
+            assert tuple(a.shape) == want, (n, a.shape, want)
+            out.append(jax.device_put(a, sh) if sh is not None
+                       else jax.device_put(a))
+        return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,12 @@
+"""The paper's primary contribution: PEMSVM — parallel EM/MCMC SVM via
+Polson-Scott data augmentation (see DESIGN.md).
+
+Public API:
+  SVMConfig / PEMSVM / FitResult  — the solver facade (all six option axes)
+  MaxMarginHead                   — composite max-margin models over backbones
+  lam_from_C                      — paper's C <-> lambda mapping
+"""
+from .head import MaxMarginHead, last_token_pool, mean_pool  # noqa: F401
+from .nystrom import NystromSVM  # noqa: F401
+from .linear import SVMData  # noqa: F401
+from .solver import FitResult, PEMSVM, SVMConfig, lam_from_C  # noqa: F401

@@ -1,0 +1,110 @@
+"""The paper's map-reduce architecture (Sec 4, Fig. 1) on a JAX mesh.
+
+Every step function in this package is written over a *local* shard with
+explicit ``psum`` reductions over ``axes``; this module supplies the
+machinery around them:
+
+  * ``shard_rows`` — partition the training set across the mesh's data
+    axes exactly like the paper assigns D^p to process p (padding rows are
+    zeroed and masked so statistics are exact).
+  * ``shard_wrap`` — wrap a step function in ``shard_map`` so each device
+    runs the identical SPMD program (the paper's observation that all
+    slaves perform the same operations — hence minimal sync latency — is
+    preserved; the master is replaced by a replicated solve, DESIGN.md §6).
+  * ``FaultTolerantReduce`` semantics: reductions take a per-shard liveness
+    weight so a failed/evicted replica contributes zero and the global
+    statistic renormalizes (Sec "large-scale runnability"); see
+    ``repro.runtime`` for the detection side.
+
+The SVM is embarrassingly data-parallel, so by default it consumes *every*
+mesh axis as a data axis (the paper scales to 480 cores with pure data
+parallelism; on a 2x16x16 pod-slice that is 512-way). ``k_shard_axis``
+optionally switches the Sigma statistic to the 2-D (data x model) scheme
+(beyond-paper; see linear.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+from .linear import SVMData
+
+
+def data_axes_of(mesh: Mesh, model_axes: Sequence[str] = ()) -> tuple[str, ...]:
+    """All mesh axes not reserved for the model — the SVM's worker grid."""
+    return tuple(a for a in mesh.axis_names if a not in model_axes)
+
+
+def num_shards(mesh: Mesh, axes: Sequence[str]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes], dtype=np.int64))
+
+
+def pad_rows(X: np.ndarray, target: np.ndarray, shards: int,
+             multiple: int = 8):
+    """Zero-pad rows to a multiple of (shards * multiple); returns SVMData
+    host arrays. Padded rows: X-row = 0, target = 0, mask = 0."""
+    N = X.shape[0]
+    chunk = shards * multiple
+    Np = ((N + chunk - 1) // chunk) * chunk
+    pad = Np - N
+    Xp = np.concatenate([X, np.zeros((pad,) + X.shape[1:], X.dtype)], axis=0)
+    tp = np.concatenate([target, np.zeros((pad,), target.dtype)], axis=0)
+    mask = np.concatenate([np.ones((N,), np.float32),
+                           np.zeros((pad,), np.float32)], axis=0)
+    return Xp, tp, mask
+
+
+def shard_rows(mesh: Mesh, axes: Sequence[str], X: np.ndarray,
+               target: np.ndarray) -> SVMData:
+    """Place the training set row-sharded over ``axes`` (paper Sec 4.1).
+
+    I/O note (paper Sec 5.6): in a real multi-host deployment each host
+    feeds only its addressable shard (repro.data.pipeline); here the
+    single-host path materializes and shards.
+    """
+    shards = num_shards(mesh, axes)
+    Xp, tp, mask = pad_rows(X, target, shards)
+    row_spec = P(tuple(axes))
+    data = SVMData(
+        X=jax.device_put(Xp, NamedSharding(mesh, P(tuple(axes), None))),
+        target=jax.device_put(tp, NamedSharding(mesh, row_spec)),
+        mask=jax.device_put(mask, NamedSharding(mesh, row_spec)),
+    )
+    return data
+
+
+def shard_wrap(mesh: Mesh, axes: Sequence[str],
+               step_fn: Callable, *, state_spec=P(None),
+               has_prior: bool = False) -> Callable:
+    """shard_map a step(data, [prior,] state, key) -> (state, aux) function.
+
+    data is row-sharded over ``axes``; state/key/prior replicated; outputs
+    replicated (the psum/replicated-solve structure guarantees it).
+    """
+    dspec = P(tuple(axes))
+    data_specs = SVMData(X=P(tuple(axes), None), target=dspec, mask=dspec)
+    in_specs = ((data_specs, P(None, None), state_spec, P(None)) if has_prior
+                else (data_specs, state_spec, P(None)))
+    out_specs = (state_spec, P())  # P() = replicated scalars in the aux dict
+
+    wrapped = shard_map(step_fn, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs, check_vma=False)
+    return jax.jit(wrapped)
+
+
+def live_weighted_psum(x: jnp.ndarray, live: jnp.ndarray,
+                       axes: Sequence[str]) -> jnp.ndarray:
+    """Failure-tolerant mean-preserving reduction: sum_p live_p x_p scaled
+    by P / sum_p live_p. A dead replica (live=0) drops out and the
+    statistic renormalizes — the SVM's sums are over data, so this is the
+    unbiased estimate the paper's stopping rule keeps working with."""
+    num = jax.lax.psum(live * x, tuple(axes))
+    den = jax.lax.psum(live, tuple(axes))
+    total = np.prod([jax.lax.axis_size(a) for a in axes])
+    return num * (total / jnp.maximum(den, 1.0))

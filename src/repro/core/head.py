@@ -1,0 +1,72 @@
+"""MaxMarginHead: the paper's technique as a first-class feature of every
+assigned architecture (DESIGN.md §4, Arch-applicability).
+
+The paper positions the sampling SVM as the building block for *composite
+max-margin models* (MedLDA and friends, Sec 1): any model that produces
+features can get an exact, parallel max-margin readout without mean-field
+approximations. Here the composite model is <LM backbone + SVM head>:
+
+    features h = pool(backbone(tokens))  (B, F)   — any repro.models arch
+    head     trained by PEMSVM's parallel EM/MCMC on the same mesh
+
+The head reuses the mesh's data axes for the Fig.-1 map-reduce, so SVM
+training composes with the backbone's DP x TP layout. The backbone is
+frozen during head fitting (the paper's algorithm is for convex models; it
+does not replace SGD for the transformer interior)."""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from .solver import PEMSVM, SVMConfig
+
+
+def mean_pool(hidden: jnp.ndarray, mask: jnp.ndarray | None = None
+              ) -> jnp.ndarray:
+    """(B, T, D) -> (B, D) masked mean over tokens."""
+    if mask is None:
+        return jnp.mean(hidden, axis=1)
+    m = mask[..., None].astype(hidden.dtype)
+    return jnp.sum(hidden * m, axis=1) / jnp.maximum(jnp.sum(m, axis=1), 1.0)
+
+
+def last_token_pool(hidden: jnp.ndarray, lengths: jnp.ndarray) -> jnp.ndarray:
+    """(B, T, D) -> (B, D) hidden state at the last valid position."""
+    idx = jnp.clip(lengths - 1, 0, hidden.shape[1] - 1)
+    return jnp.take_along_axis(hidden, idx[:, None, None], axis=1)[:, 0]
+
+
+class MaxMarginHead:
+    """PEMSVM readout over backbone features.
+
+    feature_fn: batch -> (B, F) pooled features (jit-able, frozen params
+    closed over). Fitting extracts features in batches, then runs the
+    parallel SVM on the provided mesh."""
+
+    def __init__(self, config: SVMConfig, feature_fn: Callable,
+                 mesh: Mesh | None = None,
+                 data_axes: Sequence[str] | None = None,
+                 feature_batch: int = 256):
+        self.svm = PEMSVM(config, mesh=mesh, data_axes=data_axes)
+        self.feature_fn = jax.jit(feature_fn)
+        self.feature_batch = feature_batch
+
+    def extract(self, inputs: np.ndarray) -> np.ndarray:
+        feats = []
+        for i in range(0, len(inputs), self.feature_batch):
+            feats.append(np.asarray(
+                self.feature_fn(jnp.asarray(inputs[i:i + self.feature_batch]))))
+        return np.concatenate(feats, axis=0)
+
+    def fit(self, inputs: np.ndarray, y: np.ndarray):
+        return self.svm.fit(self.extract(inputs), y)
+
+    def predict(self, inputs: np.ndarray) -> np.ndarray:
+        return self.svm.predict(self.extract(inputs))
+
+    def score(self, inputs: np.ndarray, y: np.ndarray) -> float:
+        return self.svm.score(self.extract(inputs), y)

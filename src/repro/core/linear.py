@@ -1,0 +1,121 @@
+"""LIN-{EM,MC}-CLS: linear binary SVM via data augmentation (paper Sec 2, 4).
+
+One iteration over a *local* data shard (rows of other shards live on other
+devices; reductions go through ``stats.reduce_stats``):
+
+  E-step   gamma_d from the residual y_d - w^T x_d      O(NK/P)
+  stats    Sigma^p = X^T diag(1/gamma) X                O(NK^2/P)   <- Pallas
+           mu^p    = X^T (y (1 + 1/gamma))              O(NK/P)     <- fused
+  reduce   psum over data axes                          O(K^2 log P)
+  M-step   Cholesky solve (EM) / Gaussian draw (MC)     O(K^3), replicated
+
+Padding convention: invalid rows have X-row == 0 and target == 0, which
+makes their statistics contributions exactly zero; ``mask`` only enters the
+objective.
+
+``k_shard``: beyond-paper optimization (DESIGN.md §Perf) — additionally
+split the Sigma^p *column blocks* over the mesh's model axis, turning the
+paper's 1-D data-parallel statistic into a 2-D (data x model) one. Each
+model shard computes X^T diag(w) X[:, cols]; the blocks are psum'd over
+data axes only and all-gathered over the model axis.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from . import augment, objective, stats
+
+
+class SVMData(NamedTuple):
+    """A (possibly local-shard) view of the training set."""
+    X: jnp.ndarray       # (N, K) rows zeroed where mask == 0
+    target: jnp.ndarray  # y in {+-1} (CLS), float (SVR), int (MLT); 0 if padded
+    mask: jnp.ndarray    # (N,) 1.0 valid / 0.0 padding
+
+
+def local_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
+                w: jnp.ndarray, *, mode: str, key: jax.Array | None,
+                eps: float, backend: str | None):
+    """(margin, gamma, Sigma^p, mu^p) for the generic hinge — shared by
+    CLS (rho=beta=y) and each Crammer-Singer class update."""
+    if mode == "EM":
+        margin, gamma, b = ops.fused_estep(X, rho, beta, w, eps=eps,
+                                           backend=backend)
+    else:
+        margin = X.astype(jnp.float32) @ w.astype(jnp.float32)
+        gamma = augment.gamma_mc(key, rho - margin, eps)
+        coef = rho.astype(jnp.float32) / gamma + beta.astype(jnp.float32)
+        b = X.astype(jnp.float32).T @ coef
+    S = ops.weighted_gram(X, 1.0 / gamma, backend=backend)
+    return margin, gamma, S, b
+
+
+def _k_block(S_or_X, axis_name):
+    """Column block bounds of a K-dim array for this model-axis shard."""
+    K = S_or_X.shape[-1]
+    p = jax.lax.axis_index(axis_name)
+    n = jax.lax.axis_size(axis_name)
+    blk = K // n
+    return p * blk, blk
+
+
+@partial(jax.jit, static_argnames=("mode", "lam", "eps", "jitter", "axes",
+                                   "triangle", "backend", "k_shard_axis",
+                                   "reduce_dtype"))
+def cls_step(data: SVMData, w: jnp.ndarray, key: jax.Array, *,
+             mode: str = "EM", lam: float = 1.0, eps: float = 1e-6,
+             jitter: float = 1e-6, axes: Sequence[str] = (),
+             triangle: bool = True, backend: str | None = None,
+             k_shard_axis: str | None = None,
+             reduce_dtype: str | None = None):
+    """One LIN-*-CLS iteration. Returns (w_new, aux dict)."""
+    X, y, mask = data
+    gkey = key
+    if axes:  # per-shard gamma draws, shared w draw (replication invariant)
+        for ax in axes:
+            gkey = jax.random.fold_in(gkey, jax.lax.axis_index(ax))
+
+    if k_shard_axis is None:
+        margin, gamma, S, b = local_stats(
+            X, y, y, w, mode=mode, key=gkey, eps=eps, backend=backend)
+        S, b = stats.reduce_stats(S, b, axes, triangle=triangle,
+                                  reduce_dtype=reduce_dtype)
+    else:
+        # 2-D statistic: this model-shard computes only a column block of
+        # Sigma^p, psums it over data axes, then all-gathers blocks.
+        if mode == "EM":
+            margin, gamma, b = ops.fused_estep(X, y, y, w, eps=eps,
+                                               backend=backend)
+        else:
+            margin = X.astype(jnp.float32) @ w.astype(jnp.float32)
+            gamma = augment.gamma_mc(gkey, y - margin, eps)
+            b = X.astype(jnp.float32).T @ (y / gamma + y)
+        start, blk = _k_block(X, k_shard_axis)
+        Xcols = jax.lax.dynamic_slice_in_dim(X, start, blk, axis=1)
+        S_blk = (X.astype(jnp.float32) * (1.0 / gamma)[:, None]).T @ Xcols
+        S_blk = stats.preduce(S_blk, axes)          # (K, K/n) over data axes
+        b = stats.preduce(b, axes)
+        S = jax.lax.all_gather(S_blk, k_shard_axis, axis=1, tiled=True)
+
+    L, mu = stats.posterior_params(S, b, lam, jitter=jitter)
+    w_new = mu if mode == "EM" else stats.draw_weight(key, L, mu)
+
+    obj = objective.l2_reg(w_new, lam) + stats.preduce(
+        objective.hinge_obj_terms(margin, y, mask), axes)
+    n_sv = stats.preduce(jnp.sum(mask * (gamma <= 2.0 * eps)), axes)
+    return w_new, {"objective": obj,
+                   "gamma_mean": stats.masked_mean(gamma, mask, axes),
+                   "n_sv": n_sv}
+
+
+def decision_function(w: jnp.ndarray, X: jnp.ndarray) -> jnp.ndarray:
+    return X.astype(jnp.float32) @ w.astype(jnp.float32)
+
+
+def init_weight(K: int) -> jnp.ndarray:
+    return jnp.zeros((K,), jnp.float32)

@@ -1,0 +1,66 @@
+"""Objectives, decision functions and metrics for every PEMSVM task.
+
+The paper's stopping rule (Sec 5.5) monitors the regularized-risk objective
+each iteration and stops when the iterative change falls to tol*N
+(tol = 0.001). Objectives here are written over *local* shards with an
+explicit validity mask (padding rows contribute zero) and reduced with
+psum by the callers.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def hinge_obj_terms(margins: jnp.ndarray, y: jnp.ndarray,
+                    mask: jnp.ndarray) -> jnp.ndarray:
+    """sum_d 2*max(0, 1 - y_d m_d) over valid rows (paper Eq. 1 loss term)."""
+    return jnp.sum(mask * 2.0 * jnp.maximum(0.0, 1.0 - y * margins))
+
+
+def svr_obj_terms(pred: jnp.ndarray, y: jnp.ndarray, eps_ins: float,
+                  mask: jnp.ndarray) -> jnp.ndarray:
+    """sum_d 2*max(0, |y_d - f_d| - eps) (paper Eq. 20 loss term)."""
+    return jnp.sum(mask * 2.0 * jnp.maximum(0.0, jnp.abs(y - pred) - eps_ins))
+
+
+def cs_obj_terms(scores: jnp.ndarray, labels: jnp.ndarray,
+                 mask: jnp.ndarray) -> jnp.ndarray:
+    """Crammer-Singer loss sum_d 2*max_y(Delta_d(y) - Delta f_d(y)) (Eq. 30).
+
+    scores: (N, M) f_d(y); labels: (N,) int; Delta = 0/1 cost.
+    """
+    N, M = scores.shape
+    onehot = jnp.eye(M, dtype=scores.dtype)[labels]
+    delta = 1.0 - onehot
+    true_score = jnp.sum(scores * onehot, axis=1)
+    worst = jnp.max(scores + delta, axis=1)
+    return jnp.sum(mask * 2.0 * jnp.maximum(0.0, worst - true_score))
+
+
+def l2_reg(w: jnp.ndarray, lam: float) -> jnp.ndarray:
+    """0.5 * lam * ||w||_2^2 (flattens multi-class W)."""
+    return 0.5 * lam * jnp.sum(jnp.square(w))
+
+
+def kernel_reg(omega: jnp.ndarray, K_omega: jnp.ndarray, lam: float) -> jnp.ndarray:
+    """0.5 * lam * omega^T K omega (paper Eq. 15 regularizer).
+
+    Takes the precomputed K @ omega so callers can reuse the margin matvec.
+    """
+    return 0.5 * lam * jnp.dot(omega, K_omega)
+
+
+def accuracy(pred_labels: jnp.ndarray, labels: jnp.ndarray,
+             mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    ok = (pred_labels == labels).astype(jnp.float32)
+    if mask is None:
+        return jnp.mean(ok)
+    return jnp.sum(ok * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def rmse(pred: jnp.ndarray, y: jnp.ndarray,
+         mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    se = jnp.square(pred - y)
+    if mask is None:
+        return jnp.sqrt(jnp.mean(se))
+    return jnp.sqrt(jnp.sum(se * mask) / jnp.maximum(jnp.sum(mask), 1.0))

@@ -1,0 +1,48 @@
+"""LibSVM text-format IO (the paper's datasets ship in this format).
+
+The paper's MPI implementation has each process read its own partition of
+the datafile (Sec 5.6/5.7.1); ``load_libsvm`` supports that pattern via
+``rank``/``world`` striping so host h parses only every world-th line
+group. Dense output (the TPU-side layout; DESIGN.md §6.3)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def save_libsvm(path: str, X: np.ndarray, y: np.ndarray) -> None:
+    with open(path, "w") as f:
+        for row, label in zip(X, y):
+            nz = np.nonzero(row)[0]
+            feats = " ".join(f"{j + 1}:{row[j]:.6g}" for j in nz)
+            lab = int(label) if float(label).is_integer() else float(label)
+            f.write(f"{lab} {feats}\n")
+
+
+def load_libsvm(path: str, n_features: int | None = None,
+                rank: int = 0, world: int = 1):
+    """Parse a libsvm file; with world > 1, return this rank's row stripe
+    (round-robin by line index — the paper's per-process IO split)."""
+    rows, labels = [], []
+    max_j = 0
+    with open(path) as f:
+        for i, line in enumerate(f):
+            if world > 1 and (i % world) != rank:
+                continue
+            parts = line.split()
+            if not parts:
+                continue
+            labels.append(float(parts[0]))
+            feat = {}
+            for tok in parts[1:]:
+                j, v = tok.split(":")
+                j = int(j) - 1
+                feat[j] = float(v)
+                max_j = max(max_j, j)
+            rows.append(feat)
+    K = n_features if n_features is not None else max_j + 1
+    X = np.zeros((len(rows), K), np.float32)
+    for i, feat in enumerate(rows):
+        for j, v in feat.items():
+            if j < K:
+                X[i, j] = v
+    return X, np.asarray(labels, np.float32)

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+The paper (Sec 5.14) offloads the rate-limiting statistic
+Sigma_d (1/gamma_d) x_d x_d^T to a GPU kernel; this package is the
+TPU-native counterpart (see DESIGN.md §3):
+
+  * weighted_gram — X^T diag(w) X, MXU-tiled weighted SYRK.
+  * fused_estep   — margin -> gamma -> mu-numerator in one HBM pass.
+  * rbf_gram      — tiled RBF Gram blocks for the KRN formulation.
+
+``ops`` holds the backend-dispatching public wrappers; ``ref`` the pure-jnp
+oracles used as ground truth and as the CPU path.
+"""
+from . import ops, ref  # noqa: F401
+from .ops import fused_estep, rbf_gram, weighted_gram  # noqa: F401

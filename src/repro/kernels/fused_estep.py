@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: fused E-step for the generic augmented hinge.
+
+For the hinge family max(0, beta_d * (rho_d - w^T x_d)) (binary CLS is
+rho = beta = y; Crammer-Singer per-class updates supply their own rho/beta,
+paper Eq. 34-39) this computes in ONE pass over X:
+
+    margin_d = w^T x_d
+    gamma_d  = max(eps, |rho_d - margin_d|)     # EM update, paper Eq. 9/36
+    b        = sum_d (rho_d / gamma_d + beta_d) x_d   # mu numerator, Eq. 6/39
+
+and also emits the margins themselves, which the driver needs every
+iteration for the paper's objective-change stopping rule (Sec 5.5).
+
+The paper's implementation makes separate passes for gamma, for the mu
+statistic and for the objective (its GPU path only offloads Sigma); fusing
+means X moves HBM->VMEM once instead of three times — a memory-hierarchy
+optimization specific to this port (DESIGN.md §3). Grid is 1-D over
+N-blocks; each step holds a (bn, K) X tile plus the full (K, 1) weight
+vector in VMEM, emits the margin and gamma blocks, and accumulates b into a
+revisited (K, 1) fp32 output tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _make_kernel(eps: float):
+    def _kernel(x_ref, rho_ref, beta_ref, w_ref, margin_ref, gamma_ref, b_ref):
+        x = x_ref[...].astype(jnp.float32)          # (bn, K)
+        wv = w_ref[...].astype(jnp.float32)         # (K, 1)
+        rho = rho_ref[...].astype(jnp.float32)      # (bn, 1)
+        beta = beta_ref[...].astype(jnp.float32)    # (bn, 1)
+
+        margin = jax.lax.dot_general(                # (bn, 1) on the MXU
+            x, wv, dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        margin_ref[...] = margin
+        gamma = jnp.maximum(jnp.abs(rho - margin), eps)
+        gamma_ref[...] = gamma
+        coef = rho / gamma + beta                    # (bn, 1)
+
+        @pl.when(pl.program_id(0) == 0)
+        def _init():
+            b_ref[...] = jnp.zeros_like(b_ref)
+
+        b_ref[...] += jax.lax.dot_general(           # x^T coef: (K, 1)
+            x, coef, dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    return _kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("eps", "block_n", "interpret"))
+def fused_estep(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
+                wvec: jnp.ndarray, *, eps: float = 1e-6,
+                block_n: int = 1024,
+                interpret: bool = False
+                ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (margin (N,), gamma (N,), b (K,)), all f32.
+
+    X: (N, K); rho/beta: (N,); wvec: (K,). Zero-padded rows are given
+    rho=0, beta=0 so their coef is 0/gamma + 0 = 0 exactly (gamma clamps to
+    eps > 0), contributing nothing to b.
+    """
+    N, K = X.shape
+    bn = min(block_n, _round_up(N, 8))
+    Kp = _round_up(K, 128)
+    Np = _round_up(N, bn)
+    if (Np, Kp) != (N, K):
+        X = jnp.pad(X, ((0, Np - N), (0, Kp - K)))
+        rho = jnp.pad(rho, (0, Np - N))
+        beta = jnp.pad(beta, (0, Np - N))
+        wvec = jnp.pad(wvec, (0, Kp - K))
+
+    grid = (Np // bn,)
+    margin, gamma, b = pl.pallas_call(
+        _make_kernel(float(eps)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, Kp), lambda n: (n, 0)),   # X rows
+            pl.BlockSpec((bn, 1), lambda n: (n, 0)),    # rho
+            pl.BlockSpec((bn, 1), lambda n: (n, 0)),    # beta
+            pl.BlockSpec((Kp, 1), lambda n: (0, 0)),    # w (replicated)
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, 1), lambda n: (n, 0)),    # margin
+            pl.BlockSpec((bn, 1), lambda n: (n, 0)),    # gamma
+            pl.BlockSpec((Kp, 1), lambda n: (0, 0)),    # b (revisited)
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Np, 1), jnp.float32),
+            jax.ShapeDtypeStruct((Np, 1), jnp.float32),
+            jax.ShapeDtypeStruct((Kp, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(X, rho.reshape(Np, 1), beta.reshape(Np, 1), wvec.reshape(Kp, 1))
+    return margin[:N, 0], gamma[:N, 0], b[:K, 0]
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,65 @@
+"""Backend-dispatching wrappers around the Pallas kernels.
+
+Every op exists in three flavors:
+  * ``ref``       — pure jnp oracle (ref.py); default on CPU hosts.
+  * ``interpret`` — Pallas kernel executed by the interpreter (CPU
+                    correctness validation of the real kernel body).
+  * ``pallas``    — compiled Pallas TPU kernel; default on TPU.
+
+``backend=None`` picks by ``jax.default_backend()``. The SVM solvers thread
+a backend choice through so the same code serves tests (interpret), CPU
+benchmarks (ref → XLA) and TPU production (pallas).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import fused_estep as _fused_estep
+from . import rbf_gram as _rbf_gram
+from . import ref
+from . import weighted_gram as _weighted_gram
+
+VALID_BACKENDS = ("ref", "interpret", "pallas")
+
+
+def default_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _resolve(backend: str | None) -> str:
+    backend = backend or default_backend()
+    if backend not in VALID_BACKENDS:
+        raise ValueError(f"backend must be one of {VALID_BACKENDS}, got {backend!r}")
+    return backend
+
+
+def weighted_gram(X: jnp.ndarray, w: jnp.ndarray, *,
+                  backend: str | None = None, **kw) -> jnp.ndarray:
+    """S = X^T diag(w) X, (K, K) f32."""
+    backend = _resolve(backend)
+    if backend == "ref":
+        return ref.weighted_gram(X, w)
+    return _weighted_gram.weighted_gram(
+        X, w, interpret=(backend == "interpret"), **kw)
+
+
+def fused_estep(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
+                wvec: jnp.ndarray, *, eps: float = 1e-6,
+                backend: str | None = None, **kw):
+    """(gamma, b): EM gamma update fused with the mu-numerator statistic."""
+    backend = _resolve(backend)
+    if backend == "ref":
+        return ref.fused_estep(X, rho, beta, wvec, eps)
+    return _fused_estep.fused_estep(
+        X, rho, beta, wvec, eps=eps, interpret=(backend == "interpret"), **kw)
+
+
+def rbf_gram(X1: jnp.ndarray, X2: jnp.ndarray, *, sigma: float = 1.0,
+             backend: str | None = None, **kw) -> jnp.ndarray:
+    """RBF Gram matrix (N1, N2) f32."""
+    backend = _resolve(backend)
+    if backend == "ref":
+        return ref.rbf_gram(X1, X2, sigma)
+    return _rbf_gram.rbf_gram(
+        X1, X2, sigma=float(sigma), interpret=(backend == "interpret"), **kw)

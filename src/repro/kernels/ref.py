@@ -1,0 +1,68 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the ground truth used by tests (assert_allclose vs interpret-mode
+Pallas) and the default CPU execution path of ``ops.py``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def weighted_gram(X: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """S = X^T diag(w) X  == sum_d w_d x_d x_d^T.
+
+    The paper's rate-limiting statistic (its Table-9 GPU kernel).
+
+    Args:
+      X: (N, K) design matrix.
+      w: (N,) per-datum weights (1/gamma_d in the paper).
+
+    Returns:
+      (K, K) float32 matrix.
+    """
+    Xf = X.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    return (Xf * wf[:, None]).T @ Xf
+
+
+def fused_estep(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
+                wvec: jnp.ndarray, eps: float
+                ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused E-step for the generic hinge max(0, beta*(rho - w^T x)).
+
+    Computes, in one logical pass over X:
+      margin_d = w^T x_d
+      gamma_d  = max(eps, |rho_d - margin_d|)          (paper Eq. 9 / 36 + 5.7.3 clamp)
+      b        = sum_d (rho_d/gamma_d + beta_d) x_d    (paper Eq. 6 / 39 numerator)
+
+    Binary CLS is the special case rho = beta = y in {+1,-1}:
+      gamma = |1 - y w^T x|, b = sum y(1+1/gamma) x.
+
+    Returns:
+      (margin (N,), gamma (N,), b (K,)), all float32.
+    """
+    Xf = X.astype(jnp.float32)
+    wf = wvec.astype(jnp.float32)
+    margin = Xf @ wf
+    gamma = jnp.maximum(jnp.abs(rho.astype(jnp.float32) - margin), eps)
+    coef = rho.astype(jnp.float32) / gamma + beta.astype(jnp.float32)
+    b = Xf.T @ coef
+    return margin, gamma, b
+
+
+def rbf_gram(X1: jnp.ndarray, X2: jnp.ndarray, sigma: float) -> jnp.ndarray:
+    """RBF Gram block: K_ij = exp(-||x_i - x_j||^2 / (2 sigma^2)).
+
+    Args:
+      X1: (N1, K), X2: (N2, K).
+
+    Returns:
+      (N1, N2) float32.
+    """
+    X1f = X1.astype(jnp.float32)
+    X2f = X2.astype(jnp.float32)
+    sq1 = jnp.sum(X1f * X1f, axis=-1, keepdims=True)
+    sq2 = jnp.sum(X2f * X2f, axis=-1, keepdims=True)
+    d2 = sq1 - 2.0 * (X1f @ X2f.T) + sq2.T
+    d2 = jnp.maximum(d2, 0.0)
+    return jnp.exp(-d2 / (2.0 * sigma * sigma))

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel for the paper's rate-limiting statistic.
+
+    S = X^T diag(w) X  =  sum_d w_d x_d x_d^T          (paper Sec 5.14, Table 9)
+
+The paper computes this with an OpenCL kernel that partitions data rows
+across GPU compute-unit local memories and reduces through global memory.
+TPU adaptation (DESIGN.md §3): re-express as a weighted SYRK and tile for
+the MXU. Grid is (K/bk1, K/bk2, N/bn) with the N dimension innermost so the
+(bk1, bk2) fp32 output tile stays resident in VMEM and is accumulated across
+N-steps — replacing the GPU's two-pass global-memory reduction with a
+single-pass revisited-output accumulation.
+
+Block sizes default to MXU/VPU-aligned multiples of (8, 128). VMEM use per
+step = bn*bk1 + bn*bk2 (inputs, input dtype) + bk1*bk2 (fp32 accumulator);
+defaults (bn=512, bk=256) stay well under ~4 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_lhs_ref, w_ref, x_rhs_ref, out_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    xl = x_lhs_ref[...].astype(jnp.float32) * w_ref[...].astype(jnp.float32)
+    xr = x_rhs_ref[...].astype(jnp.float32)
+    # (bk1, bn) @ (bn, bk2) on the MXU, fp32 accumulation.
+    out_ref[...] += jax.lax.dot_general(
+        xl, xr, dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_k", "interpret"))
+def weighted_gram(X: jnp.ndarray, w: jnp.ndarray, *,
+                  block_n: int = 512, block_k: int = 256,
+                  interpret: bool = False) -> jnp.ndarray:
+    """S = X^T diag(w) X via Pallas. X: (N, K); w: (N,). Returns (K, K) f32.
+
+    Inputs are zero-padded to block multiples (zero weight rows are exact
+    no-ops for the sum) and the result is sliced back.
+    """
+    N, K = X.shape
+    bn = min(block_n, _round_up(N, 8))
+    bk = min(block_k, _round_up(K, 128))
+    Np, Kp = _round_up(N, bn), _round_up(K, bk)
+    if (Np, Kp) != (N, K):
+        X = jnp.pad(X, ((0, Np - N), (0, Kp - K)))
+        w = jnp.pad(w, (0, Np - N))
+    w2 = w.reshape(Np, 1)
+
+    grid = (Kp // bk, Kp // bk, Np // bn)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bk), lambda i, j, n: (n, i)),   # X tile for lhs
+            pl.BlockSpec((bn, 1), lambda i, j, n: (n, 0)),    # weights
+            pl.BlockSpec((bn, bk), lambda i, j, n: (n, j)),   # X tile for rhs
+        ],
+        out_specs=pl.BlockSpec((bk, bk), lambda i, j, n: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Kp, Kp), jnp.float32),
+        interpret=interpret,
+    )(X, w2, X)
+    return out[:K, :K]
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,349 @@
+"""Exact cost analysis over optimized HLO text, with loop trip counts.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop *body once*,
+which under-counts scanned-layer models by orders of magnitude. The
+optimized HLO carries ``backend_config={"known_trip_count":{"n":...}}`` on
+every loop XLA could bound (all lax.scan loops qualify), so this module
+re-derives, per device (the module is the per-partition SPMD program):
+
+  * flops             — dot: 2 * |result| * |contracting|; elementwise: |result|
+  * hbm_bytes         — operand+result bytes at fusion granularity
+                        (inside-fusion intermediates are free; dynamic
+                        slice/update/gather touch only the moved slice)
+  * collective_bytes  — operand payload per collective kind
+
+each multiplied through nested while-loop trip counts. ``conditional``
+branches count at max() (mutually exclusive at runtime).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {"pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2,
+                "u16": 2, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,
+                "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+                "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\](?:\{[^}]*\})?")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_PARAM_RE = re.compile(r"%?([\w\.\-]+)\s*:\s*((?:\([^)]*\)|[\w\[\]\{\},]+))")
+
+
+def _parse_inst_line(s: str):
+    """'[ROOT] %name = <type> opcode(<rest>' -> (name, type, op, rest) or
+    None. Handles tuple types with nested parens and /*index=N*/ comments."""
+    if s.startswith("ROOT "):
+        s = s[5:]
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[:eq].strip().lstrip("%")
+    if not re.fullmatch(r"[\w\.\-]+", name):
+        return None
+    rhs = s[eq + 3:].lstrip()
+    # result type: balanced parens for tuples, else token up to space
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        type_str, rest = rhs[:i + 1], rhs[i + 1:].lstrip()
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return None
+        type_str, rest = rhs[:sp], rhs[sp + 1:].lstrip()
+    om = re.match(r"([\w\-]+)\(", rest)
+    if not om:
+        return None
+    return name, type_str, om.group(1), rest[om.end():]
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "logistic", "rsqrt", "sqrt", "cbrt", "negate", "abs", "sign", "floor",
+    "ceil", "round-nearest-afz", "round-nearest-even", "remainder", "atan2",
+    "cosine", "sine", "tan", "erf", "compare", "select", "clamp", "and",
+    "or", "xor", "not", "shift-left", "shift-right-arithmetic",
+    "shift-right-logical", "convert", "is-finite", "stochastic-convert",
+}
+_MOVEMENT = {"copy", "transpose", "concatenate", "pad", "slice", "reverse",
+             "broadcast"}
+_FREE = {"bitcast", "reshape", "tuple", "get-tuple-element", "parameter",
+         "constant", "iota", "after-all", "partition-id", "replica-id",
+         "copy-start", "copy-done", "domain", "opt-barrier",
+         "get-dimension-size"}
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast")
+
+
+def _shapes_of(type_str: str):
+    """[(dtype, elems, bytes)] for every array shape in a type string."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            out.append((dt, n, n * _DTYPE_BYTES[dt]))
+    return out
+
+
+def _dims_of(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(x) for x in m.group(2).split(",") if x]
+
+
+def _total_bytes(type_str: str) -> float:
+    return float(sum(b for _, _, b in _shapes_of(type_str)))
+
+
+def _total_elems(type_str: str) -> float:
+    return float(sum(e for _, e, _ in _shapes_of(type_str)))
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    coll_ops: float = 0.0
+
+    def add(self, o: "Cost"):
+        self.flops += o.flops
+        self.hbm_bytes += o.hbm_bytes
+        self.coll_bytes += o.coll_bytes
+        self.coll_ops += o.coll_ops
+        for k, v in o.coll_by_kind.items():
+            self.coll_by_kind[k] += v
+
+    def scaled(self, f: float) -> "Cost":
+        return Cost(self.flops * f, self.hbm_bytes * f, self.coll_bytes * f,
+                    defaultdict(float, {k: v * f for k, v in
+                                        self.coll_by_kind.items()}),
+                    self.coll_ops * f)
+
+
+@dataclasses.dataclass
+class Inst:
+    name: str
+    type_str: str
+    op: str
+    rest: str       # everything after the opening paren of operands
+    operands: list  # operand names
+
+
+def _split_operands(arg_str: str) -> list[str]:
+    """Operand names from 'a, %b.2, f32[2]{0} %c, ...)...' up to the
+    matching close paren (depth-aware)."""
+    names, depth, cur = [], 0, []
+    for ch in arg_str:
+        if ch == "(":
+            depth += 1
+            cur.append(ch)
+        elif ch == ")":
+            if depth == 0:
+                break
+            depth -= 1
+            cur.append(ch)
+        elif ch == "," and depth == 0:
+            names.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        names.append("".join(cur).strip())
+    out = []
+    for n in names:
+        m = re.search(r"%?([\w\.\-]+)$", n.strip())
+        if m:
+            out.append(m.group(1))
+    return out
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: dict[str, list[Inst]] = {}
+        self.types: dict[str, str] = {}   # instruction/param name -> type
+        self.entry = None
+        self._parse(text)
+        self._cache: dict[str, Cost] = {}
+
+    def _parse(self, text: str):
+        cur = None
+        for raw in text.splitlines():
+            s = raw.strip()
+            if not s or s.startswith("//"):
+                continue
+            is_inst = re.match(r"(?:ROOT\s+)?%?[\w\.\-]+\s*=", s)
+            if s.endswith("{") and ("->" in s) and not is_inst:
+                header = s[:-1]
+                m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->",
+                             header)
+                if not m:
+                    continue
+                cur = m.group(1)
+                self.computations[cur] = []
+                if s.startswith("ENTRY"):
+                    self.entry = cur
+                for pname, ptype in _PARAM_RE.findall(m.group(2)):
+                    self.types[pname] = ptype
+                continue
+            if s.startswith("}"):
+                cur = None
+                continue
+            if cur is None or "=" not in s:
+                continue
+            parsed = _parse_inst_line(s)
+            if parsed is None:
+                continue
+            name, type_str, op, rest = parsed
+            self.types[name] = type_str
+            self.computations[cur].append(
+                Inst(name, type_str, op, rest, _split_operands(rest)))
+
+    # ------------------------------------------------------------- costing
+    def cost_of(self, comp: str) -> Cost:
+        comp = comp.lstrip("%")
+        if comp in self._cache:
+            return self._cache[comp]
+        total = Cost()
+        self._cache[comp] = total
+        for inst in self.computations.get(comp, []):
+            total.add(self._inst_cost(inst))
+        return total
+
+    def entry_cost(self) -> Cost:
+        return self.cost_of(self.entry)
+
+    def _operand_bytes(self, inst: Inst) -> float:
+        return sum(_total_bytes(self.types.get(o, "")) for o in inst.operands)
+
+    def _inst_cost(self, inst: Inst) -> Cost:
+        op, rest = inst.op, inst.rest
+        res_bytes = _total_bytes(inst.type_str)
+        res_elems = _total_elems(inst.type_str)
+
+        if op == "while":
+            trips = 1
+            tm = _TRIP_RE.search(rest)
+            if tm:
+                trips = int(tm.group(1))
+            inner = Cost()
+            bm = re.search(r"body=%?([\w\.\-]+)", rest)
+            cm = re.search(r"condition=%?([\w\.\-]+)", rest)
+            if bm:
+                inner.add(self.cost_of(bm.group(1)))
+            if cm:
+                inner.add(self.cost_of(cm.group(1)))
+            return inner.scaled(trips)
+
+        if op == "conditional":
+            branches = []
+            bm = re.search(r"branch_computations=\{([^}]*)\}", rest)
+            if bm:
+                branches = [b.strip() for b in bm.group(1).split(",")]
+            else:
+                for key in ("true_computation", "false_computation"):
+                    m = re.search(key + r"=%?([\w\.\-]+)", rest)
+                    if m:
+                        branches.append(m.group(1))
+            costs = [self.cost_of(b) for b in branches]
+            if not costs:
+                return Cost()
+            return max(costs, key=lambda c: c.flops + c.hbm_bytes)
+
+        if op in ("call", "map", "async-start"):
+            cm = re.search(r"(?:to_apply|called_computation|calls)="
+                           r"%?([\w\.\-]+)", rest)
+            return self.cost_of(cm.group(1)) if cm else Cost()
+
+        if op == "fusion":
+            cm = re.search(r"calls=%?([\w\.\-]+)", rest)
+            inner = self.cost_of(cm.group(1)) if cm else Cost()
+            return Cost(inner.flops,
+                        res_bytes + self._operand_bytes(inst),
+                        inner.coll_bytes, inner.coll_by_kind, inner.coll_ops)
+
+        base = op[:-6] if op.endswith("-start") else op
+        if base in _COLL_KINDS:
+            if op.endswith("-done"):
+                return Cost()
+            payload = self._operand_bytes(inst)
+            return Cost(0.0, payload + res_bytes, payload,
+                        defaultdict(float, {base: payload}), 1.0)
+
+        if op == "dot":
+            contract = 1
+            cd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rest)
+            if cd and inst.operands:
+                lhs_dims = _dims_of(self.types.get(inst.operands[0], ""))
+                for i in (int(x) for x in cd.group(1).split(",") if x):
+                    if i < len(lhs_dims):
+                        contract *= lhs_dims[i]
+            return Cost(2.0 * res_elems * contract,
+                        res_bytes + self._operand_bytes(inst))
+
+        if op == "convolution":
+            k_elems = (_total_elems(self.types.get(inst.operands[1], ""))
+                       if len(inst.operands) > 1 else 1.0)
+            out_ch = max(1.0, _dims_of(inst.type_str)[-1]
+                         if _dims_of(inst.type_str) else 1.0)
+            return Cost(2.0 * res_elems * max(1.0, k_elems / out_ch),
+                        res_bytes + self._operand_bytes(inst))
+
+        if op == "reduce":
+            return Cost(sum(_total_elems(self.types.get(o, ""))
+                            for o in inst.operands[: len(inst.operands) // 2]),
+                        res_bytes + self._operand_bytes(inst))
+
+        if op == "dynamic-slice":
+            return Cost(0.0, 2.0 * res_bytes)
+        if op == "dynamic-update-slice":
+            upd = (_total_bytes(self.types.get(inst.operands[1], ""))
+                   if len(inst.operands) > 1 else res_bytes)
+            return Cost(0.0, 2.0 * upd)
+        if op == "gather":
+            return Cost(0.0, 2.0 * res_bytes)
+        if op == "scatter":
+            upd = (_total_bytes(self.types.get(inst.operands[-1], ""))
+                   if inst.operands else res_bytes)
+            return Cost(res_elems, 2.0 * upd)
+        if op in ("rng", "rng-bit-generator"):
+            return Cost(res_elems, res_bytes)
+        if op == "custom-call":
+            # cholesky/topk/etc: count boundary bytes, no flops estimate
+            return Cost(0.0, res_bytes + self._operand_bytes(inst))
+        if op in ("reduce-window", "select-and-scatter"):
+            return Cost(res_elems * 8.0, res_bytes + self._operand_bytes(inst))
+
+        if op in _ELEMENTWISE:
+            return Cost(res_elems, res_bytes + self._operand_bytes(inst))
+        if op in _MOVEMENT:
+            return Cost(0.0, res_bytes + self._operand_bytes(inst))
+        if op in _FREE:
+            return Cost()
+        return Cost(0.0, res_bytes + self._operand_bytes(inst))
+
+
+def analyze(hlo_text: str) -> dict:
+    mod = HloModule(hlo_text)
+    c = mod.entry_cost()
+    return {
+        "flops": c.flops,
+        "hbm_bytes": c.hbm_bytes,
+        "collective_bytes": c.coll_bytes,
+        "collective_ops": c.coll_ops,
+        "collectives_by_kind": dict(c.coll_by_kind),
+    }

@@ -1,0 +1,130 @@
+"""ShapeDtypeStruct input stand-ins + sharding specs for every
+(architecture x input-shape) dry-run cell.
+
+``input_specs`` follows the assignment contract: weak-type-correct,
+shardable, no device allocation. Modality frontends are stubs — the VLM
+cell feeds precomputed patch embeddings (+ 3-stream M-RoPE position ids),
+the audio cell feeds precomputed conv-frontend frame embeddings."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ModelConfig, ShapeConfig
+from repro.models import build_model
+from repro.sharding import ShardingCtx, param_specs
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+# ------------------------------------------------------------------ batches
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, ctx: ShardingCtx,
+                *, with_labels: bool):
+    """(spec_tree, sharding_tree) for the host batch of one step."""
+    B, S = shape.global_batch, shape.seq_len
+    dp = ctx.dp_axes
+    specs: dict[str, Any] = {}
+    shards: dict[str, Any] = {}
+    if cfg.family == "vlm":
+        specs["embeds"] = sds((B, S, cfg.d_model), cfg.dtype)
+        shards["embeds"] = ctx.spec((B, S, cfg.d_model), dp, None, None)
+        specs["positions"] = sds((3, B, S), jnp.int32)
+        shards["positions"] = ctx.spec((3, B, S), None, dp, None)
+    else:
+        specs["tokens"] = sds((B, S), jnp.int32)
+        shards["tokens"] = ctx.spec((B, S), dp, None)
+    if cfg.enc_dec:
+        specs["frames"] = sds((B, cfg.enc_seq, cfg.d_model), cfg.dtype)
+        shards["frames"] = ctx.spec((B, cfg.enc_seq, cfg.d_model),
+                                    dp, None, None)
+    if with_labels:
+        specs["labels"] = sds((B, S), jnp.int32)
+        shards["labels"] = ctx.spec((B, S), dp, None)
+    return specs, shards
+
+
+# ------------------------------------------------------------------- caches
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, ctx: ShardingCtx):
+    """(spec_tree, sharding_tree) for the KV/state caches of decode cells.
+
+    long-context (batch too small to shard): the cache *sequence* dim goes
+    over 'data' (context parallelism); recurrent state dims go over
+    'model' where divisible."""
+    B, S = shape.global_batch, shape.seq_len
+    model = build_model(cfg)
+    specs = jax.eval_shape(
+        lambda: model.init_cache(B, S, jnp.dtype(cfg.dtype)))
+    dp, tp = ctx.dp_axes, ctx.tp_axis
+    long_ctx = B % ctx.axis_size(dp) != 0   # e.g. long_500k: B=1
+
+    def leaf_spec(x):
+        # Layout (EXPERIMENTS.md §Dry-run): batch over DP, cache SEQUENCE
+        # over 'model' (context-parallel decode; matches the shard_map
+        # decode island in models/attention.py). Inner-dim (head_dim)
+        # sharding is deliberately avoided — GSPMD answers it with a
+        # full-cache regather around the dynamic update. The leading
+        # stacked-periods dim is NEVER sharded: the layer scan slices it
+        # every iteration and a sharded slice dim becomes a per-layer
+        # gather. long_500k (batch 1) spreads S over (data x model).
+        sh = x.shape
+        wanted = []
+        used_dp = used_tp = False
+        for i, d in enumerate(sh):
+            if i == 0:                      # stacked periods
+                wanted.append(None)
+            elif d == S and long_ctx:
+                both = (ctx.fsdp_axis, tp)
+                if d % ctx.axis_size(both) == 0:
+                    wanted.append(both)
+                else:
+                    wanted.append(tp)
+                used_tp = True
+            elif d == S and not used_tp and d % ctx.axis_size(tp) == 0:
+                wanted.append(tp)
+                used_tp = True
+            elif not used_dp and d == B and d % ctx.axis_size(dp) == 0:
+                wanted.append(dp)
+                used_dp = True
+            elif (not used_tp and d != S and d >= 64
+                    and d % ctx.axis_size(tp) == 0):
+                # recurrent-state leaves (no seq dim): inner dim over tp
+                wanted.append(tp)
+                used_tp = True
+            else:
+                wanted.append(None)
+        return ctx.spec(sh, *wanted)
+
+    shards = jax.tree.map(leaf_spec, specs)
+    return specs, shards
+
+
+# ------------------------------------------------------------------- params
+def param_struct_specs(cfg: ModelConfig, ctx: ShardingCtx, *,
+                       dtype=None):
+    """(param ShapeDtypeStruct tree, sharding spec tree). ``dtype``
+    overrides storage dtype (serve cells hold bf16 params)."""
+    model = build_model(cfg)
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    if dtype is not None:
+        shapes = jax.tree.map(
+            lambda x: sds(x.shape, dtype) if jnp.issubdtype(
+                x.dtype, jnp.floating) else x, shapes)
+    return shapes, param_specs(ctx, shapes)
+
+
+def opt_state_specs(pstructs, pspecs):
+    """Optimizer state mirrors parameters (ZeRO sharding)."""
+    return ({"m": pstructs, "v": pstructs, "step": sds((), jnp.int32)},
+            {"m": pspecs, "v": pspecs, "step": P()})
+
+
+def make_ctx(mesh, shape: ShapeConfig | None = None) -> ShardingCtx:
+    multi = "pod" in mesh.axis_names
+    dp = ("pod", "data") if multi else ("data",)
+    return ShardingCtx(mesh=mesh, dp_axes=dp, tp_axis="model",
+                       fsdp_axis="data")

@@ -1,0 +1,94 @@
+"""Dry-run cell builder for the paper's own workload: one PEMSVM
+iteration (the Fig.-1 map-reduce) at paper scale on the production mesh.
+
+These cells are *additional* to the 40 assigned (arch x shape) cells —
+they are the "most representative of the paper's technique" hillclimb
+target in EXPERIMENTS.md §Perf. Shapes follow paper Table 3:
+
+  svm_dna      N=25.6M  K=800   CLS   (dna: 25M x 800)
+  svm_alpha    N=262144 K=500   CLS   (alpha: 250k x 500)
+  svm_mnist8m  N=4.19M  K=784   MLT10 (mnist8m: 4M x 798 [784+pad])
+  svm_year     N=262144 K=96    SVR   (year: 250k x 90 [+pad])
+
+Options (--opt): mode=EM|MC, triangle=0|1, reduce_dtype=bfloat16,
+k_shard=1 (2-D Sigma statistic over the model axis), dtype=bfloat16
+(input compression), backend (kernels backend for the statistics).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import distributed, linear, multiclass, svr
+from repro.core.linear import SVMData
+
+SVM_SHAPES = {
+    "svm_dna": dict(N=25_600_000, K=800, task="CLS"),
+    "svm_alpha": dict(N=262_144, K=500, task="CLS"),
+    "svm_mnist8m": dict(N=4_194_304, K=784, task="MLT", M=10),
+    "svm_year": dict(N=262_144, K=96, task="SVR"),
+}
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def build_svm_cell(arch: str, shape_name: str, mesh, opts: dict):
+    spec = SVM_SHAPES[shape_name]
+    N, K, task = spec["N"], spec["K"], spec["task"]
+    M = spec.get("M", 2)
+    mode = opts.get("mode", "MC" if task == "MLT" else "EM")  # paper's picks
+    dtype = opts.get("dtype", "float32")
+    k_shard = bool(int(opts.get("k_shard", 0)))
+
+    if k_shard:
+        data_axes = tuple(a for a in mesh.axis_names if a != "model")
+        k_shard_axis = "model"
+    else:
+        data_axes = tuple(mesh.axis_names)
+        k_shard_axis = None
+    shards = distributed.num_shards(mesh, data_axes)
+    assert N % shards == 0, (N, shards)
+
+    common = dict(mode=mode, lam=float(opts.get("lam", 1.0)), eps=1e-6,
+                  jitter=1e-7, axes=data_axes,
+                  triangle=bool(int(opts.get("triangle", 1))),
+                  backend=None,
+                  reduce_dtype=opts.get("reduce_dtype"))
+
+    if task == "CLS":
+        def step(data, state, key):
+            return linear.cls_step(data, state, key,
+                                   k_shard_axis=k_shard_axis, **common)
+        state_struct = sds((K,), jnp.float32)
+        state_spec = P(None)
+        tdtype = jnp.float32
+    elif task == "SVR":
+        def step(data, state, key):
+            return svr.svr_step(data, state, key, eps_ins=1e-3, **common)
+        state_struct = sds((K,), jnp.float32)
+        state_spec = P(None)
+        tdtype = jnp.float32
+    else:
+        def step(data, state, key):
+            return multiclass.mlt_step(data, state, key, num_classes=M,
+                                       **common)
+        state_struct = sds((M, K), jnp.float32)
+        state_spec = P(None, None)
+        tdtype = jnp.int32
+
+    jitted = distributed.shard_wrap(mesh, data_axes, step,
+                                    state_spec=state_spec)
+
+    row = P(data_axes)
+    data_structs = SVMData(X=sds((N, K), dtype), target=sds((N,), tdtype),
+                           mask=sds((N,), jnp.float32))
+    data_sh = SVMData(X=NamedSharding(mesh, P(data_axes, None)),
+                      target=NamedSharding(mesh, row),
+                      mask=NamedSharding(mesh, row))
+    key_struct = sds((2,), jnp.uint32)
+    return (jitted, (data_structs, state_struct, key_struct),
+            (data_sh, NamedSharding(mesh, state_spec),
+             NamedSharding(mesh, P(None))))

@@ -1,0 +1,128 @@
+"""Run the full dry-run sweep: every (arch x shape) cell on both meshes,
+plus the paper's PEMSVM cells. Each cell runs in a fresh subprocess (the
+host-device-count XLA flag locks at first jax init) and is cached by its
+output JSON, so the sweep is resumable.
+
+    PYTHONPATH=src python -m repro.launch.sweep [--out runs/dryrun]
+        [--force] [--only yi-34b,...] [--single-pod-only]
+
+Baseline option policy (recorded in each JSON):
+  * train cells of >10B-param archs: microbatches=4 (activation memory;
+    see EXPERIMENTS.md §Dry-run) — part of the baseline config, chosen
+    before any hillclimbing.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.launch.svm_cell import SVM_SHAPES
+
+
+def baseline_opts(arch: str, shape_name: str) -> list[str]:
+    if arch.startswith("pemsvm"):
+        return []
+    opts = []
+    if SHAPES[shape_name].kind == "train":
+        # 1M tokens global batch: gradient accumulation is part of the
+        # baseline config (activation memory; DESIGN.md §4). The two
+        # biggest-activation archs accumulate 8 microbatches.
+        mb = 8 if arch in ("jamba-v0.1-52b", "deepseek-v2-236b") else 4
+        opts.append(f"microbatches={mb}")
+    return opts
+
+
+def cell_path(out: str, arch: str, shape: str, multi: bool,
+              opts: list[str]) -> str:
+    tag = "multi" if multi else "single"
+    suffix = ("_" + "_".join(o.replace("=", "-") for o in sorted(opts))
+              if opts else "")
+    return os.path.join(out, f"{arch}_{shape}_{tag}{suffix}.json")
+
+
+def run_one(arch: str, shape: str, multi: bool, out: str,
+            opts: list[str], timeout: int = 1800) -> dict:
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", out]
+    if multi:
+        cmd.append("--multi-pod")
+    for o in opts:
+        cmd += ["--opt", o]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.abspath("src"), env.get("PYTHONPATH", "")])
+    t0 = time.time()
+    p = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                       timeout=timeout)
+    path = cell_path(out, arch, shape, multi, opts)
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {"arch": arch, "shape": shape, "ok": False,
+            "error": (p.stderr or p.stdout)[-1500:],
+            "total_s": round(time.time() - t0, 1)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="runs/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--only", default="")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--skip-svm", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cells: list[tuple[str, str]] = []
+    for arch in list_archs():
+        for shape in SHAPES:
+            cells.append((arch, shape))
+    if not args.skip_svm:
+        for shape in SVM_SHAPES:
+            cells.append(("pemsvm", shape))
+    if args.only:
+        keep = set(args.only.split(","))
+        cells = [(a, s) for a, s in cells if a in keep or s in keep]
+
+    meshes = [False] if args.single_pod_only else [False, True]
+    total = ok = skipped = failed = 0
+    t_start = time.time()
+    for arch, shape in cells:
+        for multi in meshes:
+            opts = baseline_opts(arch, shape)
+            path = cell_path(args.out, arch, shape, multi, opts)
+            total += 1
+            if os.path.exists(path) and not args.force:
+                with open(path) as f:
+                    rec = json.load(f)
+            else:
+                rec = run_one(arch, shape, multi, args.out, opts)
+            tag = "multi" if multi else "single"
+            if rec.get("skipped"):
+                skipped += 1
+                print(f"[{total:3d}] SKIP {arch} {shape} {tag}: "
+                      f"{rec['reason'][:60]}", flush=True)
+            elif rec.get("ok"):
+                ok += 1
+                fits = rec["memory"]["fits_16gb_hbm"]
+                print(f"[{total:3d}] OK   {arch} {shape} {tag} "
+                      f"compile={rec.get('compile_s', '?')}s "
+                      f"dominant={rec['terms']['dominant']} "
+                      f"fits={'Y' if fits else 'N'} "
+                      f"ratio={rec['useful_flops_ratio']:.3f}", flush=True)
+            else:
+                failed += 1
+                print(f"[{total:3d}] FAIL {arch} {shape} {tag}: "
+                      f"{rec.get('error', '')[:120]}", flush=True)
+    print(f"\nsweep: {ok} ok, {skipped} skipped, {failed} failed "
+          f"of {total} in {(time.time() - t_start) / 60:.1f} min")
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model zoo: every assigned architecture behind one facade."""
+from .model import Model, build_model  # noqa: F401

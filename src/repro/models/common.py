@@ -1,0 +1,43 @@
+"""Shared model building blocks: norms, initializers, dtype policy."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compute_dtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mean) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def dense_init(key, in_dim: int, out_dim: int, *, scale: float = 1.0,
+               dtype=jnp.float32) -> jnp.ndarray:
+    """Truncated-normal fan-in init (LLM standard)."""
+    std = scale / (in_dim ** 0.5)
+    return (std * jax.random.truncated_normal(
+        key, -2.0, 2.0, (in_dim, out_dim))).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32) -> jnp.ndarray:
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (vocab, dim))
+            * 0.02).astype(dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))

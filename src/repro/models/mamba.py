@@ -1,0 +1,149 @@
+"""Mamba (S6 selective SSM) block for the Jamba hybrid.
+
+Recurrence (per channel c, state n):
+    h_t = exp(dt_t * A) * h_{t-1} + (dt_t * B_t) * x_t
+    y_t = C_t . h_t + D * x_t
+with input-dependent dt (softplus), B, C. Training/prefill runs a
+*chunked* scan: an outer lax.scan carries the (B, d_inner, d_state)
+boundary state across chunks while an associative_scan parallelizes
+within each chunk (log-depth, MXU/VPU-friendly); the chunk body is
+jax.checkpoint'd so the backward pass recomputes in-chunk states instead
+of storing (B, S, d_inner, d_state) — the same recompute trade the CUDA
+kernel makes, expressed at the XLA level (DESIGN.md §3).
+
+Decode is O(1): one state update per token (this is why the hybrid runs
+the long_500k cell).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, split_keys
+
+
+def init_mamba(key, cfg):
+    D, di = cfg.d_model, cfg.d_inner
+    ds, dc, dtr = cfg.mamba_d_state, cfg.mamba_d_conv, cfg.dt_rank
+    ks = split_keys(key, 6)
+    # S4D-real initialization for A; dt bias init for softplus range.
+    a_init = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], D, 2 * di),           # -> [x, z]
+        "conv_w": 0.1 * jax.random.normal(ks[1], (di, dc)),
+        "conv_bias": jnp.zeros((di,)),
+        "x_proj": dense_init(ks[2], di, dtr + 2 * ds),     # -> [dt, B, C]
+        "dt_proj": dense_init(ks[3], dtr, di),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.clip(jnp.exp(jax.random.uniform(
+                ks[4], (di,)) * (jnp.log(0.1) - jnp.log(1e-3))
+                + jnp.log(1e-3)), 1e-4, None))),
+        "a_log": jnp.log(a_init),                          # (di, ds)
+        "d_skip": jnp.ones((di,)),
+        "out_proj": dense_init(ks[5], di, D,
+                               scale=1.0 / (2 * cfg.n_layers) ** 0.5),
+    }
+
+
+def _ssm_params(cfg, p, xc):
+    """xc: (B, S, di) post-conv activations -> dt, Bmat, Cmat."""
+    ds, dtr = cfg.mamba_d_state, cfg.dt_rank
+    proj = xc @ p["x_proj"].astype(xc.dtype)
+    dt, Bm, Cm = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"].astype(xc.dtype)
+                         + p["dt_bias"].astype(xc.dtype))   # (B,S,di)
+    return dt.astype(jnp.float32), Bm.astype(jnp.float32), \
+        Cm.astype(jnp.float32)
+
+
+def _scan_chunk(A, dt, Bm, Cm, xc, h0):
+    """Associative scan within one chunk.
+
+    A: (di, ds); dt: (B, C, di); Bm/Cm: (B, C, ds); xc: (B, C, di);
+    h0: (B, di, ds). Returns (y (B, C, di) f32, h_last)."""
+    dA = jnp.exp(dt[..., None] * (-A))                     # (B,C,di,ds)
+    dBx = (dt * xc)[..., None] * Bm[:, :, None, :]         # (B,C,di,ds)
+
+    def combine(a, b):
+        # composition of affine maps h -> A h + b
+        return a[0] * b[0], b[0] * a[1] + b[1]
+
+    Acum, bcum = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    h = Acum * h0[:, None] + bcum                          # (B,C,di,ds)
+    y = jnp.einsum("bcds,bcs->bcd", h, Cm)
+    return y, h[:, -1]
+
+
+def mamba_seq(cfg, p, x, *, chunk: int = 256, remat: bool = True):
+    """Full-sequence pass. x: (B, S, D) -> (B, S, D)."""
+    B, S, D = x.shape
+    di, dc = cfg.d_inner, cfg.mamba_d_conv
+    xz = x @ p["in_proj"].astype(x.dtype)
+    xs, z = jnp.split(xz, 2, axis=-1)                      # (B,S,di) each
+    # causal depthwise conv along S
+    xpad = jnp.pad(xs, ((0, 0), (dc - 1, 0), (0, 0)))
+    xc = sum(xpad[:, i:i + S, :] * p["conv_w"][:, i].astype(x.dtype)
+             for i in range(dc))
+    xc = jax.nn.silu(xc + p["conv_bias"].astype(x.dtype))
+
+    A = jnp.exp(p["a_log"]).astype(jnp.float32)            # (di, ds)
+    c = min(chunk, S)
+    if S % c:        # non-divisible (odd test shapes): single chunk
+        c = S
+    n = S // c
+
+    def body(h0, xcc):
+        # dt/B/C (and the (B, c, di, ds) dA/dBx expansions inside
+        # _scan_chunk) are computed INSIDE the checkpointed body: they are
+        # rematerialized in backward instead of living as stacked scan
+        # residuals — (n, B, c, di, ds) f32 stacks dominated HBM otherwise.
+        dtc, Bc, Cc = _ssm_params(cfg, p, xcc)
+        y, h1 = _scan_chunk(A, dtc, Bc, Cc,
+                            xcc.astype(jnp.float32), h0)
+        return h1, y.astype(x.dtype)   # bf16 outputs: f32 (B,S,di) stacks
+        # of every mamba layer otherwise dominate the period backward
+
+    if remat:
+        body = jax.checkpoint(body)
+
+    resh = lambda t: t.reshape(B, n, c, *t.shape[2:]).swapaxes(0, 1)
+    h0 = jnp.zeros((B, di, cfg.mamba_d_state), jnp.float32)
+    _, ys = jax.lax.scan(body, h0, resh(xc))
+    y = ys.swapaxes(0, 1).reshape(B, S, di)
+    y = y + xc * p["d_skip"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(x.dtype)
+
+
+def mamba_init_state(cfg, batch: int, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.mamba_d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, cfg.d_inner), dtype),
+    }
+
+
+def mamba_decode(cfg, p, x, state):
+    """One-token step. x: (B, 1, D); state: {'h', 'conv'}."""
+    B = x.shape[0]
+    dc = cfg.mamba_d_conv
+    xz = x @ p["in_proj"].astype(x.dtype)
+    xs, z = jnp.split(xz, 2, axis=-1)                      # (B,1,di)
+    window = jnp.concatenate([state["conv"], xs], axis=1)  # (B,dc,di)
+    xc = jnp.einsum("bcd,dc->bd", window.astype(jnp.float32),
+                    p["conv_w"].astype(jnp.float32))
+    xc = jax.nn.silu(xc + p["conv_bias"].astype(jnp.float32))[:, None, :]
+    xc = xc.astype(x.dtype)
+
+    dt, Bm, Cm = _ssm_params(cfg, p, xc)                   # (B,1,*)
+    A = jnp.exp(p["a_log"]).astype(jnp.float32)
+    dA = jnp.exp(dt[:, 0, :, None] * (-A))                 # (B,di,ds)
+    dBx = (dt[:, 0, :] * xc[:, 0, :].astype(jnp.float32))[..., None] \
+        * Bm[:, 0, None, :]
+    h = dA * state["h"] + dBx                              # (B,di,ds)
+    y = jnp.einsum("bds,bs->bd", h, Cm[:, 0, :])
+    y = y + xc[:, 0, :].astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = (y[:, None, :].astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x.dtype)
+    new_state = {"h": h, "conv": window[:, 1:, :]}
+    del B, dc
+    return out, new_state

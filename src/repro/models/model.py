@@ -1,0 +1,135 @@
+"""Model facade: one API over all assigned architectures.
+
+  build_model(cfg, ctx)  ->  Model with
+    .init(key)                                  params (f32 master)
+    .hidden_seq(params, batch, remat)           (B, S, D) final hidden
+    .logits_seq(params, batch)                  (B, S, V) (small cfgs/tests)
+    .prefill(params, batch, cache_len)          (last-token logits, caches)
+    .decode(params, tokens, pos, caches)        ((B, 1, V) logits, caches)
+    .init_cache(batch, cache_len, dtype)
+
+batch dict keys by family:
+  dense/moe/hybrid/ssm : tokens (B,S) int32
+  vlm                  : embeds (B,S,D) + positions (3,B,S) int32
+  audio (enc-dec)      : frames (B,enc_seq,D) + tokens (B,S) int32
+plus labels (B,S) for training (consumed by the loss, not the model).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import ShardingCtx
+from . import encdec, transformer as tfm
+from .common import compute_dtype
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: Any
+    ctx: ShardingCtx
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+    ssm_chunk: int = 256
+    skip_masked_blocks: bool = False
+    remat_policy: str = "nothing"  # 'nothing' | 'dots' (§Perf lever)
+    seq_parallel_attn: bool = False  # Ulysses-style q-seq sharding
+
+    # ------------------------------------------------------------- params
+    def init(self, key) -> dict:
+        if self.cfg.enc_dec:
+            return encdec.init_encdec(key, self.cfg)
+        return tfm.init_decoder(key, self.cfg)
+
+    # ------------------------------------------------------------- embed
+    def _embed_in(self, params, batch, dtype):
+        cfg = self.cfg
+        if cfg.family == "vlm":
+            h = batch["embeds"].astype(dtype)
+            positions = batch["positions"]
+        else:
+            tokens = batch["tokens"]
+            h = tfm.embed_tokens(cfg, params, tokens, dtype)
+            B, S = tokens.shape
+            positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        h = self.ctx.shard_batch(h)
+        return h, positions
+
+    # ---------------------------------------------------------- sequence
+    def hidden_seq(self, params, batch, *, remat: bool = True):
+        cfg = self.cfg
+        dtype = compute_dtype(cfg)
+        if cfg.enc_dec:
+            memory = encdec.encode(cfg, self.ctx, params,
+                                   batch["frames"].astype(dtype))
+            tok = tfm.embed_tokens(cfg, params, batch["tokens"], dtype)
+            tok = self.ctx.shard_batch(tok)
+            return encdec.decode_seq(cfg, self.ctx, params, tok, memory,
+                                     remat=remat, q_chunk=self.q_chunk,
+                                     kv_chunk=self.kv_chunk)
+        h, positions = self._embed_in(params, batch, dtype)
+        return tfm.forward_seq(cfg, self.ctx, params, h, positions,
+                               remat=remat, q_chunk=self.q_chunk,
+                               kv_chunk=self.kv_chunk,
+                               ssm_chunk=self.ssm_chunk,
+                               skip_masked_blocks=self.skip_masked_blocks,
+                               remat_policy=self.remat_policy,
+                               seq_parallel_attn=self.seq_parallel_attn)
+
+    def unembed(self, params) -> jnp.ndarray:
+        return tfm.unembed_matrix(self.cfg, params)
+
+    def logits_seq(self, params, batch, *, remat: bool = False):
+        h = self.hidden_seq(params, batch, remat=remat)
+        w = self.unembed(params).astype(h.dtype)
+        return jnp.einsum("bsd,vd->bsv", h, w)
+
+    # ------------------------------------------------------------ serving
+    def init_cache(self, batch: int, cache_len: int, dtype=jnp.bfloat16):
+        if self.cfg.enc_dec:
+            return encdec.init_dec_cache(self.cfg, batch, cache_len, dtype)
+        return tfm.init_cache(self.cfg, batch, cache_len, dtype)
+
+    def prefill(self, params, batch, cache_len: int):
+        cfg = self.cfg
+        dtype = compute_dtype(cfg)
+        if cfg.enc_dec:
+            memory = encdec.encode(cfg, self.ctx, params,
+                                   batch["frames"].astype(dtype))
+            tok = tfm.embed_tokens(cfg, params, batch["tokens"], dtype)
+            tok = self.ctx.shard_batch(tok)
+            h, caches = encdec.prefill(cfg, self.ctx, params, tok, memory,
+                                       cache_len, q_chunk=self.q_chunk,
+                                       kv_chunk=self.kv_chunk)
+        else:
+            h, positions = self._embed_in(params, batch, dtype)
+            h, caches = tfm.forward_prefill(
+                cfg, self.ctx, params, h, positions, cache_len,
+                q_chunk=self.q_chunk, kv_chunk=self.kv_chunk,
+                ssm_chunk=self.ssm_chunk,
+                seq_parallel_attn=self.seq_parallel_attn)
+        w = self.unembed(params).astype(h.dtype)
+        logits = jnp.einsum("bd,vd->bv", h[:, -1, :], w)
+        return logits, caches
+
+    def decode(self, params, tokens, pos, caches):
+        """tokens: (B, 1) int32; pos: traced scalar int32."""
+        cfg = self.cfg
+        dtype = compute_dtype(cfg)
+        tok = tfm.embed_tokens(cfg, params, tokens, dtype)
+        if cfg.enc_dec:
+            h, caches = encdec.decode_step(cfg, self.ctx, params, tok, pos,
+                                           caches)
+        else:
+            h, caches = tfm.forward_decode(cfg, self.ctx, params, tok, pos,
+                                           caches)
+        w = self.unembed(params).astype(h.dtype)
+        logits = jnp.einsum("bsd,vd->bsv", h, w)
+        return logits, caches
+
+
+def build_model(cfg, ctx: ShardingCtx | None = None, **kw) -> Model:
+    return Model(cfg=cfg, ctx=ctx or ShardingCtx(), **kw)

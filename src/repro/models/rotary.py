@@ -1,0 +1,47 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL's M-RoPE.
+
+M-RoPE (arXiv:2409.12191): the head_dim/2 frequency pairs are split into
+sections (temporal, height, width); each section rotates by its own
+position stream. Text tokens use t=h=w=linear position, so M-RoPE with
+equal ids degenerates to RoPE exactly (tested)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """(head_dim/2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (B, S, H, D); positions: (B, S) int -> rotated x."""
+    D = x.shape[-1]
+    inv = rope_freqs(D, theta)                                # (D/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv      # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, theta: float,
+                sections: tuple[int, ...]) -> jnp.ndarray:
+    """x: (B, S, H, D); positions3: (3, B, S) (t, h, w) position streams;
+    sections: frequency-pair counts per stream, sum == D/2."""
+    D = x.shape[-1]
+    assert sum(sections) == D // 2, (sections, D)
+    inv = rope_freqs(D, theta)                                # (D/2,)
+    # Per-pair position stream id: section s repeated sections[s] times.
+    stream = jnp.repeat(jnp.arange(len(sections)),
+                        jnp.asarray(sections), total_repeat_length=D // 2)
+    pos = positions3.astype(jnp.float32)[stream, :, :]        # (D/2, B, S)
+    ang = jnp.moveaxis(pos, 0, -1) * inv                      # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)

@@ -1,0 +1,373 @@
+"""Unified decoder-only stack covering dense GQA, MoE, MLA, the Jamba
+hybrid and xLSTM — every assigned non-enc-dec architecture.
+
+Layers are grouped into *periods* (cfg.layer_period): within a period the
+block types may differ (Jamba: 7 mamba + 1 attention; xLSTM: 5 mLSTM + 1
+sLSTM), across periods they repeat, so parameters are stacked over periods
+and the stack runs as one lax.scan — HLO size stays O(period), compile
+time stays flat in depth, and caches ride the scan as stacked pytrees.
+
+Training wraps the period body in jax.checkpoint (activation remat:
+recompute the period in backward, keep only period-boundary activations).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import mamba as mb
+from . import mlp
+from . import xlstm as xl
+from .common import compute_dtype, embed_init, rms_norm, split_keys
+
+
+# --------------------------------------------------------------- structure
+def block_kind(cfg, j: int) -> tuple[str, str | None]:
+    """(mixer, ffn) type names for period position j."""
+    if cfg.family == "ssm":
+        mixer = "slstm" if cfg.is_slstm_layer(j) else "mlstm"
+        return mixer, None
+    mixer = ("mla" if cfg.mla else "gqa") if cfg.is_attn_layer(j) else "mamba"
+    ffn = "moe" if cfg.is_moe_layer(j) else "swiglu"
+    return mixer, ffn
+
+
+def init_block(key, cfg, j: int) -> dict:
+    mixer, ffn = block_kind(cfg, j)
+    ks = split_keys(key, 2)
+    p: dict[str, Any] = {"norm1": jnp.ones((cfg.d_model,))}
+    if mixer == "gqa":
+        p["attn"] = attn.init_gqa(ks[0], cfg)
+    elif mixer == "mla":
+        p["attn"] = attn.init_mla(ks[0], cfg)
+    elif mixer == "mamba":
+        p["mamba"] = mb.init_mamba(ks[0], cfg)
+    elif mixer == "mlstm":
+        p["mlstm"], _ = xl.init_mlstm(ks[0], cfg)
+    else:
+        p["slstm"] = xl.init_slstm(ks[0], cfg)
+    if ffn is not None:
+        p["norm2"] = jnp.ones((cfg.d_model,))
+        if ffn == "moe":
+            p["moe"] = mlp.init_moe(ks[1], cfg)
+        else:
+            p["ffn"] = mlp.init_swiglu(ks[1], cfg.d_model, cfg.d_ff,
+                                       cfg.n_layers)
+    return p
+
+
+def init_decoder(key, cfg, *, with_embed: bool = True) -> dict:
+    period = cfg.layer_period
+    n_periods = cfg.n_layers // period
+    assert cfg.n_layers % period == 0, (cfg.n_layers, period)
+    keys = split_keys(key, 3 + cfg.n_layers)
+    params: dict[str, Any] = {}
+    if with_embed:
+        params["embed"] = {"table": embed_init(keys[0], cfg.vocab,
+                                               cfg.d_model)}
+        if not cfg.tie_embeddings:
+            params["unembed"] = embed_init(keys[1], cfg.vocab, cfg.d_model)
+    layers: dict[str, Any] = {}
+    for j in range(period):
+        per = [init_block(keys[3 + i * period + j], cfg, j)
+               for i in range(n_periods)]
+        layers[f"pos{j}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+    params["layers"] = layers
+    params["final_norm"] = jnp.ones((cfg.d_model,))
+    return params
+
+
+# ------------------------------------------------------------------ caches
+def init_block_cache(cfg, j: int, batch: int, cache_len: int, dtype):
+    mixer, _ = block_kind(cfg, j)
+    if mixer == "gqa":
+        kv = (batch, cache_len, cfg.n_kv_heads, cfg.head_dim)
+        return (jnp.zeros(kv, dtype), jnp.zeros(kv, dtype))
+    if mixer == "mla":
+        return (jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dtype),
+                jnp.zeros((batch, cache_len, cfg.qk_rope_dim), dtype))
+    if mixer == "mamba":
+        return mb.mamba_init_state(cfg, batch, dtype)
+    if mixer == "mlstm":
+        return xl.mlstm_init_state(cfg, batch)
+    return xl.slstm_init_state(cfg, batch)
+
+
+def init_cache(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    period = cfg.layer_period
+    n_periods = cfg.n_layers // period
+    caches = {}
+    for j in range(period):
+        one = init_block_cache(cfg, j, batch, cache_len, dtype)
+        caches[f"pos{j}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_periods,) + x.shape), one)
+    return caches
+
+
+# ------------------------------------------------------------- block apply
+def apply_block_seq(cfg, ctx, p, j: int, h, positions, *, q_chunk, kv_chunk,
+                    ssm_chunk, remat_inner=True, skip_masked_blocks=False,
+                    seq_parallel_attn=False):
+    del remat_inner  # chunk remat is unconditional (see mamba below)
+    mixer, ffn = block_kind(cfg, j)
+    hn = rms_norm(h, p["norm1"], cfg.norm_eps)
+    if mixer == "gqa":
+        mix = attn.gqa_train(cfg, p["attn"], hn, positions, q_chunk=q_chunk,
+                             kv_chunk=kv_chunk,
+                             skip_masked_blocks=skip_masked_blocks,
+                             ctx=ctx, seq_parallel=seq_parallel_attn)
+    elif mixer == "mla":
+        mix = attn.mla_train(cfg, p["attn"], hn, positions, q_chunk=q_chunk,
+                             kv_chunk=kv_chunk,
+                             skip_masked_blocks=skip_masked_blocks)
+    elif mixer == "mamba":
+        # chunk-level remat is ALWAYS on (nested under the period-level
+        # checkpoint): the (B, c, d_inner, d_state) state expansions must
+        # never become stacked scan residuals, including during the
+        # period's backward recompute.
+        mix = mb.mamba_seq(cfg, p["mamba"], hn, chunk=ssm_chunk,
+                           remat=True)
+    elif mixer == "mlstm":
+        mix = xl.mlstm_seq(cfg, p["mlstm"], hn, chunk=ssm_chunk,
+                           remat=True)
+    else:
+        mix = xl.slstm_seq(cfg, p["slstm"], hn)
+    h = h + mix
+    if ffn is not None:
+        hn = rms_norm(h, p["norm2"], cfg.norm_eps)
+        f = (mlp.moe_apply(cfg, ctx, p["moe"], hn) if ffn == "moe"
+             else mlp.swiglu(p["ffn"], hn))
+        h = h + f
+    h = ctx.shard_batch(h)
+    return h
+
+
+def apply_block_prefill(cfg, ctx, p, j, h, positions, cache_len, *,
+                        q_chunk, kv_chunk, ssm_chunk,
+                        seq_parallel_attn=False):
+    """Like seq but also returns the cache for serving."""
+    mixer, ffn = block_kind(cfg, j)
+    hn = rms_norm(h, p["norm1"], cfg.norm_eps)
+    if mixer == "gqa":
+        mix, cache = attn.gqa_prefill(cfg, p["attn"], hn, positions,
+                                      cache_len, q_chunk=q_chunk,
+                                      kv_chunk=kv_chunk, ctx=ctx,
+                                      seq_parallel=seq_parallel_attn)
+    elif mixer == "mla":
+        mix, cache = attn.mla_prefill(cfg, p["attn"], hn, positions,
+                                      cache_len, q_chunk=q_chunk,
+                                      kv_chunk=kv_chunk)
+    elif mixer == "mamba":
+        # final state = cache; rerun-free: seq pass returns outputs only,
+        # so recompute the last state cheaply via decode of final chunk is
+        # avoided by carrying state out of mamba_seq — use scan's carry.
+        mix, cache = _mamba_prefill(cfg, p["mamba"], hn, ssm_chunk)
+    elif mixer == "mlstm":
+        mix, cache = _mlstm_prefill(cfg, p["mlstm"], hn, ssm_chunk)
+    else:
+        mix, cache = _slstm_prefill(cfg, p["slstm"], hn)
+    h = h + mix
+    if ffn is not None:
+        hn = rms_norm(h, p["norm2"], cfg.norm_eps)
+        f = (mlp.moe_apply(cfg, ctx, p["moe"], hn) if ffn == "moe"
+             else mlp.swiglu(p["ffn"], hn))
+        h = h + f
+    h = ctx.shard_batch(h)
+    return h, cache
+
+
+def apply_block_decode(cfg, ctx, p, j, h, pos, cache):
+    mixer, ffn = block_kind(cfg, j)
+    hn = rms_norm(h, p["norm1"], cfg.norm_eps)
+    if mixer == "gqa":
+        mix, cache = attn.gqa_decode(cfg, p["attn"], hn, pos, cache,
+                                     ctx=ctx)
+    elif mixer == "mla":
+        mix, cache = attn.mla_decode(cfg, p["attn"], hn, pos, cache,
+                                     ctx=ctx)
+    elif mixer == "mamba":
+        mix, cache = mb.mamba_decode(cfg, p["mamba"], hn, cache)
+    elif mixer == "mlstm":
+        mix, cache = xl.mlstm_decode(cfg, p["mlstm"], hn, cache)
+    else:
+        mix, cache = xl.slstm_decode(cfg, p["slstm"], hn, cache)
+    h = h + mix
+    if ffn is not None:
+        hn = rms_norm(h, p["norm2"], cfg.norm_eps)
+        f = (mlp.moe_apply(cfg, ctx, p["moe"], hn) if ffn == "moe"
+             else mlp.swiglu(p["ffn"], hn))
+        h = h + f
+    return h, cache
+
+
+# ------------------------------------------------- prefill state extractors
+def _mamba_prefill(cfg, p, hn, chunk):
+    B, S, _ = hn.shape
+    out = mb.mamba_seq(cfg, p, hn, chunk=chunk, remat=False)
+    # recover final recurrent state by one decode sweep over the last
+    # (d_conv-1 + 1) tokens is incorrect for h; instead rerun the scan
+    # carrying state — mamba_seq discards it, so recompute cheaply here.
+    state = mb.mamba_init_state(cfg, B, hn.dtype)
+    # cheap exact state: single fused scan pass without outputs
+    xz = hn @ p["in_proj"].astype(hn.dtype)
+    xs, _ = jnp.split(xz, 2, axis=-1)
+    dc = cfg.mamba_d_conv
+    xpad = jnp.pad(xs, ((0, 0), (dc - 1, 0), (0, 0)))
+    xc = sum(xpad[:, i:i + S, :] * p["conv_w"][:, i].astype(hn.dtype)
+             for i in range(dc))
+    xc = jax.nn.silu(xc + p["conv_bias"].astype(hn.dtype))
+    dt, Bm, Cm = mb._ssm_params(cfg, p, xc)
+    A = jnp.exp(p["a_log"]).astype(jnp.float32)
+    c = min(256, S)
+    if S % c:
+        c = S
+    n = S // c
+    resh = lambda t: t.reshape(B, n, c, *t.shape[2:]).swapaxes(0, 1)
+
+    def body(h0, args):
+        dtc, Bc, xcc = args
+        dA = jnp.exp(dtc[..., None] * (-A))
+        dBx = (dtc * xcc)[..., None] * Bc[:, :, None, :]
+
+        def step(h, t):
+            return dA[:, t] * h + dBx[:, t], None
+        h1, _ = jax.lax.scan(step, h0, jnp.arange(c))
+        return h1, None
+
+    h_last, _ = jax.lax.scan(body, state["h"],
+                             (resh(dt), resh(Bm),
+                              resh(xc.astype(jnp.float32))))
+    del Cm
+    state = {"h": h_last, "conv": xs[:, S - (dc - 1):, :]}
+    return out, state
+
+
+def _mlstm_prefill(cfg, p, hn, chunk):
+    out = xl.mlstm_seq(cfg, p, hn, chunk=chunk, remat=False)
+    B, S, _ = hn.shape
+    q, k, v, ig, logf, _ = xl._mlstm_heads(cfg, p, hn)
+    del q
+    # fold the whole sequence into the state (chunked, no outputs)
+    st = xl.mlstm_init_state(cfg, B)
+    c = min(256, S)
+    if S % c:
+        c = S
+    n = S // c
+    resh = lambda t: t.reshape(B, n, c, *t.shape[2:]).swapaxes(0, 1)
+
+    def body(carry, args):
+        C0, n0, m0 = carry
+        kc, vc, ic, lfc = args
+        F = jnp.cumsum(lfc, axis=1)
+        Fc = F[:, -1, :]
+        m1 = jnp.maximum(Fc + m0, jnp.max(ic + (Fc[:, None, :] - F), axis=1))
+        sc = jnp.exp(Fc + m0 - m1)
+        wj = jnp.exp(ic + Fc[:, None, :] - F - m1[:, None, :])
+        C1 = C0 * sc[..., None, None] + jnp.einsum(
+            "bjh,bjhd,bjhe->bhde", wj, kc.astype(jnp.float32),
+            vc.astype(jnp.float32))
+        n1 = n0 * sc[..., None] + jnp.einsum(
+            "bjh,bjhd->bhd", wj, kc.astype(jnp.float32))
+        return (C1, n1, m1), None
+
+    (C1, n1, m1), _ = jax.lax.scan(
+        body, (st["C"], st["n"], st["m"]),
+        (resh(k), resh(v), resh(ig), resh(logf)))
+    return out, {"C": C1, "n": n1, "m": m1}
+
+
+def _slstm_prefill(cfg, p, hn):
+    B, S, _ = hn.shape
+    xg = (hn @ p["w_gates"].astype(hn.dtype)).astype(jnp.float32)
+
+    def step(st, xt):
+        st1 = xl._slstm_cell(cfg, p, xt, st)
+        return st1, st1["h"]
+
+    st0 = xl.slstm_init_state(cfg, B)
+    st, hs = jax.lax.scan(step, st0, xg.swapaxes(0, 1))
+    out = hs.swapaxes(0, 1).astype(hn.dtype) @ p["out_proj"].astype(hn.dtype)
+    return out, st
+
+
+# ----------------------------------------------------------------- forward
+def embed_tokens(cfg, params, tokens, dtype):
+    # gather first, cast after: avoids materializing a casted copy of the
+    # full (V, D) table per step
+    return params["embed"]["table"][tokens].astype(dtype)
+
+
+def unembed_matrix(cfg, params):
+    return (params["embed"]["table"] if cfg.tie_embeddings
+            else params["unembed"])
+
+
+def forward_seq(cfg, ctx, params, h, positions, *, remat: bool = False,
+                q_chunk: int = 1024, kv_chunk: int = 1024,
+                ssm_chunk: int = 256, skip_masked_blocks: bool = False,
+                remat_policy: str = "nothing",
+                seq_parallel_attn: bool = False):
+    """Body of train/prefill-style full-sequence passes: h (B, S, D).
+
+    remat_policy: 'nothing' (recompute everything in backward) or 'dots'
+    (save matmul outputs — incl. FSDP-gathered weights' products — so the
+    backward re-gathers less at higher memory; §Perf lever)."""
+    period = cfg.layer_period
+
+    def body(h, period_params):
+        for j in range(period):
+            h = apply_block_seq(cfg, ctx, period_params[f"pos{j}"], j, h,
+                                positions, q_chunk=q_chunk,
+                                kv_chunk=kv_chunk, ssm_chunk=ssm_chunk,
+                                remat_inner=not remat,
+                                skip_masked_blocks=skip_masked_blocks,
+                                seq_parallel_attn=seq_parallel_attn)
+        return h, None
+
+    if remat:
+        if remat_policy == "dots":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.checkpoint_dots)
+        else:
+            body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    return rms_norm(h, params["final_norm"], cfg.norm_eps)
+
+
+def forward_prefill(cfg, ctx, params, h, positions, cache_len, *,
+                    q_chunk=1024, kv_chunk=1024, ssm_chunk=256,
+                    seq_parallel_attn=False):
+    period = cfg.layer_period
+
+    def body(h, period_params):
+        caches = {}
+        for j in range(period):
+            h, cache = apply_block_prefill(
+                cfg, ctx, period_params[f"pos{j}"], j, h, positions,
+                cache_len, q_chunk=q_chunk, kv_chunk=kv_chunk,
+                ssm_chunk=ssm_chunk, seq_parallel_attn=seq_parallel_attn)
+            caches[f"pos{j}"] = cache
+        return h, caches
+
+    h, caches = jax.lax.scan(body, h, params["layers"])
+    return rms_norm(h, params["final_norm"], cfg.norm_eps), caches
+
+
+def forward_decode(cfg, ctx, params, h, pos, caches):
+    period = cfg.layer_period
+
+    def body(h, xs):
+        period_params, period_caches = xs
+        new = {}
+        for j in range(period):
+            h, c = apply_block_decode(cfg, ctx, period_params[f"pos{j}"], j,
+                                      h, pos, period_caches[f"pos{j}"])
+            new[f"pos{j}"] = c
+        return h, new
+
+    h, new_caches = jax.lax.scan(body, h, (params["layers"], caches))
+    return rms_norm(h, params["final_norm"], cfg.norm_eps), new_caches

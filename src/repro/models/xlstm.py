@@ -1,0 +1,221 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, true recurrence).
+
+mLSTM per head: C_t = f_t C_{t-1} + i_t v_t k_t^T ; n_t = f_t n_{t-1} + i_t k_t
+    h_t = (C_t q_t) / max(|n_t^T q_t|, 1)
+with exponential input gate and sigmoid-exp forget gate stabilized by the
+running max m_t (log-domain). Training/prefill uses the paper's chunkwise
+form: within-chunk decay-masked attention (parallel, MXU) + cross-chunk
+state carried by a lax.scan; chunk bodies are rematerialized.
+
+sLSTM is sequential by construction (recurrent gate dependency on h_{t-1}
+through block-diagonal per-head recurrent weights) — it runs as a plain
+lax.scan over time; the assignment's xlstm-350m places it on 4 of 24
+layers. Decode for both is O(1) state update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, split_keys
+
+_EPS = 1e-6
+
+
+# ------------------------------------------------------------------- mLSTM
+def init_mlstm(key, cfg):
+    D, di, H = cfg.d_model, cfg.d_inner, cfg.n_heads
+    dh = di // H
+    ks = split_keys(key, 7)
+    return {
+        "in_proj": dense_init(ks[0], D, 2 * di),            # -> [x, z]
+        "wq": dense_init(ks[1], di, di),
+        "wk": dense_init(ks[2], di, di),
+        "wv": dense_init(ks[3], di, di),
+        "w_if": dense_init(ks[4], di, 2 * H, scale=0.1),    # i, f gates
+        "b_if": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]),
+        "out_norm": jnp.ones((di,)),
+        "out_proj": dense_init(ks[5], di, D,
+                               scale=1.0 / (2 * cfg.n_layers) ** 0.5),
+    }, dh
+
+
+def _mlstm_heads(cfg, p, x):
+    """x: (B, S, D) -> q,k,v (B,S,H,dh), log-gates i,f (B,S,H), z (B,S,di)."""
+    B, S, _ = x.shape
+    H, di = cfg.n_heads, cfg.d_inner
+    dh = di // H
+    xz = x @ p["in_proj"].astype(x.dtype)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    q = (xi @ p["wq"].astype(x.dtype)).reshape(B, S, H, dh)
+    k = (xi @ p["wk"].astype(x.dtype)).reshape(B, S, H, dh) * dh ** -0.5
+    v = (xi @ p["wv"].astype(x.dtype)).reshape(B, S, H, dh)
+    gates = (xi @ p["w_if"].astype(x.dtype)).astype(jnp.float32) \
+        + p["b_if"].astype(jnp.float32)
+    ig, fg = jnp.split(gates, 2, axis=-1)                   # (B,S,H) each
+    logf = jax.nn.log_sigmoid(fg)
+    return q, k, v, ig, logf, z
+
+
+def mlstm_seq(cfg, p, x, *, chunk: int = 256, remat: bool = True):
+    """Chunkwise-parallel mLSTM. x: (B, S, D) -> (B, S, D)."""
+    B, S, D = x.shape
+    H, di = cfg.n_heads, cfg.d_inner
+    dh = di // H
+    q, k, v, ig, logf, z = _mlstm_heads(cfg, p, x)
+    c = min(chunk, S)
+    if S % c:        # non-divisible (odd test shapes): single chunk
+        c = S
+    n = S // c
+
+    resh = lambda t: t.reshape(B, n, c, *t.shape[2:]).swapaxes(0, 1)
+    qs, ks_, vs = map(resh, (q.astype(jnp.float32),
+                             k.astype(jnp.float32),
+                             v.astype(jnp.float32)))
+    igs, lfs = resh(ig), resh(logf)
+
+    def body(carry, args):
+        C0, n0, m0 = carry          # (B,H,dh,dh), (B,H,dh), (B,H)
+        qc, kc, vc, ic, lfc = args  # (B,c,H,*) / (B,c,H)
+        F = jnp.cumsum(lfc, axis=1)                     # (B,c,H) log decay
+        # log weight of past state at step t: m0 + F_t ; of entry j<=t:
+        # F_t - F_j + i_j
+        a = F + m0[:, None, :]                          # past contribution
+        bmat = (F[:, :, None, :] - F[:, None, :, :]
+                + ic[:, None, :, :])                    # (B,t,j,H)
+        causal = jnp.tril(jnp.ones((c, c), bool))
+        bmat = jnp.where(causal[None, :, :, None], bmat, -jnp.inf)
+        m_new = jnp.maximum(a, jnp.max(bmat, axis=2))   # (B,c,H)
+        w_past = jnp.exp(a - m_new)                     # (B,c,H)
+        w_in = jnp.exp(bmat - m_new[:, :, None, :])     # (B,t,j,H)
+        # intra-chunk attention-style term
+        scores = jnp.einsum("bthd,bjhd->btjh", qc, kc) * w_in
+        num_in = jnp.einsum("btjh,bjhd->bthd", scores, vc)
+        den_in = jnp.sum(scores, axis=2)[..., None]     # (B,t,H,1)
+        # cross-chunk term from carried state
+        num_past = jnp.einsum("bthd,bhde->bthe", qc, C0) * w_past[..., None]
+        den_past = jnp.einsum("bthd,bhd->bth", qc, n0)[..., None] \
+            * w_past[..., None]
+        num = num_in + num_past
+        den = den_in + den_past
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new)[..., None] + _EPS)
+        # update carried state to end of chunk
+        Fc = F[:, -1, :]                                # (B,H) total decay
+        m1 = jnp.maximum(Fc + m0, jnp.max(ic + (Fc[:, None, :] - F), axis=1))
+        sc = jnp.exp(Fc + m0 - m1)                      # state scale
+        wj = jnp.exp(ic + Fc[:, None, :] - F - m1[:, None, :])  # (B,c,H)
+        C1 = C0 * sc[..., None, None] + jnp.einsum(
+            "bjh,bjhd,bjhe->bhde", wj, kc, vc)
+        n1 = n0 * sc[..., None] + jnp.einsum("bjh,bjhd->bhd", wj, kc)
+        return (C1, n1, m1), h
+
+    if remat:
+        body = jax.checkpoint(body)
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    _, hs = jax.lax.scan(body, (C0, n0, m0), (qs, ks_, vs, igs, lfs))
+    h = hs.swapaxes(0, 1).reshape(B, S, di).astype(x.dtype)
+    h = h * (p["out_norm"].astype(x.dtype))
+    h = h * jax.nn.silu(z)
+    return h @ p["out_proj"].astype(x.dtype)
+
+
+def mlstm_init_state(cfg, batch: int):
+    H, dh = cfg.n_heads, cfg.d_inner // cfg.n_heads
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(cfg, p, x, state):
+    """x: (B, 1, D) -> (out, new_state); O(1) per token."""
+    B = x.shape[0]
+    di = cfg.d_inner
+    q, k, v, ig, logf, z = _mlstm_heads(cfg, p, x)
+    qt, kt, vt = (t[:, 0].astype(jnp.float32) for t in (q, k, v))
+    it, lft = ig[:, 0], logf[:, 0]                          # (B,H)
+    m1 = jnp.maximum(lft + state["m"], it)
+    fs = jnp.exp(lft + state["m"] - m1)
+    is_ = jnp.exp(it - m1)
+    C1 = state["C"] * fs[..., None, None] \
+        + is_[..., None, None] * jnp.einsum("bhd,bhe->bhde", kt, vt)
+    n1 = state["n"] * fs[..., None] + is_[..., None] * kt
+    num = jnp.einsum("bhd,bhde->bhe", qt, C1)
+    den = jnp.einsum("bhd,bhd->bh", qt, n1)[..., None]
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m1)[..., None] + _EPS)
+    h = h.reshape(B, 1, di).astype(x.dtype) * p["out_norm"].astype(x.dtype)
+    h = h * jax.nn.silu(z)
+    return h @ p["out_proj"].astype(x.dtype), {"C": C1, "n": n1, "m": m1}
+
+
+# ------------------------------------------------------------------- sLSTM
+def init_slstm(key, cfg):
+    D, H = cfg.d_model, cfg.n_heads
+    dh = D // H
+    ks = split_keys(key, 3)
+    return {
+        "w_gates": dense_init(ks[0], D, 4 * D),             # z, i, f, o
+        "r_gates": 0.1 * jax.random.normal(ks[1], (H, dh, 4 * dh)),
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((2 * D,)), 3.0 * jnp.ones((D,)), jnp.zeros((D,))]),
+        "out_proj": dense_init(ks[2], D, D,
+                               scale=1.0 / (2 * cfg.n_layers) ** 0.5),
+    }
+
+
+def slstm_init_state(cfg, batch: int):
+    D = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, D), jnp.float32),
+        "n": jnp.ones((batch, D), jnp.float32),
+        "h": jnp.zeros((batch, D), jnp.float32),
+        "m": jnp.zeros((batch, D), jnp.float32),
+    }
+
+
+def _slstm_cell(cfg, p, xt, st):
+    """xt: (B, D) f32 pre-activations W x_t; st: state dict."""
+    B = xt.shape[0]
+    D, H = cfg.d_model, cfg.n_heads
+    dh = D // H
+    hprev = st["h"].reshape(B, H, dh)
+    rec = jnp.einsum("bhd,hde->bhe", hprev,
+                     p["r_gates"].astype(jnp.float32)).reshape(B, 4 * D)
+    pre = xt + rec + p["b_gates"].astype(jnp.float32)
+    z, i, f, o = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o)
+    logf = jax.nn.log_sigmoid(f)
+    m1 = jnp.maximum(logf + st["m"], i)
+    fs = jnp.exp(logf + st["m"] - m1)
+    is_ = jnp.exp(i - m1)
+    c1 = fs * st["c"] + is_ * z
+    n1 = fs * st["n"] + is_
+    h1 = o * c1 / jnp.maximum(n1, _EPS)
+    return {"c": c1, "n": n1, "h": h1, "m": m1}
+
+
+def slstm_seq(cfg, p, x):
+    """x: (B, S, D) -> (B, S, D); plain recurrence over time."""
+    B, S, D = x.shape
+    xg = (x @ p["w_gates"].astype(x.dtype)).astype(jnp.float32)
+
+    def step(st, xt):
+        st1 = _slstm_cell(cfg, p, xt, st)
+        return st1, st1["h"]
+
+    st0 = slstm_init_state(cfg, B)
+    _, hs = jax.lax.scan(step, st0, xg.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).astype(x.dtype)
+    return h @ p["out_proj"].astype(x.dtype)
+
+
+def slstm_decode(cfg, p, x, state):
+    xg = (x[:, 0, :] @ p["w_gates"].astype(x.dtype)).astype(jnp.float32)
+    st1 = _slstm_cell(cfg, p, xg, state)
+    h = st1["h"][:, None, :].astype(x.dtype)
+    return h @ p["out_proj"].astype(x.dtype), st1

@@ -1,0 +1,3 @@
+"""Runtime control plane: straggler detection, elastic re-meshing."""
+from .elastic import remesh, scale_batch_schedule  # noqa: F401
+from .straggler import StepTimeMonitor  # noqa: F401

@@ -1,0 +1,41 @@
+"""Elastic scaling: move a training/solver state between meshes.
+
+Recovery story at scale: a pod loses nodes -> the job restarts on the
+surviving slice (or a grown one) -> the last committed checkpoint is
+restored with the *new* mesh's shardings. Nothing in the checkpoint
+format is mesh-specific (arrays are stored as logical tensors), so
+elasticity is purely a restore-time choice of shardings; see
+``repro.checkpoint``. This module adds the in-memory variant (no disk
+round-trip) used when the job itself orchestrates the re-mesh, plus
+batch re-sharding helpers."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+
+def remesh(tree: Any, shardings: Any) -> Any:
+    """Re-shard every leaf onto new-mesh shardings (host round-trip —
+    device-to-device resharding across different Mesh objects is not
+    defined, and on a real re-deploy the host copy is the checkpoint)."""
+    flat, treedef = jax.tree.flatten(tree)
+    sh = treedef.flatten_up_to(shardings)
+    out = [jax.device_put(np.asarray(x), s) for x, s in zip(flat, sh)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def scale_batch_schedule(global_batch: int, old_workers: int,
+                         new_workers: int, *, keep_global: bool = True):
+    """When the worker count changes, either keep the global batch (per-
+    worker batch changes; optimization trajectory preserved) or keep the
+    per-worker batch (throughput preserved; LR should rescale). Returns
+    (global_batch, lr_scale)."""
+    if keep_global:
+        assert global_batch % new_workers == 0, (global_batch, new_workers)
+        return global_batch, 1.0
+    per = global_batch // old_workers
+    new_global = per * new_workers
+    return new_global, new_workers / old_workers

@@ -1,0 +1,50 @@
+"""Straggler mitigation: detection + policy.
+
+The paper notes (Sec 4.1) that PEMSVM's SPMD symmetry makes sync latency
+small *when all nodes are healthy*; at 1000+ nodes, slow or dead hosts
+dominate tails. This module provides the control-plane pieces:
+
+  * ``StepTimeMonitor`` — per-step wall-time EMA; a step slower than
+    ``threshold x EMA`` flags a straggler event. On a real deployment each
+    host feeds its own timings and the flags are all-reduced; here the
+    single-host monitor is driven by the training loop.
+  * policy hooks — the data-plane reaction lives in
+    ``repro.core.distributed.live_weighted_psum`` (drop + renormalize a
+    dead replica's contribution: unbiased for the SVM's data-sums) and in
+    ``repro.runtime.elastic`` (re-mesh from the last checkpoint when a
+    replica is lost for good).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class StepTimeMonitor:
+    ema_decay: float = 0.9
+    threshold: float = 2.5        # x EMA -> straggler
+    warmup_steps: int = 5         # ignore compile/first-step noise
+
+    ema: float = 0.0
+    n: int = 0
+    events: list = dataclasses.field(default_factory=list)
+
+    def observe(self, step: int, seconds: float) -> bool:
+        """Returns True if this step is a straggler event."""
+        self.n += 1
+        if self.n <= self.warmup_steps:
+            self.ema = seconds if self.ema == 0.0 else (
+                0.5 * self.ema + 0.5 * seconds)
+            return False
+        is_straggler = seconds > self.threshold * self.ema
+        if is_straggler:
+            self.events.append((step, seconds, self.ema))
+        else:
+            # only healthy steps move the EMA (stragglers would poison it)
+            self.ema = (self.ema_decay * self.ema
+                        + (1 - self.ema_decay) * seconds)
+        return is_straggler
+
+    def summary(self) -> dict:
+        return {"steps": self.n, "ema_s": self.ema,
+                "straggler_events": len(self.events)}

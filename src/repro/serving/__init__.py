@@ -1,0 +1,2 @@
+"""Serving substrate: prefill/decode steps, samplers."""
+from .serve_step import generate, make_decode_step, make_prefill_step  # noqa: F401

@@ -1,0 +1,19 @@
+"""Token samplers for the serving path."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jnp.ndarray) -> jnp.ndarray:
+    """logits: (B, V) -> (B,) int32."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature(key, logits: jnp.ndarray, temp: float = 1.0,
+                top_k: int = 0) -> jnp.ndarray:
+    lg = logits.astype(jnp.float32) / max(temp, 1e-6)
+    if top_k:
+        kth = jnp.sort(lg, axis=-1)[:, -top_k][:, None]
+        lg = jnp.where(lg < kth, -1e30, lg)
+    return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)

@@ -1,0 +1,53 @@
+"""Serve-step builders: prefill and single-token decode.
+
+``make_decode_step`` is the function lowered for the decode_32k /
+long_500k dry-run cells: one new token against a seq_len-deep cache, cache
+donated so the update is in-place."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import sampler
+
+
+def make_prefill_step(model, cache_len: int) -> Callable:
+    """(params, batch) -> (next_token (B,), caches)."""
+    def prefill_step(params, batch):
+        logits, caches = model.prefill(params, batch, cache_len)
+        return sampler.greedy(logits), caches
+    return prefill_step
+
+
+def make_decode_step(model, *, temp: float = 0.0, top_k: int = 0) -> Callable:
+    """(params, tokens (B,1), pos, caches[, key]) ->
+    (next_token (B,), logits, caches)."""
+    def decode_step(params, tokens, pos, caches, key=None):
+        logits, caches = model.decode(params, tokens, pos, caches)
+        lg = logits[:, -1, :]
+        if temp > 0.0:
+            tok = sampler.temperature(key, lg, temp, top_k)
+        else:
+            tok = sampler.greedy(lg)
+        return tok, lg, caches
+    return decode_step
+
+
+def generate(model, params, batch, *, steps: int, cache_len: int,
+             temp: float = 0.0, top_k: int = 0, seed: int = 0):
+    """Host-loop generation (examples / correctness tests; production uses
+    the jitted steps directly)."""
+    prefill = jax.jit(make_prefill_step(model, cache_len))
+    decode = jax.jit(make_decode_step(model, temp=temp, top_k=top_k))
+    tok, caches = prefill(params, batch)
+    prompt_len = batch["tokens"].shape[1]
+    out = [tok]
+    key = jax.random.PRNGKey(seed)
+    for i in range(steps - 1):
+        key, sub = jax.random.split(key)
+        tok, _, caches = decode(params, tok[:, None],
+                                jnp.int32(prompt_len + i), caches, sub)
+        out.append(tok)
+    return jnp.stack(out, axis=1)

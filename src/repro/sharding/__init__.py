@@ -1,0 +1,2 @@
+"""Divisibility-aware sharding rules for the production mesh."""
+from .rules import ShardingCtx, param_spec, param_specs  # noqa: F401

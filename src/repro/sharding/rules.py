@@ -1,0 +1,157 @@
+"""Divisibility-aware sharding rules (DESIGN.md §4).
+
+Mesh contract (launch/mesh.py): axes ('data', 'model') single-pod or
+('pod', 'data', 'model') multi-pod. Layout:
+
+  * batch over DP = ('pod','data'); TP over 'model'; FSDP (ZeRO-3 style
+    parameter + optimizer sharding) over 'data'.
+  * matmul weights (in, out): P(fsdp, tp) — all-gathered over 'data' at
+    use, contracted over 'model' with psum (GSPMD inserts both).
+  * MoE expert stacks (E, in, out): P(tp, fsdp, None) — expert parallelism
+    over 'model' (the shard_map island in models/mlp.py consumes this).
+  * embeddings (V, D): vocab over tp when divisible, else P(None, tp).
+  * long_500k (batch=1) shards the KV-cache sequence dim over 'data'
+    (context parallelism) instead of batch.
+
+JAX rejects non-divisible input shardings, so every rule filters axes by
+divisibility (e.g. granite's vocab 49155 on a 16-way axis -> replicated).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingCtx:
+    """Mesh + axis roles, threaded through model builders.
+
+    mesh=None (unit tests / single-CPU smoke) turns every constraint into
+    a no-op and makes specs fully replicated."""
+    mesh: Mesh | None = None
+    dp_axes: tuple[str, ...] = ("data",)       # ('pod','data') multi-pod
+    tp_axis: str | None = "model"
+    fsdp_axis: str | None = "data"             # param/optimizer sharding
+    cache_seq_axes: tuple[str, ...] = ()       # context parallelism (500k)
+
+    # -------------------------------------------------------------- sizes
+    def axis_size(self, axes) -> int:
+        if self.mesh is None or axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        return int(np.prod([self.mesh.shape[a] for a in axes]))
+
+    def _fit(self, dim: int, axes):
+        """Return axes if they evenly divide dim, else None."""
+        if axes is None or self.mesh is None:
+            return None
+        if dim % self.axis_size(axes) == 0:
+            return axes
+        return None
+
+    def spec(self, shape: Sequence[int], *wanted) -> P:
+        """PartitionSpec with non-divisible entries dropped."""
+        assert len(wanted) == len(shape), (shape, wanted)
+        return P(*[self._fit(d, a) for d, a in zip(shape, wanted)])
+
+    def constrain(self, x, *wanted):
+        """with_sharding_constraint honoring divisibility; no-op off-mesh."""
+        if self.mesh is None:
+            return x
+        spec = self.spec(x.shape, *wanted)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def shard_batch(self, x):
+        """Inter-block activation layout: batch over DP; for (B, S, D)
+        activations additionally shard the *sequence* over the model axis
+        (Megatron sequence parallelism): the per-period boundary
+        activations a rematerialized backward must keep alive shrink by
+        the TP degree, and GSPMD turns the surrounding TP collectives
+        into all-gather/reduce-scatter pairs at the block edges. Dims
+        that don't divide (e.g. decode S=1) drop the constraint."""
+        if x.ndim == 3:
+            return self.constrain(x, self.dp_axes, self.tp_axis, None)
+        return self.constrain(x, self.dp_axes, *(None,) * (x.ndim - 1))
+
+    def named(self, spec: P) -> NamedSharding:
+        assert self.mesh is not None
+        return NamedSharding(self.mesh, spec)
+
+
+def param_spec(ctx: ShardingCtx, path: str, shape: tuple[int, ...]) -> P:
+    """Sharding rule for one parameter, dispatched on its tree path.
+
+    Conventions: paths are '/'-joined dict keys, e.g.
+    'layers/attn/wq', 'layers/moe/w_up', 'embed/table'. Params that live
+    under a scanned layer stack carry a leading layer dim; rules key on
+    the *trailing* dims. Unknown leaves fall back to replicated."""
+    tp, fsdp = ctx.tp_axis, ctx.fsdp_axis
+    name = path.split("/")[-1]
+    stacked = "layers" in path or "blocks" in path
+    lead = (None,) * (1 if stacked else 0)
+
+    if ctx.mesh is None:
+        return P(*(None,) * len(shape))
+
+    def tail_spec(*axes):
+        assert len(lead) + len(axes) == len(shape), (path, shape, axes)
+        return ctx.spec(shape, *lead, *axes)
+
+    # --- embeddings / unembedding (never stacked)
+    if name in ("table", "unembed"):
+        V, _ = shape
+        if V % ctx.axis_size(tp) == 0:
+            return ctx.spec(shape, tp, fsdp)
+        return ctx.spec(shape, None, tp)
+    if name == "pos_table":
+        return ctx.spec(shape, None, tp)
+
+    nd = len(shape) - len(lead)  # logical rank of the per-layer param
+
+    # --- MoE expert stacks (E, in, out): EP over tp + FSDP over in-dim.
+    # The FSDP dim costs a bf16 all-gather of each layer's local experts
+    # at use (the alternative — EP-only storage — replicates the f32
+    # optimizer state over 'data': +170 GB/device at deepseek-v2 scale,
+    # strictly worse). The gather is bf16 (cast-before-island in mlp.py)
+    # and is the dominant collective of MoE train cells; see §Perf.
+    if nd == 3 and ("moe" in path or "experts" in path):
+        return tail_spec(tp, fsdp, None)
+
+    # --- biases / norms / gates (1-D): shard tp-sized inner vectors
+    if nd == 1:
+        return tail_spec(tp if name in ("d_skip", "conv_bias", "dt_bias")
+                         else None)
+
+    # --- row-parallel output projections: contract dim carries tp
+    if nd == 2 and name in ("wo", "w_down", "out_proj", "down"):
+        return tail_spec(tp, fsdp)
+
+    # --- SSM block internals: inner (d_inner) dim carries tp
+    if nd == 2 and name in ("x_proj", "w_if"):
+        return tail_spec(tp, None)
+    if nd == 2 and name == "a_log":
+        return tail_spec(tp, None)
+
+    # --- conv kernels (channels, width): channels over tp
+    if nd == 2 and name.startswith("conv"):
+        return tail_spec(tp, None)
+
+    # --- default matmul weight (in, out): column parallel + FSDP
+    if nd == 2:
+        return tail_spec(fsdp, tp)
+    return P(*(None,) * len(shape))
+
+
+def param_specs(ctx: ShardingCtx, params) -> dict:
+    """Spec pytree mirroring a params pytree (layer-stacked leaves get a
+    leading None)."""
+    def visit(path_elems, leaf):
+        path = "/".join(str(getattr(p, "key", p)) for p in path_elems)
+        return param_spec(ctx, path, leaf.shape)
+    return jax.tree_util.tree_map_with_path(visit, params)

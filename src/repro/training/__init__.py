@@ -1,0 +1,4 @@
+"""Training substrate: AdamW (from scratch), chunked xent, train_step."""
+from .optimizer import AdamWConfig, apply_updates, init_state, schedule  # noqa: F401
+from .train_step import (  # noqa: F401
+    chunked_softmax_xent, init_train_state, make_loss_fn, make_train_step)

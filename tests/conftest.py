@@ -1,0 +1,38 @@
+"""Shared test fixtures. NOTE: no XLA device-count flags here — smoke
+tests and benches must see 1 device; multi-device tests run in
+subprocesses (test_distributed.py)."""
+import dataclasses
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def reduce_cfg(cfg, **extra):
+    """Family-aware reduced config for CPU smoke tests."""
+    kw = dict(n_layers=cfg.layer_period * 2, d_model=64, vocab=256,
+              d_ff=128 if cfg.d_ff else 0)
+    if cfg.mla:
+        kw.update(n_heads=4, n_kv_heads=4, head_dim=16, kv_lora_rank=32,
+                  q_lora_rank=48, qk_rope_dim=8, qk_nope_dim=16,
+                  v_head_dim=16)
+    else:
+        kw.update(n_heads=4, n_kv_heads=2 if cfg.n_kv_heads < cfg.n_heads
+                  else 4, head_dim=16)
+    if cfg.mrope:
+        kw.update(mrope_sections=(2, 3, 3))
+    if cfg.n_experts:
+        kw.update(n_experts=4, top_k=2, moe_d_ff=32)
+    if cfg.enc_dec:
+        kw.update(n_enc_layers=2, enc_seq=16, n_kv_heads=4)
+    kw.update(extra)
+    return dataclasses.replace(cfg, **kw)
+
+
+@pytest.fixture(scope="session")
+def blobs():
+    from repro.data import make_blobs
+    return make_blobs(1500, 20, seed=0)

@@ -1,0 +1,55 @@
+"""Unit + property tests for the Polson-Scott augmentation pieces."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import augment
+
+
+def test_inverse_gaussian_moments():
+    """IG(mu, lam): mean = mu, var = mu^3/lam."""
+    key = jax.random.PRNGKey(0)
+    for mu in [0.3, 1.0, 4.0]:
+        x = augment.sample_inverse_gaussian(
+            key, jnp.full((200_000,), mu, jnp.float32), lam=1.0)
+        assert np.all(np.asarray(x) > 0)
+        np.testing.assert_allclose(float(jnp.mean(x)), mu, rtol=0.05)
+        np.testing.assert_allclose(float(jnp.var(x)), mu ** 3, rtol=0.2)
+
+
+def test_gamma_em_matches_paper_eq9():
+    res = jnp.asarray([-2.0, -1e-9, 0.0, 0.5, 3.0])
+    g = augment.gamma_em(res, eps=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(g), [2.0, 1e-6, 1e-6, 0.5, 3.0], rtol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(-1e4, 1e4, allow_nan=False), min_size=1,
+                max_size=64),
+       st.floats(1e-8, 1e-2))
+def test_gamma_em_clamped_positive(vals, eps):
+    g = augment.gamma_em(jnp.asarray(vals, jnp.float32), eps=eps)
+    assert bool(jnp.all(g >= eps * 0.999))
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.floats(1e-4, 1e3))
+def test_gamma_mc_positive_finite(seed, scale):
+    key = jax.random.PRNGKey(seed)
+    res = scale * jax.random.normal(key, (256,))
+    g = augment.gamma_mc(key, res, eps=1e-6)
+    assert bool(jnp.all(g >= 1e-6 * 0.999))
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+
+def test_gamma_mc_concentrates_on_em_for_large_residuals():
+    """For |residual| >> 0 the IG(1/|r|, 1) draw of gamma^{-1} has mean
+    1/|r| and tiny relative variance -> gamma ~= |r| = EM value."""
+    key = jax.random.PRNGKey(1)
+    res = jnp.full((100_000,), 30.0)
+    g = augment.gamma_mc(key, res, eps=1e-6)
+    np.testing.assert_allclose(float(jnp.mean(1.0 / g)), 1.0 / 30.0,
+                               rtol=0.05)

@@ -1,0 +1,59 @@
+"""Checkpointer: atomicity, keep-K GC, async errors, restore."""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+
+
+def _tree(x=1.0):
+    return {"a": jnp.full((4, 3), x), "b": {"c": jnp.arange(5) * int(x)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(10, _tree(2.0), blocking=True)
+    out = ck.restore(_tree(0.0))
+    np.testing.assert_allclose(np.asarray(out["a"]), 2.0)
+    np.testing.assert_allclose(np.asarray(out["b"]["c"]), np.arange(5) * 2)
+
+
+def test_latest_and_keep_k(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep_k=2)
+    for s in [1, 2, 3, 4]:
+        ck.save(s, _tree(float(s)), blocking=True)
+    assert ck.all_steps() == [3, 4]
+    assert ck.latest_step() == 4
+    out = ck.restore(_tree(0.0), step=3)
+    np.testing.assert_allclose(np.asarray(out["a"]), 3.0)
+
+
+def test_uncommitted_checkpoint_ignored(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(5, _tree(5.0), blocking=True)
+    # simulate crash mid-save of step 6: directory exists, no COMMIT
+    os.makedirs(tmp_path / "step_000000006" / "arrays")
+    assert ck.latest_step() == 5
+
+
+def test_restore_missing_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        Checkpointer(str(tmp_path)).restore(_tree())
+
+
+def test_async_save_overlaps_and_waits(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree(1.0))        # async
+    ck.save(2, _tree(2.0))        # waits for 1, starts 2
+    ck.wait()
+    assert ck.all_steps() == [1, 2]
+
+
+def test_shape_mismatch_detected(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree(), blocking=True)
+    bad = {"a": jnp.zeros((2, 2)), "b": {"c": jnp.arange(5)}}
+    with pytest.raises(AssertionError):
+        ck.restore(bad)

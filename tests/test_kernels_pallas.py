@@ -1,0 +1,93 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle,
+swept over shapes and dtypes, plus hypothesis-generated shapes."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def _data(n, k, dtype):
+    X = RNG.normal(size=(n, k)).astype(dtype)
+    w = RNG.uniform(0.1, 2.0, size=(n,)).astype(np.float32)
+    y = RNG.choice([-1.0, 1.0], size=(n,)).astype(np.float32)
+    wv = RNG.normal(size=(k,)).astype(np.float32)
+    return X, w, y, wv
+
+
+@pytest.mark.parametrize("n,k", [(64, 32), (100, 37), (512, 256),
+                                 (1000, 130), (9, 513)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_weighted_gram_matches_ref(n, k, dtype):
+    X, w, _, _ = _data(n, k, np.float32)
+    X = jnp.asarray(X, dtype)
+    got = ops.weighted_gram(X, jnp.asarray(w), backend="interpret",
+                            block_n=128, block_k=128)
+    want = ref.weighted_gram(X, jnp.asarray(w))
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol * np.abs(want).max())
+
+
+@pytest.mark.parametrize("n,k", [(64, 32), (257, 100), (512, 256)])
+def test_fused_estep_matches_ref(n, k):
+    X, _, y, wv = _data(n, k, np.float32)
+    m_p, g_p, b_p = ops.fused_estep(jnp.asarray(X), jnp.asarray(y),
+                                    jnp.asarray(y), jnp.asarray(wv),
+                                    eps=1e-6, backend="interpret",
+                                    block_n=128)
+    m_r, g_r, b_r = ref.fused_estep(jnp.asarray(X), jnp.asarray(y),
+                                    jnp.asarray(y), jnp.asarray(wv), 1e-6)
+    np.testing.assert_allclose(np.asarray(m_p), np.asarray(m_r), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(g_p), np.asarray(g_r), rtol=1e-4,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(b_p), np.asarray(b_r), rtol=2e-3,
+                               atol=2e-3 * max(1.0, np.abs(b_r).max()))
+
+
+@pytest.mark.parametrize("n1,n2,k,sigma", [(64, 64, 16, 1.0),
+                                           (100, 37, 8, 0.5),
+                                           (129, 257, 33, 2.0)])
+def test_rbf_gram_matches_ref(n1, n2, k, sigma):
+    X1 = RNG.normal(size=(n1, k)).astype(np.float32)
+    X2 = RNG.normal(size=(n2, k)).astype(np.float32)
+    got = ops.rbf_gram(jnp.asarray(X1), jnp.asarray(X2), sigma=sigma,
+                       backend="interpret", block_n=64)
+    want = ref.rbf_gram(jnp.asarray(X1), jnp.asarray(X2), sigma)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_rbf_gram_diagonal_is_one():
+    X = RNG.normal(size=(50, 7)).astype(np.float32)
+    G = np.asarray(ops.rbf_gram(jnp.asarray(X), jnp.asarray(X), sigma=1.3,
+                                backend="interpret", block_n=64))
+    np.testing.assert_allclose(np.diag(G), 1.0, atol=1e-5)
+    np.testing.assert_allclose(G, G.T, atol=1e-5)
+    assert G.max() <= 1.0 + 1e-5
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 200), st.integers(1, 70), st.integers(0, 2 ** 20))
+def test_weighted_gram_hypothesis_shapes(n, k, seed):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, k)).astype(np.float32)
+    w = rng.uniform(0.01, 5.0, size=(n,)).astype(np.float32)
+    got = ops.weighted_gram(jnp.asarray(X), jnp.asarray(w),
+                            backend="interpret", block_n=64, block_k=128)
+    want = (X * w[:, None]).T @ X
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-3,
+                               atol=1e-3 * max(1.0, np.abs(want).max()))
+
+
+def test_weighted_gram_psd_property():
+    """S = X^T diag(w) X with w > 0 must be PSD (solver precondition)."""
+    X, w, _, _ = _data(300, 40, np.float32)
+    S = np.asarray(ops.weighted_gram(jnp.asarray(X), jnp.asarray(w),
+                                     backend="interpret"))
+    eig = np.linalg.eigvalsh(S.astype(np.float64))
+    assert eig.min() > -1e-3 * max(1.0, eig.max())

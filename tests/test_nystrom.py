@@ -1,0 +1,48 @@
+"""Nystrom-approximated kernel SVM (the paper's Sec-4.3 open question)."""
+import numpy as np
+
+from repro.core import NystromSVM, PEMSVM, SVMConfig
+from repro.core.nystrom import nystrom_features
+from repro.data import make_circles
+
+
+def test_nystrom_features_approximate_gram():
+    from repro.core.kernel import gram_matrix
+    import jax.numpy as jnp
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(200, 5)).astype(np.float32)
+    phi = nystrom_features(X, X[:80], sigma=1.5)   # m=80 landmarks
+    K_exact = np.asarray(gram_matrix(jnp.asarray(X), jnp.asarray(X),
+                                     sigma=1.5))
+    K_apx = phi @ phi.T
+    err = np.abs(K_apx - K_exact).mean()
+    assert err < 0.05, err
+
+
+def test_nystrom_matches_exact_krn_accuracy():
+    X, y = make_circles(600, seed=1)
+    cfg = SVMConfig(formulation="KRN", lam=0.1, sigma=0.7, max_iters=40)
+    exact = PEMSVM(cfg)
+    exact.fit(X, y)
+    ny = NystromSVM(cfg, n_landmarks=60)
+    ny.fit(X, y)
+    assert ny.score(X, y) >= exact.score(X, y) - 0.02
+
+
+def test_nystrom_scales_past_exact_krn():
+    """At N=4000 the exact N x N Gram has 16M entries; Nystrom runs the
+    LIN solver on (N, ~64) features."""
+    X, y = make_circles(4000, seed=2)
+    ny = NystromSVM(SVMConfig(formulation="KRN", lam=0.1, sigma=0.7,
+                              max_iters=30))
+    res = ny.fit(X, y)
+    assert ny.score(X, y) > 0.98
+    assert res.n_iters <= 30
+
+
+def test_nystrom_mc_variant():
+    X, y = make_circles(800, seed=3)
+    ny = NystromSVM(SVMConfig(formulation="KRN", algorithm="MC", lam=0.1,
+                              sigma=0.7, max_iters=40), n_landmarks=50)
+    ny.fit(X, y)
+    assert ny.score(X, y) > 0.97

@@ -1,0 +1,141 @@
+"""Solver behaviour: all six paper option axes, convergence, stopping rule,
+accuracy parity with the reimplemented baselines."""
+import numpy as np
+import pytest
+
+from repro.baselines import DCDSVM, PegasosSVM
+from repro.core import PEMSVM, SVMConfig, lam_from_C
+from repro.data import make_blobs, make_circles, make_year_like
+
+
+def test_lin_em_cls_converges_within_paper_range(blobs):
+    X, y = blobs
+    svm = PEMSVM(SVMConfig(lam=1.0, max_iters=100))
+    res = svm.fit(X, y)
+    # paper Sec 5.13: EM converges in 40-60 iterations
+    assert res.converged and res.n_iters <= 80
+    assert svm.score(X, y) > 0.95
+
+
+def test_lin_em_objective_monotone_after_warmup(blobs):
+    X, y = blobs
+    res = PEMSVM(SVMConfig(lam=1.0, max_iters=50, tol=0.0)).fit(X, y)
+    objs = res.objective
+    diffs = np.diff(objs[2:])
+    assert (diffs <= 1e-3 * abs(objs[0])).mean() > 0.95, \
+        "EM objective should be (near-)monotone decreasing"
+
+
+def test_lin_mc_cls_trains(blobs):
+    X, y = blobs
+    svm = PEMSVM(SVMConfig(algorithm="MC", lam=1.0, max_iters=60, seed=3))
+    res = svm.fit(X, y)
+    assert svm.score(X, y) > 0.94
+    # posterior averaging must be in effect (Sec 5.13)
+    assert not np.allclose(res.weights, res.last_sample)
+
+
+def test_em_vs_mc_agree(blobs):
+    X, y = blobs
+    em = PEMSVM(SVMConfig(lam=1.0, max_iters=60))
+    mc = PEMSVM(SVMConfig(algorithm="MC", lam=1.0, max_iters=60))
+    em.fit(X, y)
+    mc.fit(X, y)
+    assert abs(em.score(X, y) - mc.score(X, y)) < 0.03
+
+
+def test_accuracy_parity_with_baselines(blobs):
+    """Paper claim: comparable accuracy to state-of-the-art solvers."""
+    X, y = blobs
+    ours = PEMSVM(SVMConfig(lam=0.01, max_iters=60))
+    ours.fit(X, y)
+    peg = PegasosSVM(lam=0.01, n_steps=2000).fit(X, y)
+    dcd = DCDSVM.from_lam(0.01, n_epochs=8).fit(X, y)
+    a0, a1, a2 = ours.score(X, y), peg.score(X, y), dcd.score(X, y)
+    assert a0 >= max(a1, a2) - 0.02, (a0, a1, a2)
+
+
+def test_svr_year_protocol():
+    X, y = make_year_like(4000, 30)
+    svm = PEMSVM(SVMConfig.from_options(
+        "LIN-EM-SVR", lam=lam_from_C(0.01), eps_ins=0.3, max_iters=60))
+    svm.fit(X, y)
+    rmse = svm.score(X, y)
+    assert rmse < 0.5, rmse   # paper Table 6 regime (unit-variance targets)
+
+
+def test_svr_mc():
+    X, y = make_year_like(2000, 20)
+    svm = PEMSVM(SVMConfig.from_options("LIN-MC-SVR", lam=0.1, eps_ins=0.1,
+                                        max_iters=50))
+    svm.fit(X, y)
+    assert svm.score(X, y) < 0.6
+
+
+@pytest.mark.parametrize("algo", ["EM", "MC"])
+def test_mlt_crammer_singer(algo):
+    rng = np.random.default_rng(5)
+    N, K, M = 2500, 20, 5
+    X = rng.normal(size=(N, K)).astype(np.float32)
+    Wt = rng.normal(size=(M, K))
+    labels = np.argmax(X @ Wt.T + 0.2 * rng.normal(size=(N, M)),
+                       axis=1).astype(np.int32)
+    svm = PEMSVM(SVMConfig(algorithm=algo, task="MLT", num_classes=M,
+                           lam=1.0, max_iters=40, min_iters=30))
+    svm.fit(X, labels)
+    assert svm.score(X, labels) > 0.9
+
+
+def test_krn_rbf_on_circles():
+    X, y = make_circles(400)
+    svm = PEMSVM(SVMConfig(formulation="KRN", lam=0.1, sigma=0.7,
+                           max_iters=40))
+    svm.fit(X, y)
+    assert svm.score(X, y) > 0.98  # not linearly separable
+
+
+def test_krn_mc():
+    X, y = make_circles(300, seed=2)
+    svm = PEMSVM(SVMConfig(formulation="KRN", algorithm="MC", lam=0.1,
+                           sigma=0.7, max_iters=50))
+    svm.fit(X, y)
+    assert svm.score(X, y) > 0.95
+
+
+def test_linear_sanity_vs_kernel_linear(blobs):
+    """KRN with the linear kernel ~ LIN solution (representer theorem)."""
+    X, y = blobs
+    X, y = X[:400], y[:400]
+    lin = PEMSVM(SVMConfig(lam=0.5, max_iters=50))
+    lin.fit(X, y)
+    k = PEMSVM(SVMConfig(formulation="KRN", kernel="linear", lam=0.5,
+                         max_iters=50))
+    k.fit(X, y)
+    agree = np.mean(lin.predict(X) == k.predict(X))
+    assert agree > 0.97, agree
+
+
+def test_stopping_rule_uses_tolN(blobs):
+    X, y = blobs
+    loose = PEMSVM(SVMConfig(lam=1.0, max_iters=100, tol=1.0)).fit(X, y)
+    tight = PEMSVM(SVMConfig(lam=1.0, max_iters=100, tol=1e-6)).fit(X, y)
+    assert loose.n_iters <= tight.n_iters
+
+
+def test_compressed_reduction_single_device_noop(blobs):
+    """reduce_dtype only affects on-mesh runs; off-mesh path must accept
+    the config and train identically."""
+    X, y = blobs
+    a = PEMSVM(SVMConfig(lam=1.0, max_iters=30))
+    b = PEMSVM(SVMConfig(lam=1.0, max_iters=30, reduce_dtype="bfloat16"))
+    ra, rb = a.fit(X, y), b.fit(X, y)
+    np.testing.assert_allclose(ra.weights, rb.weights, rtol=1e-5)
+
+
+def test_config_validation():
+    with pytest.raises(AssertionError):
+        SVMConfig(formulation="BAD")
+    with pytest.raises(NotImplementedError):
+        SVMConfig(formulation="KRN", task="SVR")
+    assert SVMConfig.from_options("lin-mc-mlt").options == "LIN-MC-MLT"
+    assert lam_from_C(2.0) == 1.0
