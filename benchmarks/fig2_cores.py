@@ -22,6 +22,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n_dev}"
 import json, time
 import numpy as np, jax
+from repro import compat
 from repro.core import PEMSVM, SVMConfig, lam_from_C
 from repro.data import make_dna_like
 from repro.launch.hlo_cost import analyze
@@ -31,8 +32,8 @@ X, y = make_dna_like({n}, {k})
 lam = lam_from_C(1e-5) * {n} / 2_500_000
 mesh = None
 if n_dev > 1:
-    mesh = jax.make_mesh((n_dev,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((n_dev,), ("data",),
+                         axis_types=("auto",))
 svm = PEMSVM(SVMConfig(lam=lam, max_iters=6, min_iters=6, tol=0.0),
              mesh=mesh)
 data, prior, state = svm._prepare(

@@ -1,7 +1,11 @@
 """§Roofline report generator: reads runs/dryrun/*.json (written by
 repro.launch.dryrun) and emits the per-(arch x shape x mesh) table with
 the three roofline terms, the dominant bottleneck, MODEL_FLOPS/HLO ratio,
-and a one-line what-would-move-it note."""
+and a one-line what-would-move-it note.
+
+Also emits the SVM iteration-statistic roofline (DESIGN.md §Perf):
+dense SYRK vs triangle-blocked SYRK vs one-sweep fused_stats, so the
+kernel choice (FLOP-halving vs HBM-halving) can be read off per (N, K)."""
 from __future__ import annotations
 
 import glob
@@ -58,11 +62,60 @@ def table(recs: list[dict]) -> str:
     return "\n".join(lines)
 
 
+def gram_rooflines(shapes=((250_000, 500), (1_000_000, 1024))) -> list[dict]:
+    """Analytic roofline terms for the three Sigma-statistic kernels.
+
+    Per EM iteration (bytes in f32):
+      dense  weighted_gram:  2NK^2 flops, X streamed once for Sigma and
+                             once for the estep  -> 2 X streams/iter.
+      syrk_tri:              NK^2 flops (lower-triangle block grid),
+                             same 2 X streams/iter.
+      fused_stats:           2NK^2 flops but ONE X stream/iter.
+    Whichever bound dominates picks the kernel: compute-bound -> tri,
+    memory-bound -> fused (DESIGN.md §Perf)."""
+    out = []
+    for n, k in shapes:
+        x_bytes = 4.0 * n * k
+        small = 4.0 * (2 * n + k + k * k)      # margins/gammas/b/Sigma
+        variants = {
+            "dense_split": (2.0 * n * k * k, 2 * x_bytes + small),
+            "tri_split": (1.0 * n * k * k, 2 * x_bytes + small),
+            "fused": (2.0 * n * k * k, x_bytes + small),
+            "tri_fused_lower_bound": (1.0 * n * k * k, x_bytes + small),
+        }
+        for name, (flops, byts) in variants.items():
+            compute_s = flops / PEAK_FLOPS
+            memory_s = byts / HBM_BW
+            out.append({
+                "name": name, "n": n, "k": k,
+                "compute_s": compute_s, "memory_s": memory_s,
+                "bound_s": max(compute_s, memory_s),
+                "dominant": ("compute" if compute_s >= memory_s
+                             else "memory")})
+    return out
+
+
+def gram_table(rows: list[dict]) -> str:
+    lines = ["| kernel | N | K | compute_s | memory_s | bound_s | "
+             "dominant |", "|" + "---|" * 7]
+    for r in rows:
+        lines.append(
+            f"| {r['name']} | {r['n']} | {r['k']} | {r['compute_s']:.3g} "
+            f"| {r['memory_s']:.3g} | {r['bound_s']:.3g} "
+            f"| {r['dominant']} |")
+    return "\n".join(lines)
+
+
 def run(run_dir: str = "runs/dryrun", full: bool = False):
+    grows = gram_rooflines()
+    print(gram_table(grows))
+    for r in grows:
+        print(f"roofline/gram_{r['name']}_n{r['n']}_k{r['k']},"
+              f"{r['bound_s'] * 1e6:.2f},dominant={r['dominant']}")
     recs = load(run_dir)
     if not recs:
         print(f"roofline,no_records,dir={run_dir}")
-        return []
+        return grows
     print(table(recs))
     ok = [r for r in recs if r.get("ok") and not r.get("skipped")]
     for r in ok:

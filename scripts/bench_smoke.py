@@ -1,0 +1,38 @@
+#!/usr/bin/env python
+"""Perf smoke check for CI: run a tiny Table-9 gram benchmark.
+
+No thresholds — the check is that the benchmark *completes* and writes
+``BENCH_gram.json`` (the speedup numbers are tracked across PRs as an
+artifact, not gated; CI machines are too noisy for wall-clock gates).
+Exits nonzero if the triangle kernel loses exact-ish parity with the
+dense kernel, which IS deterministic and gateable.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> int:
+    from benchmarks import table9_gram
+
+    rows = table9_gram.run(n=20_000, k=256, bench_n=1024)
+    syrk_rows = [r for r in rows if r["name"].startswith("syrk_")]
+    assert syrk_rows, "benchmark produced no syrk comparison rows"
+    for r in syrk_rows:
+        if r["max_abs_err"] > 1e-2:
+            print(f"PARITY FAIL: {r}")
+            return 1
+        print(f"ok {r['name']}: tri/dense = {r['tri_over_dense']}")
+    if not os.path.exists(table9_gram.BENCH_JSON):
+        print("BENCH_gram.json was not written")
+        return 1
+    print("bench smoke complete")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,74 @@
+"""JAX version-compatibility shims — the single place for them.
+
+``shard_map`` moved twice upstream:
+
+  * jax <  0.4.?? : ``jax.experimental.shard_map.shard_map`` (kwarg
+    ``check_rep``)
+  * jax >= 0.6    : public ``jax.shard_map`` (kwarg ``check_vma``)
+
+Every module in this package imports it from here so the repo runs on
+either API. The wrapper also translates the replication-check kwarg in
+both directions, since callers were written against the new name.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax as _jax
+
+try:  # jax >= 0.6: public API
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # jax 0.4.x / 0.5.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f=None, **kw):
+    """Call the underlying shard_map, renaming the replication-check kwarg
+    (``check_vma`` <-> ``check_rep``) to whatever this jax exposes."""
+    if "check_vma" in kw and "check_vma" not in _PARAMS:
+        kw["check_rep"] = kw.pop("check_vma")
+    elif "check_rep" in kw and "check_rep" not in _PARAMS:
+        kw["check_vma"] = kw.pop("check_rep")
+    if f is None:  # support use as a decorator factory
+        return lambda fn: _shard_map(fn, **kw)
+    return _shard_map(f, **kw)
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a named mesh axis, inside shard_map/pmap tracing.
+
+    ``jax.lax.axis_size`` is jax >= 0.6; older jax exposes the same
+    static value through ``jax.core.axis_frame`` (which, depending on
+    version, returns the frame or the size itself)."""
+    if hasattr(_jax.lax, "axis_size"):
+        return _jax.lax.axis_size(axis_name)
+    from jax.core import axis_frame
+    frame = axis_frame(axis_name)
+    return getattr(frame, "size", frame)
+
+
+def set_mesh(mesh):
+    """Context manager activating ``mesh``: ``jax.set_mesh`` on new jax,
+    the Mesh's own context-manager protocol on older releases."""
+    if hasattr(_jax, "set_mesh"):
+        return _jax.set_mesh(mesh)
+    return mesh
+
+
+_MAKE_MESH_PARAMS = frozenset(inspect.signature(_jax.make_mesh).parameters)
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+    """``jax.make_mesh`` dropping ``axis_types`` (jax >= 0.5 only) when
+    this jax does not accept it. Callers that want explicit axis types
+    pass the *name* ``"auto"``/``"explicit"`` per axis (or a sequence of
+    jax AxisType values on new jax)."""
+    if axis_types is not None and "axis_types" in _MAKE_MESH_PARAMS:
+        AxisType = _jax.sharding.AxisType
+        axis_types = tuple(
+            getattr(AxisType, t.capitalize()) if isinstance(t, str) else t
+            for t in axis_types)
+        kw["axis_types"] = axis_types
+    return _jax.make_mesh(axis_shapes, axis_names, **kw)

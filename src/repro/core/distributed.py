@@ -31,7 +31,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+from repro import compat
+from repro.compat import shard_map
 
 from .linear import SVMData
 
@@ -106,5 +108,5 @@ def live_weighted_psum(x: jnp.ndarray, live: jnp.ndarray,
     unbiased estimate the paper's stopping rule keeps working with."""
     num = jax.lax.psum(live * x, tuple(axes))
     den = jax.lax.psum(live, tuple(axes))
-    total = np.prod([jax.lax.axis_size(a) for a in axes])
+    total = np.prod([compat.axis_size(a) for a in axes])
     return num * (total / jnp.maximum(den, 1.0))

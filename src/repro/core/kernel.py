@@ -70,18 +70,19 @@ def krn_step(data: SVMData, K_prior: jnp.ndarray, omega: jnp.ndarray,
             gkey = jax.random.fold_in(gkey, jax.lax.axis_index(ax))
 
     # Identical structure to LIN with X := K_rows, w := omega.
+    # Masked rows contribute: their K-row is e_d (blockdiag identity), but
+    # y = 0 there, so b gets 0; S would get (1/gamma_pad) e_d e_d^T — a
+    # positive diagonal on padded components only. gamma_pad = |0 - omega_d|
+    # stays near 0 -> clamp; suppress via the explicit Sigma weight mask.
     if mode == "EM":
-        margin, gamma, b = ops.fused_estep(K_rows, y, y, omega, eps=eps,
-                                           backend=backend)
+        margin, gamma, b, S = ops.fused_stats(K_rows, y, y, omega,
+                                              wmask=mask, eps=eps,
+                                              backend=backend)
     else:
         margin = K_rows.astype(jnp.float32) @ omega.astype(jnp.float32)
         gamma = augment.gamma_mc(gkey, y - margin, eps)
         b = K_rows.astype(jnp.float32).T @ (y / gamma + y)
-    # Masked rows contribute: their K-row is e_d (blockdiag identity), but
-    # y = 0 there, so b gets 0; S gets (1/gamma_pad) e_d e_d^T — a harmless
-    # positive diagonal on padded components only. gamma_pad = |0 - omega_d|
-    # stays near 0 -> clamp; suppress via explicit mask on the weights.
-    S = ops.weighted_gram(K_rows, mask / gamma, backend=backend)
+        S = ops.syrk_tri(K_rows, mask / gamma, backend=backend)
     S, b = stats.reduce_stats(S, b, axes, triangle=triangle,
                               reduce_dtype=reduce_dtype)
 

@@ -27,6 +27,7 @@ from typing import NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.kernels import ops
 from . import augment, objective, stats
 
@@ -42,24 +43,40 @@ def local_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
                 w: jnp.ndarray, *, mode: str, key: jax.Array | None,
                 eps: float, backend: str | None):
     """(margin, gamma, Sigma^p, mu^p) for the generic hinge — shared by
-    CLS (rho=beta=y) and each Crammer-Singer class update."""
+    CLS (rho=beta=y) and each Crammer-Singer class update.
+
+    EM streams X once through ``fused_stats`` (margin, gamma, b and
+    Sigma in a single HBM pass); MC needs the gamma draw between the
+    E-step and the Sigma pass, so it computes the E-step inline and uses
+    the triangle-blocked SYRK for Sigma (half the dense FLOPs).
+    """
     if mode == "EM":
-        margin, gamma, b = ops.fused_estep(X, rho, beta, w, eps=eps,
-                                           backend=backend)
+        margin, gamma, b, S = ops.fused_stats(X, rho, beta, w, eps=eps,
+                                              backend=backend)
     else:
         margin = X.astype(jnp.float32) @ w.astype(jnp.float32)
         gamma = augment.gamma_mc(key, rho - margin, eps)
         coef = rho.astype(jnp.float32) / gamma + beta.astype(jnp.float32)
         b = X.astype(jnp.float32).T @ coef
-    S = ops.weighted_gram(X, 1.0 / gamma, backend=backend)
+        S = ops.syrk_tri(X, 1.0 / gamma, backend=backend)
     return margin, gamma, S, b
 
 
 def _k_block(S_or_X, axis_name):
-    """Column block bounds of a K-dim array for this model-axis shard."""
+    """Column block bounds of a K-dim array for this model-axis shard.
+
+    K must divide the model-axis size: a truncating ``K // n`` here would
+    silently drop the trailing ``K % n`` columns of Sigma (the all-gather
+    below would rebuild a (K, n*(K//n)) matrix) and corrupt the posterior.
+    """
     K = S_or_X.shape[-1]
     p = jax.lax.axis_index(axis_name)
-    n = jax.lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
+    if K % n != 0:
+        raise ValueError(
+            f"k_shard_axis {axis_name!r} of size {n} does not divide "
+            f"K={K}; pad the feature dimension to a multiple of {n} "
+            f"(e.g. with zero columns) or drop k_shard_axis.")
     blk = K // n
     return p * blk, blk
 

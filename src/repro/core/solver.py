@@ -54,6 +54,8 @@ class SVMConfig:
     min_iters: int = 10          # guard against flat-start plateaus
     patience: int = 1            # consecutive small-change iters required
     tol: float = 1e-3            # stop at |delta obj| <= tol * N (Sec 5.5)
+    driver: str = "scan"         # scan = chunked on-device lax.scan driver
+    scan_chunk: int = 16         # device iterations per host sync
     burnin: int = 10             # MC burn-in (Sec 5.13)
     jitter: float | None = None  # None -> 1e-7 (LIN), 1e-4 (KRN fp32 Gram)
     triangle_reduce: bool = True
@@ -67,6 +69,8 @@ class SVMConfig:
         assert self.formulation in FORMULATIONS, self.formulation
         assert self.algorithm in ALGORITHMS, self.algorithm
         assert self.task in TASKS, self.task
+        assert self.driver in ("scan", "loop"), self.driver
+        assert self.scan_chunk >= 1, self.scan_chunk
         if self.formulation == "KRN" and self.task != "CLS":
             raise NotImplementedError(
                 "paper provides KRN for binary classification")
@@ -93,6 +97,100 @@ class FitResult:
     aux_history: dict
     n_iters: int
     converged: bool
+    n_host_syncs: int = 0           # device->host objective transfers
+
+
+@functools.lru_cache(maxsize=256)
+def _build_step_fn(cfg: SVMConfig, mesh: Mesh | None,
+                   data_axes: tuple, has_prior: bool):
+    """One-iteration step function for (config, mesh). Module-level and
+    lru-cached so the jit/scan caches are shared across PEMSVM instances
+    with identical configuration (SVMConfig is frozen, hence hashable)."""
+    axes = data_axes if mesh is not None else ()
+    common = dict(mode=cfg.algorithm, lam=cfg.lam, eps=cfg.eps,
+                  jitter=cfg.jitter, axes=tuple(axes),
+                  triangle=cfg.triangle_reduce, backend=cfg.backend,
+                  reduce_dtype=cfg.reduce_dtype)
+
+    if cfg.formulation == "KRN":
+        def step(data, prior, state, key):
+            return krn.krn_step(data, prior, state, key, **common)
+    elif cfg.task == "CLS":
+        def step(data, state, key):
+            return linear.cls_step(data, state, key,
+                                   k_shard_axis=cfg.k_shard_axis,
+                                   **common)
+    elif cfg.task == "SVR":
+        def step(data, state, key):
+            return svr.svr_step(data, state, key,
+                                eps_ins=cfg.eps_ins, **common)
+    else:
+        def step(data, state, key):
+            return multiclass.mlt_step(data, state, key,
+                                       num_classes=cfg.num_classes,
+                                       **common)
+
+    if mesh is None:
+        return step
+    state_spec = P(None, None) if cfg.task == "MLT" else P(None)
+    return distributed.shard_wrap(mesh, data_axes, step,
+                                  state_spec=state_spec,
+                                  has_prior=has_prior)
+
+
+@functools.lru_cache(maxsize=256)
+def _chunk_runner(cfg: SVMConfig, mesh: Mesh | None, data_axes: tuple,
+                  has_prior: bool):
+    """Jitted scan-of-steps chunk runner for the scan driver.
+
+    Runs len(its) iterations fully on device, carrying the MC sample
+    sum and the Sec 5.5 objective-change stopping statistic in scan
+    state, and stacking the per-iteration aux dict as the trace.
+    lru-cached (jit caches key on function identity) so same-config
+    fits never retrace.
+    """
+    step = _build_step_fn(cfg, mesh, data_axes, has_prior)
+    is_mc = cfg.algorithm == "MC"
+
+    def body(operands, carry, it):
+        data, prior, tol_n = operands
+        (state, samp_sum, n_avg, key, prev_obj, n_small, done,
+         it_done) = carry
+        key, sub = jax.random.split(key)
+        args = (data, prior, state, sub) if has_prior else (
+            data, state, sub)
+        new_state, aux = step(*args)
+        obj = aux["objective"]
+        # Freeze every statistic once converged; the loop driver would
+        # have stopped here, so later iterations are exact no-ops.
+        state = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(done, old, new), new_state, state)
+        take = jnp.logical_and(~done, is_mc & (it > cfg.burnin))
+        n_avg_new = n_avg + take.astype(jnp.int32)
+        # Per-chunk fp32 sample sum; the host zeroes it between chunks
+        # and combines the chunk sums in float64 (see _fit_scan).
+        samp_sum = jnp.where(take, samp_sum + new_state, samp_sum)
+        # Paper Sec 5.5 stopping rule on the objective change
+        # (patience > 1 hardens it against flat starts / MC noise,
+        # cf. the paper's multiple-local-minima caveat in 5.13).
+        small = jnp.abs(obj - prev_obj) <= tol_n
+        n_small = jnp.where(done, n_small,
+                            jnp.where(small, n_small + 1, 0))
+        conv_now = jnp.logical_and(
+            ~done,
+            (it >= cfg.min_iters) & (n_small >= cfg.patience)
+            & ((not is_mc) | (n_avg_new >= 1)))
+        it_done = jnp.where(conv_now, it, it_done)
+        prev_obj = jnp.where(done, prev_obj, obj)
+        carry = (state, samp_sum, n_avg_new, key, prev_obj, n_small,
+                 done | conv_now, it_done)
+        return carry, aux
+
+    def runner(data, prior, carry, its, tol_n):
+        return jax.lax.scan(
+            functools.partial(body, (data, prior, tol_n)), carry, its)
+
+    return jax.jit(runner)
 
 
 class PEMSVM:
@@ -118,8 +216,95 @@ class PEMSVM:
         N = X.shape[0]
 
         data, prior, state = self._prepare(X, y)
-        step = self._build_step(prior is not None)
+        if cfg.driver == "loop":
+            step = self._build_step(prior is not None)
+            return self._fit_loop(data, prior, state, step, N)
+        return self._fit_scan(data, prior, state, N)
 
+    def _fit_scan(self, data, prior, state, N: int) -> FitResult:
+        """Chunked on-device driver (DESIGN.md §Perf).
+
+        The per-iteration loop driver blocks on a device->host transfer
+        EVERY iteration (``float(aux["objective"])``), serializing
+        dispatch with compute. Here ``scan_chunk`` iterations run as one
+        ``lax.scan`` with the MC sample accumulator and the Sec 5.5
+        objective-change stopping statistic carried in scan state; the
+        host sees one transfer per chunk (the stacked aux trace plus the
+        convergence flags) and decides whether to launch the next chunk.
+        Total host syncs <= ceil(max_iters / scan_chunk).
+
+        The MC posterior average accumulates a per-chunk fp32 sample sum
+        on device and combines the chunk sums in float64 on host, so its
+        rounding error matches the loop driver's f64 running mean to
+        within one chunk's worth of fp32 additions regardless of chain
+        length.
+
+        Iterations after the in-chunk convergence point still execute
+        (at most scan_chunk - 1 of them, once) but their updates are
+        masked out, so results match the loop driver exactly: the same
+        per-iteration key splits, the same update-then-check ordering,
+        and the trace truncated at the converged iteration.
+        """
+        cfg = self.config
+        runner = _chunk_runner(cfg, self.mesh, tuple(self.data_axes),
+                               prior is not None)
+        tol_n = jnp.float32(cfg.tol * N)
+        carry = (
+            state,                          # current weight / sample
+            jnp.zeros_like(state),          # this chunk's MC sample sum
+            jnp.int32(0),                   # total samples accumulated
+            jax.random.PRNGKey(cfg.seed),   # iteration key chain
+            jnp.float32(jnp.inf),           # previous objective
+            jnp.int32(0),                   # consecutive small-change count
+            jnp.asarray(False),             # converged flag
+            jnp.int32(0),                   # iteration convergence hit
+        )
+        objs: list[float] = []
+        aux_hist: dict[str, list] = {}
+        samp_sum = np.zeros(np.shape(state), np.float64)
+        n_syncs = 0
+        it0 = 0
+        converged = False
+        it_done = 0
+        while it0 < cfg.max_iters:
+            chunk = min(cfg.scan_chunk, cfg.max_iters - it0)
+            its = jnp.arange(it0 + 1, it0 + chunk + 1, dtype=jnp.int32)
+            carry, aux_stack = runner(data, prior, carry, its, tol_n)
+            # The single per-chunk host sync: flags, the chunk's sample
+            # sum, and the stacked aux trace in one transfer.
+            aux_np, chunk_sum, done_np, it_done_np = jax.device_get(
+                (aux_stack, carry[1], carry[6], carry[7]))
+            converged = bool(done_np)
+            it_done = int(it_done_np)
+            n_syncs += 1
+            samp_sum += np.asarray(chunk_sum, np.float64)
+            carry = (carry[0], jnp.zeros_like(carry[1])) + carry[2:]
+            valid = (it_done - it0) if converged else chunk
+            objs.extend(float(v) for v in aux_np["objective"][:valid])
+            for k, v in aux_np.items():
+                aux_hist.setdefault(k, []).extend(
+                    float(x) for x in v[:valid])
+            it0 += chunk
+            if converged:
+                break
+
+        n_iters = it_done if converged else it0
+        last = np.asarray(carry[0], np.float32)
+        n_avg = int(carry[2])
+        weights = ((samp_sum / n_avg).astype(np.float32)
+                   if n_avg > 0 else last)
+        self._weights = weights
+        return FitResult(weights=weights, last_sample=last, objective=objs,
+                         aux_history=aux_hist, n_iters=n_iters,
+                         converged=converged, n_host_syncs=n_syncs)
+
+    def _fit_loop(self, data, prior, state, step, N: int) -> FitResult:
+        """Per-iteration Python driver: one host sync per iteration.
+
+        Kept as the semantic oracle for the scan driver (tests compare
+        the two traces) and as an escape hatch for step functions whose
+        aux is not scan-stackable."""
+        cfg = self.config
         key = jax.random.PRNGKey(cfg.seed)
         objs: list[float] = []
         aux_hist: dict[str, list] = {}
@@ -142,9 +327,7 @@ class PEMSVM:
                 mean_w = w_np if mean_w is None else (
                     mean_w * n_avg + w_np) / (n_avg + 1)
                 n_avg += 1
-            # Paper Sec 5.5 stopping rule on the objective change
-            # (patience > 1 hardens it against flat starts / MC noise,
-            # cf. the paper's own multiple-local-minima caveat in 5.13).
+            # Paper Sec 5.5 stopping rule on the objective change.
             if len(objs) >= 2 and abs(objs[-1] - objs[-2]) <= cfg.tol * N:
                 n_small += 1
             else:
@@ -159,7 +342,8 @@ class PEMSVM:
                    if mean_w is not None else last)
         self._weights = weights
         return FitResult(weights=weights, last_sample=last, objective=objs,
-                         aux_history=aux_hist, n_iters=it, converged=converged)
+                         aux_history=aux_hist, n_iters=it,
+                         converged=converged, n_host_syncs=len(objs))
 
     # ------------------------------------------------------ setup helpers
     def _prepare(self, X: np.ndarray, y: np.ndarray):
@@ -217,37 +401,8 @@ class PEMSVM:
         return data, None, state
 
     def _build_step(self, has_prior: bool):
-        cfg = self.config
-        axes = self.data_axes if self.mesh is not None else ()
-        common = dict(mode=cfg.algorithm, lam=cfg.lam, eps=cfg.eps,
-                      jitter=cfg.jitter, axes=tuple(axes),
-                      triangle=cfg.triangle_reduce, backend=cfg.backend,
-                      reduce_dtype=cfg.reduce_dtype)
-
-        if cfg.formulation == "KRN":
-            def step(data, prior, state, key):
-                return krn.krn_step(data, prior, state, key, **common)
-        elif cfg.task == "CLS":
-            def step(data, state, key):
-                return linear.cls_step(data, state, key,
-                                       k_shard_axis=cfg.k_shard_axis,
-                                       **common)
-        elif cfg.task == "SVR":
-            def step(data, state, key):
-                return svr.svr_step(data, state, key,
-                                    eps_ins=cfg.eps_ins, **common)
-        else:
-            def step(data, state, key):
-                return multiclass.mlt_step(data, state, key,
-                                           num_classes=cfg.num_classes,
-                                           **common)
-
-        if self.mesh is None:
-            return step
-        state_spec = P(None, None) if cfg.task == "MLT" else P(None)
-        return distributed.shard_wrap(self.mesh, self.data_axes, step,
-                                      state_spec=state_spec,
-                                      has_prior=has_prior)
+        return _build_step_fn(self.config, self.mesh,
+                              tuple(self.data_axes), has_prior)
 
     # ---------------------------------------------------------- inference
     def decision_function(self, X: np.ndarray) -> np.ndarray:

@@ -49,7 +49,7 @@ def svr_step(data: SVMData, w: jnp.ndarray, key: jax.Array, *,
     omega = augment.update_gamma(mode, k_hi, res + eps_ins, eps)
 
     weights = 1.0 / gamma + 1.0 / omega
-    S = ops.weighted_gram(X, weights, backend=backend)
+    S = ops.syrk_tri(X, weights, backend=backend)
     coef = (y - eps_ins) / gamma + (y + eps_ins) / omega
     b = X.astype(jnp.float32).T @ coef
     S, b = stats.reduce_stats(S, b, axes, triangle=triangle,

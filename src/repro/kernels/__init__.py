@@ -4,12 +4,17 @@ The paper (Sec 5.14) offloads the rate-limiting statistic
 Sigma_d (1/gamma_d) x_d x_d^T to a GPU kernel; this package is the
 TPU-native counterpart (see DESIGN.md §3):
 
-  * weighted_gram — X^T diag(w) X, MXU-tiled weighted SYRK.
+  * weighted_gram — X^T diag(w) X, MXU-tiled weighted SYRK (dense grid).
+  * syrk_tri      — same statistic over only the lower-triangle block
+                    pairs (~2x fewer FLOPs; DESIGN.md §Perf).
   * fused_estep   — margin -> gamma -> mu-numerator in one HBM pass.
+  * fused_stats   — the WHOLE iteration statistic (margin, gamma, b,
+                    Sigma) in a single X pass (one HBM stream/iter).
   * rbf_gram      — tiled RBF Gram blocks for the KRN formulation.
 
 ``ops`` holds the backend-dispatching public wrappers; ``ref`` the pure-jnp
 oracles used as ground truth and as the CPU path.
 """
 from . import ops, ref  # noqa: F401
-from .ops import fused_estep, rbf_gram, weighted_gram  # noqa: F401
+from .ops import (fused_estep, fused_stats, rbf_gram, syrk_tri,  # noqa: F401
+                  weighted_gram)

@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: the WHOLE per-iteration statistic in one X pass.
+
+``fused_estep`` already fuses (margin, gamma, b); the Sigma statistic was
+a second full pass over X (``weighted_gram``/``syrk_tri``). This kernel
+emits all four outputs of one EM iteration from a single ``pallas_call``:
+
+    margin_d = w^T x_d
+    gamma_d  = max(eps, |rho_d - margin_d|)          (paper Eq. 9/36)
+    b        = sum_d (rho_d/gamma_d + beta_d) x_d    (Eq. 6/39 numerator)
+    S        = sum_d (m_d/gamma_d) x_d x_d^T         (Sigma^p, Table 9)
+
+so X streams HBM->VMEM ONCE per iteration instead of twice — on a
+memory-bound statistic that halves iteration HBM traffic (DESIGN.md
+§Perf). ``m_d`` is an optional extra weight mask on the Sigma weights
+only (the KRN path suppresses padded Gram rows with it; LIN passes ones).
+
+Grid is 1-D over N-blocks; each step holds a (bn, K) X tile, the (K, 1)
+weight vector and the full (K, K) fp32 Sigma accumulator in VMEM. That
+accumulator bounds the usable K: K <= ~1500 fits the ~16 MB VMEM budget
+with bn=512 (K*K*4B + 2*bn*K*4B). Larger K should use ``syrk_tri`` +
+``fused_estep`` (two passes, tiled K). The SVM regime of the paper
+(K = 54..800 after bias) sits comfortably inside.
+
+Unlike ``syrk_tri`` the Sigma accumulation here is a dense rank-bn
+update: the triangle trick does not compose with single-pass streaming
+(a triangle block grid must revisit X tiles per (i, j) pair, which is
+exactly the second pass we are eliminating). Dense-SYRK FLOPs at half
+the HBM traffic vs half the FLOPs at full traffic — the roofline in
+DESIGN.md §Perf says fused wins whenever the statistic is memory-bound,
+i.e. precisely when N >> K.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _make_kernel(eps: float):
+    def _kernel(x_ref, rho_ref, beta_ref, wmask_ref, w_ref,
+                margin_ref, gamma_ref, b_ref, s_ref):
+        x = x_ref[...].astype(jnp.float32)          # (bn, K)
+        wv = w_ref[...].astype(jnp.float32)         # (K, 1)
+        rho = rho_ref[...].astype(jnp.float32)      # (bn, 1)
+        beta = beta_ref[...].astype(jnp.float32)    # (bn, 1)
+        wmask = wmask_ref[...].astype(jnp.float32)  # (bn, 1)
+
+        margin = jax.lax.dot_general(                # (bn, 1) on the MXU
+            x, wv, dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        margin_ref[...] = margin
+        gamma = jnp.maximum(jnp.abs(rho - margin), eps)
+        gamma_ref[...] = gamma
+        coef = rho / gamma + beta                    # (bn, 1)
+
+        @pl.when(pl.program_id(0) == 0)
+        def _init():
+            b_ref[...] = jnp.zeros_like(b_ref)
+            s_ref[...] = jnp.zeros_like(s_ref)
+
+        b_ref[...] += jax.lax.dot_general(           # x^T coef: (K, 1)
+            x, coef, dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        xw = x * (wmask / gamma)                     # (bn, K) weighted rows
+        s_ref[...] += jax.lax.dot_general(           # x^T diag(m/gamma) x
+            xw, x, dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    return _kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("eps", "block_n", "interpret"))
+def fused_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
+                wvec: jnp.ndarray, wmask: jnp.ndarray | None = None, *,
+                eps: float = 1e-6, block_n: int = 512,
+                interpret: bool = False):
+    """Returns (margin (N,), gamma (N,), b (K,), S (K, K)), all f32.
+
+    X: (N, K); rho/beta/wmask: (N,); wvec: (K,). Zero-padded rows carry
+    rho = beta = 0 so coef is exactly 0, and their X-row is 0 so the S
+    contribution vanishes regardless of the padded gamma value.
+    """
+    N, K = X.shape
+    if wmask is None:
+        wmask = jnp.ones((N,), jnp.float32)
+    bn = min(block_n, _round_up(N, 8))
+    Kp = _round_up(K, 128)
+    Np = _round_up(N, bn)
+    if (Np, Kp) != (N, K):
+        X = jnp.pad(X, ((0, Np - N), (0, Kp - K)))
+        rho = jnp.pad(rho, (0, Np - N))
+        beta = jnp.pad(beta, (0, Np - N))
+        wmask = jnp.pad(wmask, (0, Np - N))
+        wvec = jnp.pad(wvec, (0, Kp - K))
+
+    grid = (Np // bn,)
+    margin, gamma, b, S = pl.pallas_call(
+        _make_kernel(float(eps)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, Kp), lambda n: (n, 0)),   # X rows
+            pl.BlockSpec((bn, 1), lambda n: (n, 0)),    # rho
+            pl.BlockSpec((bn, 1), lambda n: (n, 0)),    # beta
+            pl.BlockSpec((bn, 1), lambda n: (n, 0)),    # Sigma weight mask
+            pl.BlockSpec((Kp, 1), lambda n: (0, 0)),    # w (replicated)
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, 1), lambda n: (n, 0)),    # margin
+            pl.BlockSpec((bn, 1), lambda n: (n, 0)),    # gamma
+            pl.BlockSpec((Kp, 1), lambda n: (0, 0)),    # b (revisited)
+            pl.BlockSpec((Kp, Kp), lambda n: (0, 0)),   # S (revisited)
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Np, 1), jnp.float32),
+            jax.ShapeDtypeStruct((Np, 1), jnp.float32),
+            jax.ShapeDtypeStruct((Kp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((Kp, Kp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(X, rho.reshape(Np, 1), beta.reshape(Np, 1), wmask.reshape(Np, 1),
+      wvec.reshape(Kp, 1))
+    return margin[:N, 0], gamma[:N, 0], b[:K, 0], S[:K, :K]
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

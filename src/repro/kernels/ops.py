@@ -16,8 +16,10 @@ import jax
 import jax.numpy as jnp
 
 from . import fused_estep as _fused_estep
+from . import fused_stats as _fused_stats
 from . import rbf_gram as _rbf_gram
 from . import ref
+from . import syrk as _syrk
 from . import weighted_gram as _weighted_gram
 
 VALID_BACKENDS = ("ref", "interpret", "pallas")
@@ -42,6 +44,46 @@ def weighted_gram(X: jnp.ndarray, w: jnp.ndarray, *,
         return ref.weighted_gram(X, w)
     return _weighted_gram.weighted_gram(
         X, w, interpret=(backend == "interpret"), **kw)
+
+
+def syrk_tri(X: jnp.ndarray, w: jnp.ndarray, *,
+             backend: str | None = None, **kw) -> jnp.ndarray:
+    """S = X^T diag(w) X computing only lower-triangle blocks (~2x fewer
+    FLOPs than ``weighted_gram``); result is the full symmetric matrix."""
+    backend = _resolve(backend)
+    if backend == "ref":
+        return ref.syrk_tri(X, w)
+    return _syrk.syrk_tri(X, w, interpret=(backend == "interpret"), **kw)
+
+
+# fused_stats holds the full (K, K) fp32 Sigma accumulator in VMEM;
+# past this K the tile no longer fits (~16 MB VMEM with the X tile) and
+# the kernel must not be attempted (DESIGN.md §Perf). Above it, the
+# K-tiled two-pass pair is the correct regime anyway (compute-bound).
+FUSED_STATS_MAX_K = 1536
+
+
+def fused_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
+                wvec: jnp.ndarray, wmask: jnp.ndarray | None = None, *,
+                eps: float = 1e-6, backend: str | None = None, **kw):
+    """(margin, gamma, b, S): the whole EM iteration statistic in one
+    X pass (single HBM stream instead of estep + gram).
+
+    For K > FUSED_STATS_MAX_K the Pallas flavors fall back to the
+    K-tiled split pair (fused_estep + syrk_tri) rather than blow the
+    VMEM budget — callers get the same outputs either way."""
+    backend = _resolve(backend)
+    if backend == "ref":
+        return ref.fused_stats(X, rho, beta, wvec, wmask, eps)
+    if X.shape[1] > FUSED_STATS_MAX_K:
+        kw.pop("block_n", None)
+        margin, gamma, b = fused_estep(X, rho, beta, wvec, eps=eps,
+                                       backend=backend)
+        w = (1.0 / gamma) if wmask is None else wmask / gamma
+        return margin, gamma, b, syrk_tri(X, w, backend=backend)
+    return _fused_stats.fused_stats(
+        X, rho, beta, wvec, wmask, eps=eps,
+        interpret=(backend == "interpret"), **kw)
 
 
 def fused_estep(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,

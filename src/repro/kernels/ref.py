@@ -50,6 +50,29 @@ def fused_estep(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
     return margin, gamma, b
 
 
+def syrk_tri(X: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the triangle-blocked SYRK — identical mathematical
+    content to ``weighted_gram``; the Pallas flavor merely skips the
+    redundant upper-triangle block computations."""
+    return weighted_gram(X, w)
+
+
+def fused_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
+                wvec: jnp.ndarray, wmask: jnp.ndarray | None,
+                eps: float):
+    """One-sweep iteration statistic: fused_estep + the Sigma SYRK.
+
+    S = X^T diag(wmask/gamma) X with gamma from THIS sweep's E-step;
+    wmask defaults to ones (the KRN path passes its row mask).
+
+    Returns:
+      (margin (N,), gamma (N,), b (K,), S (K, K)), all float32.
+    """
+    margin, gamma, b = fused_estep(X, rho, beta, wvec, eps)
+    w = (1.0 / gamma) if wmask is None else wmask.astype(jnp.float32) / gamma
+    return margin, gamma, b, weighted_gram(X, w)
+
+
 def rbf_gram(X1: jnp.ndarray, X2: jnp.ndarray, sigma: float) -> jnp.ndarray:
     """RBF Gram block: K_ij = exp(-||x_i - x_j||^2 / (2 sigma^2)).
 

@@ -26,6 +26,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
+from repro import compat  # noqa: E402
 from repro.configs import SHAPES, applicable, get_config  # noqa: E402
 from repro.launch import hlo_cost  # noqa: E402
 from repro.launch import specs as sp  # noqa: E402
@@ -175,7 +176,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     try:
         mesh, fn, args, in_sh, out_sh, donate = build_cell(
             arch, shape_name, multi_pod, opts)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             if is_svm:     # svm cells arrive pre-wrapped by shard_map
                 jitted = fn
             else:

@@ -146,13 +146,14 @@ class Inst:
 
 def _split_operands(arg_str: str) -> list[str]:
     """Operand names from 'a, %b.2, f32[2]{0} %c, ...)...' up to the
-    matching close paren (depth-aware)."""
+    matching close paren (depth-aware, including the commas inside
+    shape brackets like f32[32,32]{1,0})."""
     names, depth, cur = [], 0, []
     for ch in arg_str:
-        if ch == "(":
+        if ch in "([{":
             depth += 1
             cur.append(ch)
-        elif ch == ")":
+        elif ch in ")]}":
             if depth == 0:
                 break
             depth -= 1

@@ -114,8 +114,9 @@ def seq_parallel_attention(ctx, q, k, v, *, causal=True, q_chunk=1024,
     heads on a 16-way axis -> 16x replicated attention otherwise).
     K/V replication is cheap for small-KV GQA. Falls back to plain
     blockwise attention when S doesn't divide."""
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
 
     B, S = q.shape[0], q.shape[1]
     tp = ctx.tp_axis
@@ -155,8 +156,10 @@ def decode_attn_island(ctx, q, k_cache, v_cache, pos, k_new, v_new):
 
     q/k_new/v_new: (B, 1, H|KVH, dh); caches: (B, S, KVH, dh).
     Returns (attn out (B, 1, H, dh), new k_cache, new v_cache)."""
-    from jax import shard_map  # local import: cycle-free
     from jax.sharding import PartitionSpec as P
+
+    from repro import compat  # local import: cycle-free
+    from repro.compat import shard_map
 
     B, S, KVH, _ = k_cache.shape
     H, dh = q.shape[2], q.shape[3]
@@ -177,7 +180,7 @@ def decode_attn_island(ctx, q, k_cache, v_cache, pos, k_new, v_new):
         S_loc = kc.shape[1]
         off = jnp.int32(0)
         for a in seq_axes:
-            off = off * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+            off = off * compat.axis_size(a) + jax.lax.axis_index(a)
         start = off * S_loc
         rel = pos_ - start
         ok = (rel >= 0) & (rel < S_loc)

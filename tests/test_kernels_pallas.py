@@ -49,6 +49,102 @@ def test_fused_estep_matches_ref(n, k):
                                atol=2e-3 * max(1.0, np.abs(b_r).max()))
 
 
+@pytest.mark.parametrize("n,k", [(64, 32), (100, 37), (512, 256),
+                                 (1000, 130), (9, 513), (300, 600)])
+def test_syrk_tri_matches_ref(n, k):
+    """Triangle-blocked SYRK == dense oracle on non-block-aligned shapes
+    (exercises the flattened-triangular-index block maps + the mirror)."""
+    X, w, _, _ = _data(n, k, np.float32)
+    got = ops.syrk_tri(jnp.asarray(X), jnp.asarray(w), backend="interpret",
+                       block_n=128, block_k=128)
+    want = ref.weighted_gram(jnp.asarray(X), jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3 * np.abs(want).max())
+    # off-diagonal blocks are mirrored (bit-exact); within diagonal
+    # blocks (w*a)*b vs (w*b)*a rounding leaves fp32-epsilon asymmetry
+    # (posterior_params symmetrizes before factorizing).
+    S = np.asarray(got)
+    np.testing.assert_allclose(S, S.T, rtol=1e-5,
+                               atol=1e-5 * max(1.0, np.abs(S).max()))
+
+
+def test_tri_ij_enumerates_lower_triangle():
+    """The integer-arithmetic flattened-index mapping must agree with
+    np.tril_indices (the lookup-table generator) for large grids."""
+    from repro.kernels.syrk import _tri, tri_ij
+    nb = 100
+    i, j = tri_ij(jnp.arange(_tri(nb), dtype=jnp.int32))
+    ii, jj = np.tril_indices(nb)
+    np.testing.assert_array_equal(np.asarray(i), ii)
+    np.testing.assert_array_equal(np.asarray(j), jj)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 200), st.integers(1, 70), st.integers(0, 2 ** 20))
+def test_syrk_tri_hypothesis_shapes(n, k, seed):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, k)).astype(np.float32)
+    w = rng.uniform(0.01, 5.0, size=(n,)).astype(np.float32)
+    got = ops.syrk_tri(jnp.asarray(X), jnp.asarray(w),
+                       backend="interpret", block_n=64, block_k=128)
+    want = (X * w[:, None]).T @ X
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-3,
+                               atol=1e-3 * max(1.0, np.abs(want).max()))
+
+
+@pytest.mark.parametrize("n,k", [(64, 32), (257, 100), (300, 600)])
+@pytest.mark.parametrize("masked", [False, True])
+def test_fused_stats_matches_ref(n, k, masked):
+    """One-sweep (margin, gamma, b, S) == split oracle, odd shapes."""
+    X, _, y, wv = _data(n, k, np.float32)
+    wm = (jnp.asarray((RNG.uniform(size=n) > 0.2).astype(np.float32))
+          if masked else None)
+    got = ops.fused_stats(jnp.asarray(X), jnp.asarray(y), jnp.asarray(y),
+                          jnp.asarray(wv), wm, eps=1e-6,
+                          backend="interpret", block_n=128)
+    want = ref.fused_stats(jnp.asarray(X), jnp.asarray(y), jnp.asarray(y),
+                           jnp.asarray(wv), wm, 1e-6)
+    for g, w_, name in zip(got, want, ("margin", "gamma", "b", "S")):
+        g, w_ = np.asarray(g), np.asarray(w_)
+        np.testing.assert_allclose(
+            g, w_, rtol=2e-3, atol=2e-3 * max(1.0, np.abs(w_).max()),
+            err_msg=name)
+
+
+def test_fused_stats_large_k_falls_back_to_split():
+    """K beyond the VMEM budget must route to the tiled split pair
+    (never attempt the single-pass kernel) and still match the oracle."""
+    n, k = 32, ops.FUSED_STATS_MAX_K + 128
+    X, _, y, _ = _data(n, 8, np.float32)
+    Xw = jnp.asarray(RNG.normal(size=(n, k)).astype(np.float32))
+    wv = jnp.asarray(RNG.normal(size=k).astype(np.float32))
+    got = ops.fused_stats(Xw, jnp.asarray(y), jnp.asarray(y), wv,
+                          eps=1e-6, backend="interpret", block_n=32)
+    want = ref.fused_stats(Xw, jnp.asarray(y), jnp.asarray(y), wv,
+                           None, 1e-6)
+    for g, w_, name in zip(got, want, ("margin", "gamma", "b", "S")):
+        g, w_ = np.asarray(g), np.asarray(w_)
+        np.testing.assert_allclose(
+            g, w_, rtol=2e-3, atol=2e-3 * max(1.0, np.abs(w_).max()),
+            err_msg=name)
+
+
+def test_fused_stats_padded_rows_contribute_nothing():
+    """Zero rows with rho=beta=0 must be exact no-ops for b and S."""
+    X, _, y, wv = _data(96, 24, np.float32)
+    Xp = np.concatenate([X, np.zeros((32, 24), np.float32)])
+    yp = np.concatenate([y, np.zeros(32, np.float32)])
+    a = ops.fused_stats(jnp.asarray(Xp), jnp.asarray(yp), jnp.asarray(yp),
+                        jnp.asarray(wv), eps=1e-6, backend="interpret",
+                        block_n=64)
+    b = ref.fused_stats(jnp.asarray(X), jnp.asarray(y), jnp.asarray(y),
+                        jnp.asarray(wv), None, 1e-6)
+    np.testing.assert_allclose(np.asarray(a[2]), np.asarray(b[2]),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(a[3]), np.asarray(b[3]),
+                               rtol=1e-4, atol=1e-4)
+
+
 @pytest.mark.parametrize("n1,n2,k,sigma", [(64, 64, 16, 1.0),
                                            (100, 37, 8, 0.5),
                                            (129, 257, 33, 2.0)])

@@ -1,0 +1,159 @@
+"""The chunked lax.scan fit driver vs the per-iteration loop driver.
+
+The scan driver must reproduce the loop driver's semantics exactly —
+same key chain, same update-then-check ordering, trace truncated at the
+converged iteration — while syncing with the host at most once per
+``scan_chunk`` iterations."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import PEMSVM, SVMConfig
+
+
+def _fit_pair(options, X, y, max_iters=40, **kw):
+    scan = PEMSVM(SVMConfig.from_options(options, max_iters=max_iters, **kw))
+    loop = PEMSVM(SVMConfig.from_options(options, max_iters=max_iters,
+                                         driver="loop", **kw))
+    return scan, scan.fit(X, y), loop, loop.fit(X, y)
+
+
+def test_scan_matches_loop_on_quickstart(blobs):
+    """Same objective trace (fp32 tolerance) and same converged accuracy
+    as the per-iteration loop on the quickstart problem."""
+    X, y = blobs
+    scan, rs, loop, rl = _fit_pair("LIN-EM-CLS", X, y, max_iters=100,
+                                   lam=1.0)
+    assert rs.n_iters == rl.n_iters
+    assert rs.converged == rl.converged
+    np.testing.assert_allclose(rs.objective, rl.objective, rtol=1e-5)
+    np.testing.assert_allclose(rs.weights, rl.weights, rtol=1e-4,
+                               atol=1e-5)
+    assert scan.score(X, y) == loop.score(X, y)
+
+
+def test_scan_host_sync_budget(blobs):
+    """At most ceil(max_iters / scan_chunk) objective transfers."""
+    X, y = blobs
+    for max_iters, chunk in ((100, 16), (40, 7), (30, 64)):
+        cfg = SVMConfig(max_iters=max_iters, scan_chunk=chunk, tol=0.0,
+                        min_iters=max_iters)  # force the full budget
+        res = PEMSVM(cfg).fit(X, y)
+        assert res.n_host_syncs <= math.ceil(max_iters / chunk), (
+            max_iters, chunk, res.n_host_syncs)
+        assert res.n_iters == max_iters
+        assert len(res.objective) == max_iters
+
+
+def test_scan_early_stop_truncates_trace(blobs):
+    """Convergence mid-chunk: trace and n_iters stop AT the converged
+    iteration even though the chunk ran to its end on device."""
+    X, y = blobs
+    cfg = SVMConfig(max_iters=100, scan_chunk=64)
+    res = PEMSVM(cfg).fit(X, y)
+    assert res.converged
+    assert res.n_iters < 100
+    assert len(res.objective) == res.n_iters
+    assert res.n_host_syncs <= math.ceil(res.n_iters / 64) + 1
+
+
+@pytest.mark.parametrize("options,kw", [
+    ("LIN-EM-CLS", {}),
+    ("LIN-EM-SVR", dict(eps_ins=0.3)),
+    ("LIN-EM-MLT", dict(num_classes=3)),
+    ("KRN-EM-CLS", dict(lam=0.1, sigma=1.0)),
+])
+def test_scan_matches_loop_all_em_tasks(options, kw):
+    """Deterministic EM: scan and loop traces agree on every task."""
+    rng = np.random.default_rng(7)
+    N, K = 600, 10
+    X = rng.normal(size=(N, K)).astype(np.float32)
+    if options.endswith("SVR"):
+        y = (X @ rng.normal(size=K)).astype(np.float32)
+    elif options.endswith("MLT"):
+        y = np.argmax(X @ rng.normal(size=(3, K)).T, 1).astype(np.int32)
+    else:
+        y = np.where(X @ rng.normal(size=K) > 0, 1.0, -1.0)
+    _, rs, _, rl = _fit_pair(options, X, y, max_iters=25, **kw)
+    assert rs.n_iters == rl.n_iters
+    np.testing.assert_allclose(rs.objective, rl.objective, rtol=1e-4,
+                               atol=1e-4 * max(1.0, abs(rl.objective[0])))
+
+
+@pytest.mark.parametrize("options", ["LIN-MC-CLS", "LIN-MC-SVR",
+                                     "LIN-MC-MLT", "KRN-MC-CLS"])
+def test_scan_mc_tasks_match_loop_start_and_quality(options, blobs):
+    """MC chains are chaotic in fp32 (in-scan fusion reassociates sums),
+    so demand key-chain identity via the first iteration's objective and
+    equivalent converged quality, not trace-long equality."""
+    rng = np.random.default_rng(3)
+    if options.endswith("SVR"):
+        X = rng.normal(size=(600, 10)).astype(np.float32)
+        y = (X @ rng.normal(size=10)).astype(np.float32)
+        kw = dict(eps_ins=0.3)
+    elif options.endswith("MLT"):
+        X = rng.normal(size=(600, 10)).astype(np.float32)
+        y = np.argmax(X @ rng.normal(size=(3, 10)).T, 1).astype(np.int32)
+        kw = dict(num_classes=3)
+    elif options.startswith("KRN"):
+        from repro.data import make_circles
+        X, y = make_circles(250)
+        kw = dict(lam=0.1, sigma=0.7)
+    else:
+        X, y = blobs
+        kw = {}
+    scan, rs, loop, rl = _fit_pair(options, X, y, max_iters=35, **kw)
+    np.testing.assert_allclose(rs.objective[0], rl.objective[0], rtol=1e-3)
+    s_scan, s_loop = scan.score(X, y), loop.score(X, y)
+    if options.endswith("SVR"):
+        assert abs(s_scan - s_loop) < 0.1, (s_scan, s_loop)
+    else:
+        assert abs(s_scan - s_loop) < 0.05, (s_scan, s_loop)
+    # posterior averaging must be in effect in both drivers
+    assert not np.allclose(rs.weights, rs.last_sample)
+
+
+def test_scan_mc_average_matches_loop_exactly_when_trajectory_agrees(blobs):
+    """On a short deterministic-burnin run the two drivers share the key
+    chain; the running averages must then agree to fp32."""
+    X, y = blobs
+    _, rs, _, rl = _fit_pair("LIN-MC-CLS", X, y, max_iters=14,
+                             min_iters=14, burnin=10)
+    np.testing.assert_allclose(rs.weights, rl.weights, rtol=5e-4,
+                               atol=5e-4)
+
+
+def test_scan_chunk_size_invariance(blobs):
+    """The chunking must be invisible: different scan_chunk values give
+    the same trace."""
+    X, y = blobs
+    traces = []
+    for chunk in (1, 5, 16, 128):
+        res = PEMSVM(SVMConfig(max_iters=30, min_iters=30,
+                               scan_chunk=chunk)).fit(X, y)
+        traces.append(np.array(res.objective))
+    for t in traces[1:]:
+        np.testing.assert_allclose(t, traces[0], rtol=1e-6)
+
+
+def test_k_shard_indivisible_K_raises():
+    """_k_block must refuse (not silently truncate) K % axis_size != 0.
+
+    Single-device check of the validation logic via direct call."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import make_mesh, shard_map
+    from repro.core.linear import _k_block
+
+    mesh = make_mesh((1,), ("model",))
+
+    def f(x):
+        return jnp.asarray(_k_block(x, "model")[0])
+
+    # K=7 divisible by axis size 1 -> fine
+    g = shard_map(f, mesh=mesh, in_specs=(P(None, None),),
+                  out_specs=P(), check_vma=False)
+    assert int(jax.jit(g)(jnp.zeros((4, 7)))) == 0
