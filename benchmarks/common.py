@@ -1,7 +1,10 @@
-"""Shared benchmark utilities: timing, CSV emission, scaled-down dataset
-sizes (full paper sizes via --full; CPU-friendly defaults otherwise)."""
+"""Shared benchmark utilities: timing, CSV emission, JSON history
+append, scaled-down dataset sizes (full paper sizes via --full;
+CPU-friendly defaults otherwise)."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 
@@ -24,3 +27,21 @@ def emit(rows: list[dict], name: str):
         derived = ";".join(f"{k}={v}" for k, v in r.items()
                            if k not in ("name", "us_per_call", "seconds"))
         print(f"{name}/{r['name']},{us:.1f},{derived}")
+
+
+def append_json(rows: list[dict], path: str):
+    """Append one timestamped record to a cross-PR benchmark history
+    file (a JSON list; unreadable/corrupt histories restart empty)."""
+    import jax
+
+    payload = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            payload = []
+    payload.append({"timestamp": time.time(),
+                    "jax_backend": jax.default_backend(), "rows": rows})
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)

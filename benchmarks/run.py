@@ -17,8 +17,8 @@ def main() -> None:
     args, _ = ap.parse_known_args()
 
     from . import (fig2_cores, fig34_scaling, fig56_convergence, roofline,
-                   table5_dna, table6_svr, table7_krn, table8_mlt,
-                   table9_gram)
+                   stream_vs_resident, table5_dna, table6_svr, table7_krn,
+                   table8_mlt, table9_gram)
     benches = {
         "table5_dna": table5_dna.run,
         "table6_svr": table6_svr.run,
@@ -29,6 +29,7 @@ def main() -> None:
         "fig34_scaling": fig34_scaling.run,
         "fig56_convergence": fig56_convergence.run,
         "roofline": roofline.run,
+        "stream_vs_resident": stream_vs_resident.run,
     }
     only = [x for x in args.only.split(",") if x]
     failed = []

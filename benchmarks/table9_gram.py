@@ -20,7 +20,6 @@ tracked across PRs (scripts/bench_smoke.py runs a tiny version in CI).
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 
@@ -30,7 +29,7 @@ import numpy as np
 
 from repro.kernels import ops
 
-from .common import emit
+from .common import append_json, emit
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -125,20 +124,6 @@ def bench_fused_stats(n: int, k: int, *, block_n: int = 512,
     return rows
 
 
-def _append_json(rows: list[dict]):
-    payload = []
-    if os.path.exists(BENCH_JSON):
-        try:
-            with open(BENCH_JSON) as f:
-                payload = json.load(f)
-        except (json.JSONDecodeError, OSError):
-            payload = []
-    payload.append({"timestamp": time.time(),
-                    "jax_backend": jax.default_backend(), "rows": rows})
-    with open(BENCH_JSON, "w") as f:
-        json.dump(payload, f, indent=1)
-
-
 def run(n: int = 250_000, k: int = 500, full: bool = False,
         bench_n: int = 1024):
     # Kernel-grid comparisons FIRST: on quota-throttled CI runners a
@@ -188,5 +173,5 @@ def run(n: int = 250_000, k: int = 500, full: bool = False,
     rows += tri_rows + fused_rows
 
     emit(rows, "table9_gram")
-    _append_json(rows)
+    append_json(rows, BENCH_JSON)
     return rows

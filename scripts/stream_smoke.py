@@ -1,0 +1,68 @@
+#!/usr/bin/env python
+"""CPU streaming smoke for CI: tiny libsvm file -> ``driver="stream"``
+fit -> weight parity against the resident scan driver.
+
+Writes a small classification dataset (with comment/blank lines, to
+exercise the hardened parser) to a tmpdir in libsvm format, fits it
+out-of-core with chunk_rows < N/8, and gates on:
+
+  * final-weight parity with the resident fit (<= 1e-4 rel-err — the
+    deterministic EM path, so this IS gateable on noisy CI machines);
+  * peak device input residency <= (prefetch+2) chunks.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> int:
+    import numpy as np
+
+    from repro.core import PEMSVM, SVMConfig
+    from repro.data import save_libsvm
+
+    rng = np.random.default_rng(0)
+    N, K = 800, 12
+    X = rng.normal(size=(N, K)).astype(np.float32)
+    X *= rng.random(size=(N, K)) > 0.3          # sparsity, like real libsvm
+    y = np.where(X @ rng.normal(size=K) + 0.2 * rng.normal(size=N) > 0,
+                 1.0, -1.0)
+
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "smoke.libsvm")
+        save_libsvm(path, X, y)
+        lines = open(path).read().splitlines()
+        with open(path, "w") as f:
+            f.write("# stream_smoke dataset\n\n")
+            for i, ln in enumerate(lines):
+                f.write(ln + ("  # sv" if i % 13 == 0 else "") + "\n")
+
+        kw = dict(eps=1e-2, max_iters=20, min_iters=20)
+        resident = PEMSVM(SVMConfig(**kw)).fit(X, y)
+        chunk_rows = 64                          # < N/8 = 100
+        model = PEMSVM(SVMConfig(driver="stream", chunk_rows=chunk_rows,
+                                 prefetch=2, **kw))
+        streamed = model.fit_libsvm(path, n_features=K)
+
+    rel = (np.abs(streamed.weights - resident.weights).max()
+           / np.abs(resident.weights).max())
+    # (prefetch + 2) chunks: queued + worker in-hand + consumer
+    bound = 4 * (chunk_rows * (K + 1) * 4 + 2 * chunk_rows * 4)
+    print(f"weights rel-err: {rel:.3e}   "
+          f"peak input bytes: {streamed.peak_input_bytes} (bound {bound})")
+    if rel > 1e-4:
+        print("STREAM PARITY FAIL")
+        return 1
+    if not 0 < streamed.peak_input_bytes <= bound:
+        print("STREAM RESIDENCY FAIL")
+        return 1
+    print("stream smoke complete")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

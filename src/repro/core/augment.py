@@ -55,12 +55,41 @@ def gamma_mc(key: jax.Array, residual: jnp.ndarray, eps: float) -> jnp.ndarray:
     return jnp.maximum(1.0 / jnp.maximum(inv_gamma, 1.0 / _MU_MAX), eps)
 
 
+def gamma_mc_rowwise(key: jax.Array, residual: jnp.ndarray, eps: float,
+                     row0: jnp.ndarray | int) -> jnp.ndarray:
+    """Gibbs gamma update with one PRNG key per *global* row.
+
+    Row d draws from ``fold_in(key, row0 + d)``, so the sampled gammas
+    depend only on (iteration key, global row index) — NOT on how the
+    rows are batched. Streaming chunk accumulation (any chunk_rows),
+    the in-memory drivers, and mesh row-sharding therefore all produce
+    bitwise-identical draws, which is what makes the out-of-core
+    ``driver="stream"`` exactly reproducible against the in-memory
+    oracle for MC (DESIGN.md §Perf/Streaming). Costs one extra threefry
+    hash per row — O(N), noise next to the O(NK^2) Sigma statistic.
+    """
+    n = residual.shape[0]
+    ids = jnp.asarray(row0, jnp.int32) + jnp.arange(n, dtype=jnp.int32)
+    keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(key, ids)
+    r = jnp.abs(residual.astype(jnp.float32))
+    mu = jnp.minimum(1.0 / jnp.maximum(r, 1.0 / _MU_MAX), _MU_MAX)
+    inv_gamma = jax.vmap(sample_inverse_gaussian)(keys, mu)
+    return jnp.maximum(1.0 / jnp.maximum(inv_gamma, 1.0 / _MU_MAX), eps)
+
+
 def update_gamma(mode: str, key: jax.Array | None, residual: jnp.ndarray,
-                 eps: float) -> jnp.ndarray:
-    """Dispatch EM vs MC gamma update on a residual rho - w^T x."""
+                 eps: float, row0: jnp.ndarray | int | None = None
+                 ) -> jnp.ndarray:
+    """Dispatch EM vs MC gamma update on a residual rho - w^T x.
+
+    ``row0`` selects the chunking-invariant rowwise MC draw (the LIN
+    paths pass the chunk/shard's global row offset); None keeps the
+    batch draw (KRN, and direct callers)."""
     if mode == "EM":
         return gamma_em(residual.astype(jnp.float32), eps)
     if mode == "MC":
         assert key is not None, "MC gamma update needs a PRNG key"
-        return gamma_mc(key, residual, eps)
+        if row0 is None:
+            return gamma_mc(key, residual, eps)
+        return gamma_mc_rowwise(key, residual, eps, row0)
     raise ValueError(f"mode must be 'EM' or 'MC', got {mode!r}")

@@ -36,6 +36,7 @@ from repro import compat
 from repro.compat import shard_map
 
 from .linear import SVMData
+from .stats import shard_row_offset  # noqa: F401 — re-export (public API)
 
 
 def data_axes_of(mesh: Mesh, model_axes: Sequence[str] = ()) -> tuple[str, ...]:

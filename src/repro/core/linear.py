@@ -39,11 +39,24 @@ class SVMData(NamedTuple):
     mask: jnp.ndarray    # (N,) 1.0 valid / 0.0 padding
 
 
-def local_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
-                w: jnp.ndarray, *, mode: str, key: jax.Array | None,
-                eps: float, backend: str | None):
-    """(margin, gamma, Sigma^p, mu^p) for the generic hinge — shared by
-    CLS (rho=beta=y) and each Crammer-Singer class update.
+def accumulate_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
+                     w: jnp.ndarray, *, mode: str, key: jax.Array | None,
+                     eps: float, backend: str | None,
+                     row0: jnp.ndarray | int = 0):
+    """(margin, gamma, Sigma^p, mu^p) for the generic hinge over one row
+    block — THE chunk-callable statistic every driver shares: the
+    in-memory drivers call it on the whole (padded) set, the mesh SPMD
+    step calls it on the local shard, and ``driver="stream"`` calls it
+    per chunk and sums (the statistics are exact sums over rows, paper
+    Fig. 1, so chunk accumulation is exact). Shared by CLS (rho=beta=y)
+    and each Crammer-Singer class update.
+
+    Padded rows (X-row = 0, rho = beta = 0) contribute exactly zero to
+    Sigma and b, so a partially-valid block needs no special casing.
+
+    ``row0`` is the block's global row offset: MC gamma draws are keyed
+    per global row (``augment.gamma_mc_rowwise``) so the sampled chain
+    is invariant to chunking and sharding layout.
 
     EM streams X once through ``fused_stats`` (margin, gamma, b and
     Sigma in a single HBM pass); MC needs the gamma draw between the
@@ -55,11 +68,15 @@ def local_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
                                               backend=backend)
     else:
         margin = X.astype(jnp.float32) @ w.astype(jnp.float32)
-        gamma = augment.gamma_mc(key, rho - margin, eps)
+        gamma = augment.gamma_mc_rowwise(key, rho - margin, eps, row0)
         coef = rho.astype(jnp.float32) / gamma + beta.astype(jnp.float32)
         b = X.astype(jnp.float32).T @ coef
         S = ops.syrk_tri(X, 1.0 / gamma, backend=backend)
     return margin, gamma, S, b
+
+
+# Back-compat name: pre-streaming callers knew this as local_stats.
+local_stats = accumulate_stats
 
 
 def _k_block(S_or_X, axis_name):
@@ -92,14 +109,15 @@ def cls_step(data: SVMData, w: jnp.ndarray, key: jax.Array, *,
              reduce_dtype: str | None = None):
     """One LIN-*-CLS iteration. Returns (w_new, aux dict)."""
     X, y, mask = data
-    gkey = key
-    if axes:  # per-shard gamma draws, shared w draw (replication invariant)
-        for ax in axes:
-            gkey = jax.random.fold_in(gkey, jax.lax.axis_index(ax))
+    # Rowwise MC draws are keyed by global row index, so shards need no
+    # per-shard key folds — the row offset decorrelates them and keeps
+    # the chain identical to the single-device and streaming drivers.
+    row0 = stats.shard_row_offset(X.shape[0], axes)
 
     if k_shard_axis is None:
-        margin, gamma, S, b = local_stats(
-            X, y, y, w, mode=mode, key=gkey, eps=eps, backend=backend)
+        margin, gamma, S, b = accumulate_stats(
+            X, y, y, w, mode=mode, key=key, eps=eps, backend=backend,
+            row0=row0)
         S, b = stats.reduce_stats(S, b, axes, triangle=triangle,
                                   reduce_dtype=reduce_dtype)
     else:
@@ -110,7 +128,7 @@ def cls_step(data: SVMData, w: jnp.ndarray, key: jax.Array, *,
                                                backend=backend)
         else:
             margin = X.astype(jnp.float32) @ w.astype(jnp.float32)
-            gamma = augment.gamma_mc(gkey, y - margin, eps)
+            gamma = augment.gamma_mc_rowwise(key, y - margin, eps, row0)
             b = X.astype(jnp.float32).T @ (y / gamma + y)
         start, blk = _k_block(X, k_shard_axis)
         Xcols = jax.lax.dynamic_slice_in_dim(X, start, blk, axis=1)
@@ -128,6 +146,30 @@ def cls_step(data: SVMData, w: jnp.ndarray, key: jax.Array, *,
     return w_new, {"objective": obj,
                    "gamma_mean": stats.masked_mean(gamma, mask, axes),
                    "n_sv": n_sv}
+
+
+def cls_chunk_stats(chunk: SVMData, w: jnp.ndarray, key: jax.Array,
+                    row0: jnp.ndarray, *, mode: str, eps: float,
+                    backend: str | None) -> dict:
+    """Streaming E-step body for CLS: one chunk's additive contributions.
+
+    Every field is an exact sum over the chunk's valid rows, so the
+    stream driver tree-sums these dicts across chunks and lands on the
+    same (Sigma, b, loss, aux) the in-memory step computes in one shot
+    (padded rows contribute zero by the layout convention).
+    """
+    X, y, mask = chunk
+    margin, gamma, S, b = accumulate_stats(
+        X, y, y, w, mode=mode, key=key, eps=eps, backend=backend,
+        row0=row0)
+    return {
+        "S": S,
+        "b": b,
+        "loss": objective.hinge_obj_terms(margin, y, mask),
+        "gamma_sum": jnp.sum(gamma * mask),
+        "mask_sum": jnp.sum(mask),
+        "n_sv": jnp.sum(mask * (gamma <= 2.0 * eps)),
+    }
 
 
 def decision_function(w: jnp.ndarray, X: jnp.ndarray) -> jnp.ndarray:

@@ -9,11 +9,19 @@ class-y conditional is a *binary-style* augmented problem with
   beta_d^y  = +1 if y == y_d else -1                        (Eq. 34-35)
 
 then gamma_{yd} = |rho_d^y - w_y^T x_d| (Eq. 36) and the Gaussian step
-Eq. 38-39 — i.e. exactly ``linear.local_stats`` with per-class (rho, beta).
-Delta is the standard 0/1 cost. Iteration time is M x LIN (paper Sec 4.3).
+Eq. 38-39 — i.e. exactly ``linear.accumulate_stats`` with per-class
+(rho, beta). Delta is the standard 0/1 cost. Iteration time is M x LIN
+(paper Sec 4.3).
 
 The class loop maintains the score matrix F = X W^T and refreshes only
 column y after updating w_y (one GEMV instead of a full GEMM per class).
+The streaming path (``mlt_class_chunk_stats``) instead *recomputes* the
+chunk's F from the current W each pass — mathematically identical,
+because the incrementally-maintained F's columns are exactly X w_c for
+each class c at its current value — trading O(NKM^2) extra margin
+FLOPs per sweep (each of the M class passes rebuilds the (N, M) score
+matrix) for never holding N rows at once; Sigma's O(NK^2 M) still
+dominates while M < K.
 """
 from __future__ import annotations
 
@@ -24,7 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from . import objective, stats
-from .linear import SVMData, local_stats
+from .linear import SVMData, accumulate_stats
 
 _NEG = -1e30
 
@@ -45,6 +53,36 @@ def _rho_beta(F: jnp.ndarray, labels: jnp.ndarray, y: jnp.ndarray,
     return rho, beta
 
 
+def mlt_class_chunk_stats(chunk: SVMData, W: jnp.ndarray, key: jax.Array,
+                          row0: jnp.ndarray, y: jnp.ndarray, *,
+                          num_classes: int, mode: str, eps: float,
+                          backend: str | None) -> dict:
+    """Streaming class-y E-step body: one chunk's (Sigma, b) contribution.
+
+    Recomputes the chunk's score matrix from the *current* W (classes
+    before y already updated this sweep), reproducing the in-memory
+    step's incrementally-maintained F exactly — see module docstring.
+    The gamma key is ``fold_in(key, y)`` + rowwise, matching
+    ``mlt_step``'s per-class keying, so MC chains agree bitwise with the
+    in-memory drivers."""
+    X, labels, mask = chunk
+    F = X.astype(jnp.float32) @ W.T.astype(jnp.float32)
+    rho, beta = _rho_beta(F, labels, y, num_classes)
+    _, _, S, b = accumulate_stats(
+        X, rho, beta, W[y], mode=mode, key=jax.random.fold_in(key, y),
+        eps=eps, backend=backend, row0=row0)
+    return {"S": S, "b": b}
+
+
+def mlt_chunk_obj(chunk: SVMData, W: jnp.ndarray) -> dict:
+    """Streaming objective body: the chunk's Crammer-Singer loss terms
+    at the end-of-sweep W, plus the valid-row count (both additive)."""
+    X, labels, mask = chunk
+    F = X.astype(jnp.float32) @ W.T.astype(jnp.float32)
+    return {"loss": objective.cs_obj_terms(F, labels, mask),
+            "mask_sum": jnp.sum(mask)}
+
+
 @partial(jax.jit, static_argnames=("num_classes", "mode", "lam", "eps",
                                    "jitter", "axes", "triangle", "backend",
                                    "reduce_dtype"))
@@ -61,10 +99,7 @@ def mlt_step(data: SVMData, W: jnp.ndarray, key: jax.Array, *,
     X, labels, mask = data
     M = num_classes
     Xf = X.astype(jnp.float32)
-    gkey = key
-    if axes:
-        for ax in axes:
-            gkey = jax.random.fold_in(gkey, jax.lax.axis_index(ax))
+    row0 = stats.shard_row_offset(X.shape[0], axes)
 
     F0 = Xf @ W.T.astype(jnp.float32)                    # (N, M)
 
@@ -72,9 +107,10 @@ def mlt_step(data: SVMData, W: jnp.ndarray, key: jax.Array, *,
         W, F = carry
         rho, beta = _rho_beta(F, labels, y, M)
         # Padding rows: X-row == 0 => margin 0 and zero stats contribution.
-        _, gamma, S, b = local_stats(
+        _, gamma, S, b = accumulate_stats(
             X, rho, beta, W[y], mode=mode,
-            key=jax.random.fold_in(gkey, y), eps=eps, backend=backend)
+            key=jax.random.fold_in(key, y), eps=eps, backend=backend,
+            row0=row0)
         S, b = stats.reduce_stats(S, b, axes, triangle=triangle,
                                   reduce_dtype=reduce_dtype)
         L, mu = stats.posterior_params(S, b, lam, jitter=jitter)

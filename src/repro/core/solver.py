@@ -26,7 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from . import distributed, kernel as krn, linear, multiclass, objective, svr
+from . import (distributed, kernel as krn, linear, multiclass, objective,
+               stats, svr)
 from .linear import SVMData
 
 FORMULATIONS = ("LIN", "KRN")
@@ -56,6 +57,8 @@ class SVMConfig:
     tol: float = 1e-3            # stop at |delta obj| <= tol * N (Sec 5.5)
     driver: str = "scan"         # scan = chunked on-device lax.scan driver
     scan_chunk: int = 16         # device iterations per host sync
+    chunk_rows: int = 4096       # stream driver: rows device-resident at once
+    prefetch: int = 2            # stream driver: host->device lookahead depth
     burnin: int = 10             # MC burn-in (Sec 5.13)
     jitter: float | None = None  # None -> 1e-7 (LIN), 1e-4 (KRN fp32 Gram)
     triangle_reduce: bool = True
@@ -69,11 +72,17 @@ class SVMConfig:
         assert self.formulation in FORMULATIONS, self.formulation
         assert self.algorithm in ALGORITHMS, self.algorithm
         assert self.task in TASKS, self.task
-        assert self.driver in ("scan", "loop"), self.driver
+        assert self.driver in ("scan", "loop", "stream"), self.driver
         assert self.scan_chunk >= 1, self.scan_chunk
+        assert self.chunk_rows >= 1, self.chunk_rows
+        assert self.prefetch >= 1, self.prefetch  # residency = prefetch+2
         if self.formulation == "KRN" and self.task != "CLS":
             raise NotImplementedError(
                 "paper provides KRN for binary classification")
+        if self.formulation == "KRN" and self.driver == "stream":
+            raise NotImplementedError(
+                "driver='stream' is LIN-only: the KRN statistic is the "
+                "N x N Gram, which is not a row-chunk-additive sum")
         if self.jitter is None:
             object.__setattr__(
                 self, "jitter",
@@ -98,6 +107,7 @@ class FitResult:
     n_iters: int
     converged: bool
     n_host_syncs: int = 0           # device->host objective transfers
+    peak_input_bytes: int = 0       # stream driver: max device-resident input
 
 
 @functools.lru_cache(maxsize=256)
@@ -193,6 +203,71 @@ def _chunk_runner(cfg: SVMConfig, mesh: Mesh | None, data_axes: tuple,
     return jax.jit(runner)
 
 
+@functools.lru_cache(maxsize=256)
+def _stream_fns(cfg: SVMConfig):
+    """Jitted per-chunk accumulators + replicated M-step for the stream
+    driver. lru-cached on the frozen config so repeated fits share jit
+    caches; shapes fixed by chunk_rows mean ONE trace per dataset width.
+
+    Contract: ``chunk`` maps one (chunk_rows, K) block to a dict of
+    row-additive contributions; ``add`` tree-sums them; ``mstep`` is the
+    unchanged replicated posterior solve/draw on the summed statistics.
+    For MLT, ``chunk``/``mstep`` additionally take the traced class
+    index (one solve per class per sweep) and ``obj`` scores the
+    end-of-sweep W on one block.
+    """
+    common = dict(mode=cfg.algorithm, eps=cfg.eps, backend=cfg.backend)
+    add = jax.jit(functools.partial(jax.tree_util.tree_map, jnp.add))
+
+    if cfg.task == "MLT":
+        @jax.jit
+        def chunk(data, W, key, row0, y_cls):
+            return multiclass.mlt_class_chunk_stats(
+                data, W, key, row0, y_cls,
+                num_classes=cfg.num_classes, **common)
+
+        @jax.jit
+        def mstep(W, S, b, key, y_cls):
+            L, mu = stats.posterior_params(S, b, cfg.lam,
+                                           jitter=cfg.jitter)
+            if cfg.algorithm == "EM":
+                w_new = mu
+            else:
+                w_new = stats.draw_weight(
+                    jax.random.fold_in(key, y_cls), L, mu)
+            return W.at[y_cls].set(w_new)
+
+        @jax.jit
+        def obj(data, W):
+            return multiclass.mlt_chunk_obj(data, W)
+
+        @jax.jit
+        def obj_total(W, loss_sum):
+            return objective.l2_reg(W, cfg.lam) + loss_sum
+
+        return dict(chunk=chunk, add=add, mstep=mstep, obj=obj,
+                    obj_total=obj_total)
+
+    if cfg.task == "SVR":
+        @jax.jit
+        def chunk(data, w, key, row0):
+            return svr.svr_chunk_stats(data, w, key, row0,
+                                       eps_ins=cfg.eps_ins, **common)
+    else:
+        @jax.jit
+        def chunk(data, w, key, row0):
+            return linear.cls_chunk_stats(data, w, key, row0, **common)
+
+    @jax.jit
+    def mstep(S, b, loss_sum, key):
+        L, mu = stats.posterior_params(S, b, cfg.lam, jitter=cfg.jitter)
+        w_new = (mu if cfg.algorithm == "EM"
+                 else stats.draw_weight(key, L, mu))
+        return w_new, objective.l2_reg(w_new, cfg.lam) + loss_sum
+
+    return dict(chunk=chunk, add=add, mstep=mstep)
+
+
 class PEMSVM:
     """Parallel EM/MCMC SVM (paper's PEMSVM)."""
 
@@ -215,11 +290,83 @@ class PEMSVM:
             X = np.concatenate([X, np.ones((X.shape[0], 1), np.float32)], 1)
         N = X.shape[0]
 
+        if cfg.driver == "stream":
+            return self._fit_stream_arrays(X, y)
+
         data, prior, state = self._prepare(X, y)
         if cfg.driver == "loop":
             step = self._build_step(prior is not None)
             return self._fit_loop(data, prior, state, step, N)
         return self._fit_scan(data, prior, state, N)
+
+    def fit_libsvm(self, path: str, n_features: int, rank: int = 0,
+                   world: int = 1) -> FitResult:
+        """Fit directly from a libsvm file.
+
+        With ``driver="stream"`` the file is re-read chunk by chunk every
+        pass (``data.libsvm.iter_libsvm`` + prefetch) and the dataset is
+        never materialized — host AND device residency are bounded by
+        ``chunk_rows``. Other drivers load it resident and defer to
+        ``fit``. ``rank``/``world`` stripe lines per host (paper Sec 5.6).
+        """
+        from repro.data import iter_libsvm, load_libsvm
+
+        cfg = self.config
+        if cfg.driver != "stream":
+            X, y = load_libsvm(path, n_features, rank=rank, world=world)
+            return self.fit(X, y)
+        if cfg.formulation == "KRN":
+            raise NotImplementedError("driver='stream' is LIN-only")
+        if world > 1:
+            # A rank stripe is a PARTIAL dataset; stream has no
+            # cross-rank reduction (it rejects meshes), so fitting a
+            # stripe would silently return weights trained on 1/world
+            # of the rows.
+            raise NotImplementedError(
+                "driver='stream' with world > 1 needs a cross-host "
+                "reduction that does not exist yet; stream the full "
+                "file (world=1) or use a resident driver on a mesh")
+        K = n_features + (1 if cfg.add_bias else 0)
+
+        def make_chunks():
+            for Xc, yc, mc in iter_libsvm(path, cfg.chunk_rows,
+                                          n_features, rank=rank,
+                                          world=world):
+                if cfg.add_bias:
+                    # bias column = mask: padded rows keep all-zero X.
+                    Xc = np.concatenate([Xc, mc[:, None]], axis=1)
+                yield SVMData(Xc, self._stream_target(yc, mc), mc)
+
+        return self._fit_stream(make_chunks, K)
+
+    def _stream_target(self, y: np.ndarray, mask: np.ndarray) -> np.ndarray:
+        """Validate + cast one chunk's labels (the _prepare checks,
+        applied chunk-locally)."""
+        task = self.config.task
+        if task == "MLT":
+            return np.asarray(y, np.int32)
+        y = np.asarray(y, np.float32)
+        if task == "CLS":
+            valid = y[np.asarray(mask) > 0]
+            bad = set(np.unique(valid).tolist()) - {-1.0, 1.0}
+            assert not bad, f"CLS labels must be +-1, got extras {bad}"
+        return y
+
+    def _fit_stream_arrays(self, X: np.ndarray, y: np.ndarray) -> FitResult:
+        """driver='stream' on in-memory arrays: chunk views, zero-copy
+        per pass (the out-of-core entry point is ``fit_libsvm``)."""
+        cfg = self.config
+        target = self._stream_target(np.asarray(y), np.ones(len(y)))
+        Xp, tp, mask = distributed.pad_rows(X, target, 1,
+                                            multiple=cfg.chunk_rows)
+        cr = cfg.chunk_rows
+
+        def make_chunks():
+            for i0 in range(0, Xp.shape[0], cr):
+                yield SVMData(Xp[i0:i0 + cr], tp[i0:i0 + cr],
+                              mask[i0:i0 + cr])
+
+        return self._fit_stream(make_chunks, X.shape[1])
 
     def _fit_scan(self, data, prior, state, N: int) -> FitResult:
         """Chunked on-device driver (DESIGN.md §Perf).
@@ -298,16 +445,22 @@ class PEMSVM:
                          aux_history=aux_hist, n_iters=n_iters,
                          converged=converged, n_host_syncs=n_syncs)
 
-    def _fit_loop(self, data, prior, state, step, N: int) -> FitResult:
-        """Per-iteration Python driver: one host sync per iteration.
+    def _fit_host_loop(self, iterate) -> FitResult:
+        """Shared host-loop tail for the loop and stream drivers: key
+        chain, trace bookkeeping, MC posterior averaging (f64 running
+        mean) and the paper's Sec 5.5 stopping rule, in ONE place so the
+        drivers cannot drift apart semantically.
 
-        Kept as the semantic oracle for the scan driver (tests compare
-        the two traces) and as an escape hatch for step functions whose
-        aux is not scan-stackable."""
+        ``iterate(sub_key) -> (state, aux dict, n_valid)`` runs one full
+        iteration (n_valid = valid-row count for the tol*N stopping
+        threshold; the stream driver only knows it after its first
+        pass, hence per-iteration).
+        """
         cfg = self.config
         key = jax.random.PRNGKey(cfg.seed)
         objs: list[float] = []
         aux_hist: dict[str, list] = {}
+        state = None
         mean_w = None
         n_avg = 0
         n_small = 0
@@ -315,11 +468,8 @@ class PEMSVM:
         it = 0
         for it in range(1, cfg.max_iters + 1):
             key, sub = jax.random.split(key)
-            args = (data, prior, state, sub) if prior is not None else (
-                data, state, sub)
-            state, aux = step(*args)
-            obj = float(aux["objective"])
-            objs.append(obj)
+            state, aux, n_valid = iterate(sub)
+            objs.append(float(aux["objective"]))
             for k, v in aux.items():
                 aux_hist.setdefault(k, []).append(float(v))
             if cfg.algorithm == "MC" and it > cfg.burnin:
@@ -328,7 +478,8 @@ class PEMSVM:
                     mean_w * n_avg + w_np) / (n_avg + 1)
                 n_avg += 1
             # Paper Sec 5.5 stopping rule on the objective change.
-            if len(objs) >= 2 and abs(objs[-1] - objs[-2]) <= cfg.tol * N:
+            if (len(objs) >= 2
+                    and abs(objs[-1] - objs[-2]) <= cfg.tol * n_valid):
                 n_small += 1
             else:
                 n_small = 0
@@ -344,6 +495,113 @@ class PEMSVM:
         return FitResult(weights=weights, last_sample=last, objective=objs,
                          aux_history=aux_hist, n_iters=it,
                          converged=converged, n_host_syncs=len(objs))
+
+    def _fit_loop(self, data, prior, state, step, N: int) -> FitResult:
+        """Per-iteration Python driver: one host sync per iteration.
+
+        Kept as the semantic oracle for the scan driver (tests compare
+        the two traces) and as an escape hatch for step functions whose
+        aux is not scan-stackable."""
+        state_ref = state
+
+        def iterate(sub):
+            nonlocal state_ref
+            args = ((data, prior, state_ref, sub) if prior is not None
+                    else (data, state_ref, sub))
+            state_ref, aux = step(*args)
+            return state_ref, aux, N
+
+        return self._fit_host_loop(iterate)
+
+    def _fit_stream(self, make_chunks, K: int) -> FitResult:
+        """Out-of-core driver (DESIGN.md §Perf/Streaming).
+
+        The paper's Fig. 1 iteration is a map-reduce over row shards:
+        Sigma and the mu-numerator are exact sums over rows, so the
+        E-step streams fixed-shape chunks through the same fused/SYRK
+        kernels the resident drivers use (``accumulate_stats``),
+        tree-summing per-chunk contributions on device, then runs the
+        unchanged replicated M-step. Peak device residency is the
+        (prefetch + 2) in-flight chunks plus the O(K^2) statistics —
+        independent of N (``FitResult.peak_input_bytes``).
+
+        Host-loop semantics (stopping rule, key chain, MC posterior
+        averaging) are literally ``_fit_loop``'s — both feed the shared
+        ``_fit_host_loop`` tail; with the rowwise MC gamma draw the
+        sampled chain is also chunking-invariant, so stream fits match
+        the resident drivers to fp32 reassociation tolerance for BOTH
+        algorithms. One host sync per pass (the summed statistics),
+        M + 1 passes per iteration for MLT.
+        """
+        cfg = self.config
+        if self.mesh is not None:
+            raise NotImplementedError(
+                "driver='stream' is single-process: on a mesh, stream "
+                "per-host shards via data_axes striping instead "
+                "(rank/world in fit_libsvm)")
+        from repro.data import ChunkPrefetcher
+
+        fns = _stream_fns(cfg)
+        is_mlt = cfg.task == "MLT"
+        if is_mlt:
+            state = jnp.zeros((cfg.num_classes, K), jnp.float32)
+        else:
+            state = jnp.zeros((K,), jnp.float32)
+        peak_bytes = 0
+
+        def sweep(fn):
+            """One pass over the data: tree-sum fn(chunk, row0)
+            contributions on device (one host transfer per pass)."""
+            nonlocal peak_bytes
+            pf = ChunkPrefetcher(make_chunks(), depth=cfg.prefetch)
+            totals = None
+            row0 = 0
+            for chunk in pf:
+                data = SVMData(*chunk)
+                part = fn(data, jnp.int32(row0))
+                totals = part if totals is None else fns["add"](totals,
+                                                                part)
+                row0 += data.X.shape[0]
+            if totals is None:
+                raise ValueError("stream source yielded no chunks")
+            peak_bytes = max(peak_bytes, pf.max_resident_bytes)
+            return totals
+
+        def iterate(sub):
+            # One blocking device->host transfer per iteration: the
+            # statistics stay on device through every sweep/solve and
+            # the scalar trace comes down in a single device_get.
+            nonlocal state
+            if is_mlt:
+                for y_cls in range(cfg.num_classes):
+                    t = sweep(lambda d, r0, _y=jnp.int32(y_cls):
+                              fns["chunk"](d, state, sub, r0, _y))
+                    state = fns["mstep"](state, t["S"], t["b"], sub,
+                                         jnp.int32(y_cls))
+                t = sweep(lambda d, r0: fns["obj"](d, state))
+                obj, mask_sum = jax.device_get(
+                    (fns["obj_total"](state, t["loss"]), t["mask_sum"]))
+                aux = {"objective": float(obj)}
+            else:
+                t = sweep(lambda d, r0: fns["chunk"](d, state, sub, r0))
+                state, obj_dev = fns["mstep"](t["S"], t["b"], t["loss"],
+                                              sub)
+                obj, scalars = jax.device_get(
+                    (obj_dev, {k: v for k, v in t.items()
+                               if k not in ("S", "b")}))
+                mask_sum = scalars["mask_sum"]
+                den = max(float(mask_sum), 1.0)
+                aux = {"objective": float(obj),
+                       "gamma_mean": float(scalars["gamma_sum"]) / den}
+                if cfg.task == "SVR":
+                    aux["omega_mean"] = float(scalars["omega_sum"]) / den
+                else:
+                    aux["n_sv"] = float(scalars["n_sv"])
+            return state, aux, float(mask_sum)
+
+        result = self._fit_host_loop(iterate)
+        result.peak_input_bytes = int(peak_bytes)
+        return result
 
     # ------------------------------------------------------ setup helpers
     def _prepare(self, X: np.ndarray, y: np.ndarray):

@@ -18,6 +18,26 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
+
+def shard_row_offset(local_n: int, axes: Sequence[str]) -> jnp.ndarray:
+    """Global row index of this shard's first row, inside shard_map.
+
+    ``distributed.shard_rows`` lays rows out row-major over ``axes`` in
+    order, so the linear shard index is the mixed-radix number over the
+    axis indices; times the local row count gives the offset. Identity
+    (0) outside a mesh. The LIN steps feed this to the rowwise MC gamma
+    draw (``augment.gamma_mc_rowwise``) so a mesh fit draws the *same*
+    gammas as the single-device and streaming drivers — sharding layout
+    no longer changes the chain."""
+    if not axes:
+        return jnp.int32(0)
+    off = jnp.int32(0)
+    for ax in axes:
+        off = off * compat.axis_size(ax) + jax.lax.axis_index(ax)
+    return off * local_n
+
 
 def triangle_pack(S: jnp.ndarray) -> jnp.ndarray:
     """Pack a symmetric (K, K) matrix into its K(K+1)/2 lower triangle."""

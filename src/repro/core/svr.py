@@ -12,6 +12,11 @@ max(0, |y - w^T x| - eps_ins):
             "lambda_d" in Eq. 28 is a typo for gamma_d)
 
 Iteration cost is the paper's "constant factor of 2" over CLS (Sec 4.3).
+
+``svr_local_stats`` is the chunk-callable statistic (exact row sums),
+shared by the in-memory step, the mesh SPMD step, and the streaming
+driver's per-chunk accumulation — same pattern as
+``linear.accumulate_stats``.
 """
 from __future__ import annotations
 
@@ -26,6 +31,50 @@ from . import augment, objective, stats
 from .linear import SVMData
 
 
+def svr_local_stats(X: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray, *,
+                    mode: str, key: jax.Array | None, eps: float,
+                    eps_ins: float, backend: str | None,
+                    row0: jnp.ndarray | int = 0):
+    """(pred, gamma, omega, Sigma^p, mu^p) over one row block.
+
+    MC draws both mixtures per global row (two independent streams via
+    a key split, each rowwise-keyed), so the chain is invariant to
+    chunking and sharding layout. Padded rows (X-row = 0, y = 0)
+    contribute exactly zero to Sigma and b."""
+    k_lo = k_hi = None
+    if mode == "MC":
+        k_lo, k_hi = jax.random.split(key)
+    pred = X.astype(jnp.float32) @ w.astype(jnp.float32)
+    res = y.astype(jnp.float32) - pred
+    gamma = augment.update_gamma(mode, k_lo, res - eps_ins, eps, row0=row0)
+    omega = augment.update_gamma(mode, k_hi, res + eps_ins, eps, row0=row0)
+
+    weights = 1.0 / gamma + 1.0 / omega
+    S = ops.syrk_tri(X, weights, backend=backend)
+    coef = (y - eps_ins) / gamma + (y + eps_ins) / omega
+    b = X.astype(jnp.float32).T @ coef
+    return pred, gamma, omega, S, b
+
+
+def svr_chunk_stats(chunk: SVMData, w: jnp.ndarray, key: jax.Array,
+                    row0: jnp.ndarray, *, mode: str, eps: float,
+                    eps_ins: float, backend: str | None) -> dict:
+    """Streaming E-step body for SVR: one chunk's additive contributions
+    (tree-summed across chunks by the stream driver)."""
+    X, y, mask = chunk
+    pred, gamma, omega, S, b = svr_local_stats(
+        X, y, w, mode=mode, key=key, eps=eps, eps_ins=eps_ins,
+        backend=backend, row0=row0)
+    return {
+        "S": S,
+        "b": b,
+        "loss": objective.svr_obj_terms(pred, y, eps_ins, mask),
+        "gamma_sum": jnp.sum(gamma * mask),
+        "omega_sum": jnp.sum(omega * mask),
+        "mask_sum": jnp.sum(mask),
+    }
+
+
 @partial(jax.jit, static_argnames=("mode", "lam", "eps", "eps_ins", "jitter",
                                    "axes", "triangle", "backend",
                                    "reduce_dtype"))
@@ -37,21 +86,11 @@ def svr_step(data: SVMData, w: jnp.ndarray, key: jax.Array, *,
              reduce_dtype: str | None = None):
     """One LIN-*-SVR iteration. Returns (w_new, aux dict)."""
     X, y, mask = data
-    gkey = key
-    if axes:
-        for ax in axes:
-            gkey = jax.random.fold_in(gkey, jax.lax.axis_index(ax))
-    k_lo, k_hi = jax.random.split(gkey)
+    row0 = stats.shard_row_offset(X.shape[0], axes)
 
-    pred = X.astype(jnp.float32) @ w.astype(jnp.float32)
-    res = y.astype(jnp.float32) - pred
-    gamma = augment.update_gamma(mode, k_lo, res - eps_ins, eps)
-    omega = augment.update_gamma(mode, k_hi, res + eps_ins, eps)
-
-    weights = 1.0 / gamma + 1.0 / omega
-    S = ops.syrk_tri(X, weights, backend=backend)
-    coef = (y - eps_ins) / gamma + (y + eps_ins) / omega
-    b = X.astype(jnp.float32).T @ coef
+    pred, gamma, omega, S, b = svr_local_stats(
+        X, y, w, mode=mode, key=key, eps=eps, eps_ins=eps_ins,
+        backend=backend, row0=row0)
     S, b = stats.reduce_stats(S, b, axes, triangle=triangle,
                               reduce_dtype=reduce_dtype)
 

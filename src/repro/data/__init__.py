@@ -3,5 +3,6 @@ LibSVM-format IO, and the sharded host->device pipeline."""
 from .synthetic import (  # noqa: F401
     make_alpha_like, make_dna_like, make_mnist8m_like, make_year_like,
     make_blobs, make_circles, make_lm_tokens)
-from .libsvm import load_libsvm, save_libsvm  # noqa: F401
-from .pipeline import ShardedBatcher  # noqa: F401
+from .libsvm import (iter_libsvm, load_libsvm, parse_libsvm_line,  # noqa: F401
+                     save_libsvm)
+from .pipeline import ChunkPrefetcher, ShardedBatcher  # noqa: F401

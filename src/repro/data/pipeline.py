@@ -1,16 +1,23 @@
-"""Sharded host->device input pipeline for the LM training path.
+"""Sharded host->device input pipelines.
 
-Deterministic, restartable (state = integer step, so checkpoint/resume is
-exact), with background prefetch. Each global batch is laid out
-(global_batch, seq_len) and device_put with batch sharded over the mesh's
-data axes — the multi-host generalization feeds per-host addressable
-shards the same way the paper parallelizes datafile IO across MPI ranks
-(Sec 5.6)."""
+Two consumers share the double-buffering pattern here:
+
+  * ``ShardedBatcher`` — the LM training path. Deterministic, restartable
+    (state = integer step, so checkpoint/resume is exact), with background
+    prefetch. Each global batch is laid out (global_batch, seq_len) and
+    device_put with batch sharded over the mesh's data axes.
+  * ``ChunkPrefetcher`` — the SVM out-of-core path: wraps any iterator of
+    fixed-shape host row blocks (e.g. ``data.libsvm.iter_libsvm``) and
+    overlaps host parse/copy with device compute, the way the paper
+    parallelizes datafile IO across MPI ranks (Sec 5.6). The solver's
+    ``driver="stream"`` consumes one of these per pass (DESIGN.md
+    §Perf/Streaming).
+"""
 from __future__ import annotations
 
 import queue
 import threading
-from typing import Iterator
+from typing import Callable, Iterable, Iterator
 
 import jax
 import jax.numpy as jnp
@@ -18,11 +25,107 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
+class ChunkPrefetcher:
+    """Double-buffered host->device prefetch over an iterator of array
+    tuples.
+
+    A background thread pulls host blocks from ``chunks``, transfers them
+    (``place``, default ``jnp.asarray`` per leaf) and parks up to
+    ``depth`` transferred blocks in a queue, so the device never waits
+    on host IO and at most ``depth + 2`` blocks are device-resident at
+    once — ``depth`` queued, one in the worker's hand (placed *before*
+    the put so the transfer overlaps compute), one held by the consumer.
+    That bound is what keeps ``driver="stream"``'s peak residency
+    proportional to the chunk size, not the dataset
+    (``max_resident_bytes`` reports the high-water mark).
+
+    Worker exceptions (e.g. a libsvm parse error mid-file) are re-raised
+    in the consumer, not swallowed in the thread.
+    """
+
+    _DONE = object()
+
+    def __init__(self, chunks: Iterable, depth: int = 2,
+                 place: Callable | None = None):
+        if depth < 1:
+            raise ValueError(
+                f"prefetch depth must be >= 1 (got {depth}): the worker "
+                "needs at least one queue slot, so actual residency is "
+                "never below 3 chunks and a silent clamp would break "
+                "the documented (depth + 2) bound")
+        self.chunks = chunks
+        self.depth = int(depth)
+        self.place = place or (
+            lambda arrs: tuple(jnp.asarray(a) for a in arrs))
+        self.max_resident_bytes = 0
+
+    @staticmethod
+    def _nbytes(arrs) -> int:
+        # Both np.ndarray and jax.Array expose .nbytes without forcing
+        # a device->host transfer (np.asarray here would download every
+        # chunk right after uploading it).
+        return sum(int(a.nbytes) for a in jax.tree_util.tree_leaves(arrs))
+
+    def __iter__(self) -> Iterator:
+        q: queue.Queue = queue.Queue(maxsize=self.depth)
+        stop = threading.Event()
+        err: list[BaseException] = []
+
+        def worker():
+            try:
+                for arrs in self.chunks:
+                    placed = self.place(arrs)
+                    nbytes = self._nbytes(placed)
+                    while not stop.is_set():
+                        try:
+                            q.put((placed, nbytes), timeout=0.2)
+                            break
+                        except queue.Full:
+                            continue
+                    if stop.is_set():
+                        return
+            except BaseException as e:  # noqa: BLE001 — forwarded below
+                err.append(e)
+            finally:
+                while not stop.is_set():
+                    try:
+                        q.put(self._DONE, timeout=0.2)
+                        break
+                    except queue.Full:
+                        continue
+
+        t = threading.Thread(target=worker, daemon=True)
+        t.start()
+        resident = 0
+        try:
+            while True:
+                item = q.get()
+                if item is self._DONE:
+                    if err:
+                        raise err[0]
+                    return
+                placed, nbytes = item
+                # The consumer holds this block while ``depth`` more sit
+                # transferred in the queue and the worker may hold one
+                # further block it placed before a full-queue put.
+                resident = nbytes * (self.depth + 2)
+                self.max_resident_bytes = max(self.max_resident_bytes,
+                                              resident)
+                yield placed
+        finally:
+            stop.set()
+            t.join(timeout=1.0)
+
+
 class ShardedBatcher:
     """Iterates (tokens, targets) batches from a token stream.
 
     Targets are next-token shifted. State is the step counter; ``seek``
-    restores mid-epoch position after restart."""
+    restores mid-epoch position after restart — including *mid-iteration*:
+    the prefetch worker tags every queued batch with a generation counter,
+    ``seek`` bumps the generation, and stale prefetched steps are
+    discarded instead of being yielded (the worker restarts from the new
+    step the next time it produces)."""
 
     def __init__(self, stream: np.ndarray, batch: int, seq_len: int,
                  mesh: Mesh | None = None, batch_axes=("data",),
@@ -32,13 +135,17 @@ class ShardedBatcher:
         self.mesh, self.batch_axes = mesh, tuple(batch_axes)
         self.prefetch = prefetch
         self.step = 0
+        self._gen = 0
         n_windows = (len(stream) - 1) // seq_len
         self.n_windows = n_windows
         self.rng = np.random.default_rng(seed)
         self._order = self.rng.permutation(n_windows)
 
     def seek(self, step: int) -> None:
+        # Order matters: the worker re-reads ``step`` only after it
+        # observes the generation bump.
         self.step = step
+        self._gen += 1
 
     def _host_batch(self, step: int):
         idx = [self._order[(step * self.batch + i) % self.n_windows]
@@ -59,19 +166,31 @@ class ShardedBatcher:
         stop = threading.Event()
 
         def worker():
-            s = self.step
+            gen = -1
+            s = 0
             while not stop.is_set():
-                try:
-                    q.put((s, self._host_batch(s)), timeout=0.2)
+                if gen != self._gen:
+                    gen = self._gen
+                    s = self.step
+                item = (gen, s, self._host_batch(s))
+                placed = False
+                while not stop.is_set() and gen == self._gen:
+                    try:
+                        q.put(item, timeout=0.2)
+                        placed = True
+                        break
+                    except queue.Full:
+                        continue
+                if placed:
                     s += 1
-                except queue.Full:
-                    continue
 
         t = threading.Thread(target=worker, daemon=True)
         t.start()
         try:
             while True:
-                s, arrs = q.get()
+                gen, s, arrs = q.get()
+                if gen != self._gen:
+                    continue  # stale: prefetched before the last seek()
                 self.step = s + 1
                 yield self._place(arrs)
         finally:

@@ -145,6 +145,48 @@ def test_fused_stats_padded_rows_contribute_nothing():
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.parametrize("backend", ["ref", "interpret"] + (
+    ["pallas"] if __import__("jax").default_backend() == "tpu" else []))
+@pytest.mark.parametrize("mode", ["EM", "MC"])
+@pytest.mark.parametrize("n_valid", [1, 77, 128])
+def test_accumulate_stats_partial_final_chunk_parity(backend, mode,
+                                                     n_valid):
+    """The streaming driver's padding path: a partially-valid final
+    chunk must contribute exactly the stats of its valid rows, on every
+    kernel backend (the padded-row no-op is a *layout* convention — zero
+    X-rows and targets — and each backend must preserve it bit-exactly,
+    the easy-to-miss hole being a kernel that touches gamma=eps padding
+    rows through a non-zeroed term)."""
+    import jax
+    from repro.core.linear import accumulate_stats
+
+    n_chunk, k = 128, 24
+    rng = np.random.default_rng(n_valid)
+    Xc = np.zeros((n_chunk, k), np.float32)
+    yc = np.zeros((n_chunk,), np.float32)
+    Xc[:n_valid] = rng.normal(size=(n_valid, k)).astype(np.float32)
+    yc[:n_valid] = rng.choice([-1.0, 1.0], n_valid)
+    wv = rng.normal(size=k).astype(np.float32)
+    key = jax.random.PRNGKey(3)
+
+    _, _, S_pad, b_pad = accumulate_stats(
+        jnp.asarray(Xc), jnp.asarray(yc), jnp.asarray(yc),
+        jnp.asarray(wv), mode=mode, key=key, eps=1e-6, backend=backend,
+        row0=0)
+    # oracle: valid rows only, ref backend (rowwise MC keys make the
+    # draw independent of the chunk's padded tail)
+    _, _, S_ref, b_ref = accumulate_stats(
+        jnp.asarray(Xc[:n_valid]), jnp.asarray(yc[:n_valid]),
+        jnp.asarray(yc[:n_valid]), jnp.asarray(wv), mode=mode, key=key,
+        eps=1e-6, backend="ref", row0=0)
+    S_pad, b_pad = np.asarray(S_pad), np.asarray(b_pad)
+    S_ref, b_ref = np.asarray(S_ref), np.asarray(b_ref)
+    np.testing.assert_allclose(
+        S_pad, S_ref, rtol=2e-3, atol=2e-3 * max(1.0, np.abs(S_ref).max()))
+    np.testing.assert_allclose(
+        b_pad, b_ref, rtol=2e-3, atol=2e-3 * max(1.0, np.abs(b_ref).max()))
+
+
 @pytest.mark.parametrize("n1,n2,k,sigma", [(64, 64, 16, 1.0),
                                            (100, 37, 8, 0.5),
                                            (129, 257, 33, 2.0)])

@@ -5,9 +5,11 @@ import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
+import pytest
+
 from repro.core import head, objective
-from repro.data import (ShardedBatcher, load_libsvm, make_lm_tokens,
-                        save_libsvm)
+from repro.data import (ShardedBatcher, iter_libsvm, load_libsvm,
+                        make_lm_tokens, save_libsvm)
 from repro.launch.hlo_cost import analyze
 from repro.runtime import StepTimeMonitor
 from repro.sharding import ShardingCtx, param_spec
@@ -51,6 +53,95 @@ def test_batcher_deterministic_and_seekable():
     # next-token alignment
     np.testing.assert_array_equal(np.asarray(batches[0][0][:, 1:]),
                                   np.asarray(batches[0][1][:, :-1]))
+
+
+def test_libsvm_tolerates_comments_and_blanks(tmp_path):
+    p = str(tmp_path / "d.txt")
+    with open(p, "w") as f:
+        f.write("# a header comment\n"
+                "\n"
+                "1 1:0.5 3:2.0   # trailing comment\n"
+                "   \n"
+                "-1 2:1.25\n")
+    X, y = load_libsvm(p, n_features=3)
+    np.testing.assert_allclose(y, [1.0, -1.0])
+    np.testing.assert_allclose(X, [[0.5, 0.0, 2.0], [0.0, 1.25, 0.0]])
+
+
+@pytest.mark.parametrize("bad,msg", [
+    ("1 2:0.5 3\n", "malformed 'idx:val' token '3'"),
+    ("1 x:0.5\n", "malformed 'idx:val' token 'x:0.5'"),
+    ("1 2:abc\n", "malformed 'idx:val' token '2:abc'"),
+    ("spam 1:1\n", "label 'spam'"),
+    ("1 0:1\n", "feature index 0 out of range"),
+])
+def test_libsvm_malformed_tokens_raise_clear_errors(tmp_path, bad, msg):
+    p = str(tmp_path / "d.txt")
+    with open(p, "w") as f:
+        f.write("1 1:1.0\n" + bad)
+    with pytest.raises(ValueError, match="line 2"):
+        load_libsvm(p, n_features=3)
+    try:
+        load_libsvm(p, n_features=3)
+    except ValueError as e:
+        assert msg in str(e), e
+
+
+def test_iter_libsvm_chunks_match_load(tmp_path):
+    """Chunked reader == resident loader: concatenated valid rows are
+    identical, every block has the fixed shape, tail is masked."""
+    rng = np.random.default_rng(5)
+    X = (rng.random((23, 4)) * (rng.random((23, 4)) > 0.4)).astype(
+        np.float32)
+    y = rng.choice([-1.0, 1.0], 23)
+    p = str(tmp_path / "d.txt")
+    save_libsvm(p, X, y)
+    blocks = list(iter_libsvm(p, chunk_rows=7, n_features=4))
+    assert len(blocks) == 4
+    assert all(b[0].shape == (7, 4) for b in blocks)
+    mask = np.concatenate([b[2] for b in blocks])
+    assert mask.sum() == 23 and blocks[-1][2].sum() == 2  # 23 = 3*7 + 2
+    Xc = np.concatenate([b[0] for b in blocks])[mask > 0]
+    yc = np.concatenate([b[1] for b in blocks])[mask > 0]
+    Xr, yr = load_libsvm(p, n_features=4)
+    np.testing.assert_allclose(Xc, Xr, atol=1e-5)
+    np.testing.assert_allclose(yc, yr)
+    # padded rows are exact zeros (the stats no-op convention)
+    assert np.all(blocks[-1][0][2:] == 0.0) and np.all(
+        blocks[-1][1][2:] == 0.0)
+
+
+def test_iter_libsvm_striped_ranks(tmp_path):
+    rng = np.random.default_rng(6)
+    X = rng.random((10, 3)).astype(np.float32)
+    p = str(tmp_path / "d.txt")
+    save_libsvm(p, X, np.ones(10))
+    parts = []
+    for r in range(2):
+        for Xb, yb, mb in iter_libsvm(p, 4, 3, rank=r, world=2):
+            parts.append(Xb[mb > 0])
+    got = np.sort(np.vstack(parts), axis=0)
+    np.testing.assert_allclose(got, np.sort(X, axis=0), atol=1e-5)
+
+
+def test_batcher_seek_mid_iteration_discards_stale_prefetch():
+    """Regression: seek() after the iterator started must not yield
+    already-prefetched stale steps — resume must be deterministic."""
+    stream = make_lm_tokens(50_000, 128, seed=0)
+    ref = ShardedBatcher(stream, 4, 64, seed=1)
+    it_ref = iter(ref)
+    want = [np.asarray(next(it_ref)[0]) for _ in range(4)]
+
+    b = ShardedBatcher(stream, 4, 64, seed=1, prefetch=3)
+    it = iter(b)
+    for _ in range(3):
+        next(it)               # worker has prefetched steps ~3..5 already
+    b.seek(0)                  # checkpoint-restore semantics
+    got = np.asarray(next(it)[0])
+    np.testing.assert_array_equal(got, want[0])
+    # and the sequence continues deterministically from there
+    np.testing.assert_array_equal(np.asarray(next(it)[0]), want[1])
+    assert b.step == 2
 
 
 def test_lm_tokens_learnable_structure():

@@ -1,0 +1,282 @@
+"""Out-of-core streaming fit (driver='stream') vs the in-memory oracles.
+
+Three layers of exactness, strongest first:
+
+  1. Per-iteration statistics: chunked accumulation of (Sigma, b) over
+     ANY chunk size/padding == the one-shot computation, to fp32
+     reassociation tolerance, for EM and MC (the rowwise MC gamma draw
+     makes the sampled chain chunking-invariant by construction).
+  2. Whole-fit trajectories: stream == scan final weights whenever the
+     iteration map is not chaotically amplifying fp32 noise — EM at a
+     sane gamma clamp, MC on short chains (DESIGN.md §Perf/Streaming
+     documents the 1/gamma^2 sensitivity; same caveat as the bf16
+     reduce and the mesh-vs-single-device band).
+  3. Quality: long/tight-clamp fits must still land on the same
+     decision function (score parity) even where trajectories fork.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import PEMSVM, SVMConfig
+from repro.core.linear import accumulate_stats
+from repro.core.svr import svr_local_stats
+
+
+def _chunked_stats(X, rho, beta, w, mode, key, chunk_rows, pad_tail):
+    """Sum accumulate_stats over fixed-shape padded chunks."""
+    N, K = X.shape
+    S = np.zeros((K, K), np.float32)
+    b = np.zeros((K,), np.float32)
+    for i0 in range(0, N, chunk_rows):
+        i1 = min(i0 + chunk_rows, N)
+        rows = chunk_rows + (pad_tail if i1 == N else 0)
+        Xc = np.zeros((rows, K), np.float32)
+        rc = np.zeros((rows,), np.float32)
+        bc = np.zeros((rows,), np.float32)
+        Xc[:i1 - i0] = X[i0:i1]
+        rc[:i1 - i0] = rho[i0:i1]
+        bc[:i1 - i0] = beta[i0:i1]
+        _, _, Sc, bvec = accumulate_stats(
+            jnp.asarray(Xc), jnp.asarray(rc), jnp.asarray(bc),
+            jnp.asarray(w), mode=mode, key=key, eps=1e-6, backend=None,
+            row0=i0)
+        S += np.asarray(Sc)
+        b += np.asarray(bvec)
+    return S, b
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(16, 400), st.integers(0, 37), st.integers(0, 2 ** 20))
+def test_stream_stats_chunking_invariant_em(chunk_rows, pad_tail, seed):
+    """Property: EM Sigma/b are identical (fp32 tolerance) for every
+    chunk size and tail padding."""
+    rng = np.random.default_rng(seed)
+    N, K = 301, 9
+    X = rng.normal(size=(N, K)).astype(np.float32)
+    y = rng.choice([-1.0, 1.0], N).astype(np.float32)
+    w = rng.normal(size=K).astype(np.float32)
+    key = jax.random.PRNGKey(0)
+    _, _, S0, b0 = accumulate_stats(
+        jnp.asarray(X), jnp.asarray(y), jnp.asarray(y), jnp.asarray(w),
+        mode="EM", key=key, eps=1e-6, backend=None, row0=0)
+    S, b = _chunked_stats(X, y, y, w, "EM", key, chunk_rows, pad_tail)
+    np.testing.assert_allclose(S, np.asarray(S0), rtol=1e-5,
+                               atol=1e-4 * np.abs(S0).max())
+    np.testing.assert_allclose(b, np.asarray(b0), rtol=1e-5,
+                               atol=1e-4 * max(1.0, np.abs(b0).max()))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(16, 400), st.integers(0, 2 ** 20))
+def test_stream_stats_chunking_invariant_mc(chunk_rows, seed):
+    """Property: the MC chain is chunking-invariant — rowwise-keyed
+    gamma draws give the SAME Sigma/b for every chunk size."""
+    rng = np.random.default_rng(seed)
+    N, K = 257, 7
+    X = rng.normal(size=(N, K)).astype(np.float32)
+    y = rng.choice([-1.0, 1.0], N).astype(np.float32)
+    w = rng.normal(size=K).astype(np.float32)
+    key = jax.random.PRNGKey(seed % 1000)
+    _, _, S0, b0 = accumulate_stats(
+        jnp.asarray(X), jnp.asarray(y), jnp.asarray(y), jnp.asarray(w),
+        mode="MC", key=key, eps=1e-6, backend=None, row0=0)
+    S, b = _chunked_stats(X, y, y, w, "MC", key, chunk_rows, 0)
+    np.testing.assert_allclose(S, np.asarray(S0), rtol=1e-4,
+                               atol=1e-4 * np.abs(S0).max())
+    np.testing.assert_allclose(b, np.asarray(b0), rtol=1e-4,
+                               atol=1e-4 * max(1.0, np.abs(b0).max()))
+
+
+def test_svr_stats_chunking_invariant_mc():
+    """SVR's double mixture: both rowwise draws chunking-invariant."""
+    rng = np.random.default_rng(3)
+    N, K = 200, 6
+    X = rng.normal(size=(N, K)).astype(np.float32)
+    y = (X @ rng.normal(size=K)).astype(np.float32)
+    w = rng.normal(size=K).astype(np.float32)
+    key = jax.random.PRNGKey(5)
+    _, _, _, S0, b0 = svr_local_stats(
+        jnp.asarray(X), jnp.asarray(y), jnp.asarray(w), mode="MC",
+        key=key, eps=1e-6, eps_ins=0.2, backend=None, row0=0)
+    S = np.zeros((K, K), np.float32)
+    b = np.zeros((K,), np.float32)
+    for i0 in range(0, N, 48):
+        i1 = min(i0 + 48, N)
+        Xc = np.zeros((48, K), np.float32)
+        yc = np.zeros((48,), np.float32)
+        Xc[:i1 - i0] = X[i0:i1]
+        yc[:i1 - i0] = y[i0:i1]
+        _, _, _, Sc, bc = svr_local_stats(
+            jnp.asarray(Xc), jnp.asarray(yc), jnp.asarray(w), mode="MC",
+            key=key, eps=1e-6, eps_ins=0.2, backend=None, row0=i0)
+        S += np.asarray(Sc)
+        b += np.asarray(bc)
+    np.testing.assert_allclose(S, np.asarray(S0), rtol=1e-4,
+                               atol=1e-4 * np.abs(S0).max())
+    np.testing.assert_allclose(b, np.asarray(b0), rtol=1e-4,
+                               atol=1e-4 * max(1.0, np.abs(b0).max()))
+
+
+# --------------------------------------------------------- whole-fit parity
+def _problem(task, seed=0, N=1024, K=16, M=3):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(N, K)).astype(np.float32)
+    w_true = rng.normal(size=K)
+    if task == "SVR":
+        y = (X @ w_true).astype(np.float32)
+    elif task == "MLT":
+        y = np.argmax(X @ rng.normal(size=(M, K)).T, 1).astype(np.int32)
+    else:
+        y = np.where(X @ w_true + 0.3 * rng.normal(size=N) > 0, 1.0, -1.0)
+    return X, y
+
+
+# Chain lengths/clamps chosen inside the non-chaotic regime (see module
+# docstring): EM tolerates long fits at eps=1e-2 and holds 1e-4. MC's
+# bound is looser: the IG sampler's accept-reject branch is
+# discontinuous, so a near-hinge row (mu = 1/|residual| large) can flip
+# on an fp32-reassociation-sized residual perturbation and inject an
+# O(1) single-gamma difference — a few flips land the weights ~1e-4
+# apart even on short chains (MLT worst: M solves/iteration multiply
+# the flip opportunities). The draws themselves are chunking-invariant
+# (property tests above); only their *inputs* drift.
+@pytest.mark.parametrize("options,kw,iters,bound", [
+    ("LIN-EM-CLS", {}, 30, 1e-4),
+    ("LIN-EM-SVR", dict(eps_ins=0.3), 30, 1e-4),
+    ("LIN-EM-MLT", dict(num_classes=3), 16, 1e-4),
+    ("LIN-MC-CLS", dict(burnin=8), 16, 2e-4),
+    ("LIN-MC-SVR", dict(eps_ins=0.3, burnin=8), 16, 2e-4),
+    ("LIN-MC-MLT", dict(num_classes=3, burnin=2, eps=1e-1), 6, 1e-3),
+])
+def test_stream_fit_matches_scan(options, kw, iters, bound):
+    """Acceptance: chunk_rows < N/8, final weights within the combo's
+    rel-err bound (1e-4 for the deterministic EM combos)."""
+    task = options.split("-")[-1]
+    X, y = _problem(task)
+    kw = {"eps": 1e-2, **kw}
+    kw["max_iters"] = kw["min_iters"] = iters
+    scan = PEMSVM(SVMConfig.from_options(options, **kw))
+    strm = PEMSVM(SVMConfig.from_options(options, driver="stream",
+                                         chunk_rows=100, **kw))
+    rs = scan.fit(X, y)
+    rt = strm.fit(X, y)
+    assert 100 < X.shape[0] / 8
+    rel = (np.abs(rt.weights - rs.weights).max()
+           / max(1e-12, np.abs(rs.weights).max()))
+    assert rel <= bound, (options, rel)
+    np.testing.assert_allclose(rt.objective[0], rs.objective[0],
+                               rtol=1e-5)
+    # score: accuracy (CLS/MLT) may flip a knife-edge point; RMSE (SVR)
+    # tracks the 1e-4 weight band.
+    assert abs(strm.score(X, y) - scan.score(X, y)) < 1e-3
+
+
+def test_stream_chunk_size_invariance():
+    """The chunking must be invisible: different chunk_rows give the
+    same trajectory (incl. a chunk size that forces heavy padding)."""
+    X, y = _problem("CLS")
+    traces = []
+    for cr in (64, 100, 300, 2048):
+        res = PEMSVM(SVMConfig(driver="stream", chunk_rows=cr, eps=1e-2,
+                               max_iters=10, min_iters=10)).fit(X, y)
+        traces.append(np.array(res.objective))
+    for t in traces[1:]:
+        np.testing.assert_allclose(t, traces[0], rtol=1e-4)
+
+
+def test_stream_early_stop_and_aux_match_loop():
+    """Stopping rule and aux keys mirror the loop driver."""
+    X, y = _problem("CLS")
+    loop = PEMSVM(SVMConfig(driver="loop", eps=1e-2, max_iters=100)).fit(
+        X, y)
+    strm = PEMSVM(SVMConfig(driver="stream", chunk_rows=128, eps=1e-2,
+                            max_iters=100)).fit(X, y)
+    assert strm.converged and loop.converged
+    assert strm.n_iters == loop.n_iters
+    assert set(strm.aux_history) == set(loop.aux_history) == {
+        "objective", "gamma_mean", "n_sv"}
+    np.testing.assert_allclose(strm.aux_history["n_sv"],
+                               loop.aux_history["n_sv"])
+
+
+def test_stream_long_mc_chain_score_parity():
+    """Beyond the exactness window, quality must still agree."""
+    X, y = _problem("CLS")
+    scan = PEMSVM(SVMConfig(algorithm="MC", max_iters=40))
+    strm = PEMSVM(SVMConfig(algorithm="MC", max_iters=40,
+                            driver="stream", chunk_rows=128))
+    scan.fit(X, y)
+    strm.fit(X, y)
+    assert abs(scan.score(X, y) - strm.score(X, y)) < 0.02
+
+
+def test_stream_peak_residency_bounded():
+    """Device input residency is (prefetch+2) chunks — prefetch queued,
+    one in the worker's hand, one at the consumer — independent of N."""
+    X, y = _problem("CLS", N=2048, K=16)
+    cfg = SVMConfig(driver="stream", chunk_rows=48, prefetch=2,
+                    max_iters=3, min_iters=3)
+    res = PEMSVM(cfg).fit(X, y)
+    K = X.shape[1] + 1  # bias
+    chunk_bytes = 48 * K * 4 + 2 * 48 * 4      # X + target + mask
+    assert 0 < res.peak_input_bytes <= 4 * chunk_bytes
+    resident_bytes = 2048 * K * 4
+    assert res.peak_input_bytes < resident_bytes / 8
+
+
+def test_stream_masked_tail_chunk():
+    """N not divisible by chunk_rows: the padded tail must be a no-op
+    (same fit as a divisible chunking)."""
+    X, y = _problem("CLS", N=1000)  # 1000 = 7*128 + 104 -> padded tail
+    a = PEMSVM(SVMConfig(driver="stream", chunk_rows=128, eps=1e-2,
+                         max_iters=8, min_iters=8)).fit(X, y)
+    b = PEMSVM(SVMConfig(driver="stream", chunk_rows=100, eps=1e-2,
+                         max_iters=8, min_iters=8)).fit(X, y)
+    np.testing.assert_allclose(a.weights, b.weights, rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_stream_fit_libsvm_end_to_end(tmp_path):
+    """File -> chunked reader -> prefetcher -> stream fit == resident
+    fit on the same data, including comment/blank-line tolerance."""
+    from repro.data import save_libsvm
+
+    X, y = _problem("CLS", N=600, K=10)
+    p = str(tmp_path / "toy.libsvm")
+    save_libsvm(p, X, y)
+    lines = open(p).read().splitlines()
+    with open(p, "w") as f:
+        f.write("# generated by test\n\n")
+        for i, ln in enumerate(lines):
+            f.write(ln + ("  # sv" if i % 7 == 0 else "") + "\n")
+            if i % 11 == 0:
+                f.write("   \n")
+    kw = dict(eps=1e-2, max_iters=12, min_iters=12)
+    resident = PEMSVM(SVMConfig(**kw)).fit(X, y)
+    streamed = PEMSVM(SVMConfig(driver="stream", chunk_rows=64,
+                                **kw)).fit_libsvm(p, n_features=10)
+    rel = (np.abs(streamed.weights - resident.weights).max()
+           / np.abs(resident.weights).max())
+    assert rel <= 1e-4, rel
+
+
+def test_stream_rejects_krn_and_mesh():
+    with pytest.raises(NotImplementedError):
+        SVMConfig(formulation="KRN", driver="stream")
+
+
+def test_stream_fit_libsvm_nonstream_falls_back(tmp_path):
+    """fit_libsvm with a resident driver loads and defers to fit."""
+    from repro.data import save_libsvm
+
+    X, y = _problem("CLS", N=200, K=6)
+    p = str(tmp_path / "toy.libsvm")
+    save_libsvm(p, X, y)
+    a = PEMSVM(SVMConfig(max_iters=5, min_iters=5)).fit_libsvm(
+        p, n_features=6)
+    b = PEMSVM(SVMConfig(max_iters=5, min_iters=5)).fit(X, y)
+    np.testing.assert_allclose(a.weights, b.weights, rtol=1e-4, atol=1e-5)
