@@ -1,0 +1,274 @@
+"""Fused Nystrom featurize-and-accumulate vs the two materializing
+baselines (ISSUE 3 acceptance benchmark) -> ``BENCH_nystrom.json``.
+
+Three ways to produce one phi-space EM statistic (margin, gamma, b, S):
+
+  * host_phi    — float64 NumPy featurization materializes the (N, m)
+                  phi ONCE per fit; every iteration then streams phi.
+                  The pre-PR-3 path: accurate, but phi must be resident
+                  (no out-of-core) and the host does O(N m) f64 work.
+  * device_phi  — featurize on device (``ops.nystrom_phi``), write phi
+                  to HBM, re-read it through ``fused_stats``: 2 kernel
+                  launches and a 2·N·M-byte phi round-trip per
+                  iteration.
+  * fused       — ``ops.nystrom_fused_stats``: one launch, one X
+                  stream, phi lives only in VMEM.
+
+Per (N, D, m) the benchmark records measured wall-clock for all three
+AND the analytic v5e roofline bound (same constants as
+``benchmarks/roofline.py``): fused and device_phi run identical FLOPs,
+so the fused win is pure HBM traffic — visible in the roofline terms on
+any host, and in wall-clock only where HBM is the actual bottleneck
+(the TPU backend; the CPU interpreter copies arrays in cache). The
+roofline advantage is asserted at every m; the wall-clock advantage is
+asserted on TPU only.
+
+Gates (asserted, any backend):
+  * fused ≡ device_phi ≡ host_phi statistic parity at every m;
+  * out-of-core acceptance: ``NystromSVM(driver="stream")`` fit from a
+    libsvm FILE matches the host-phi resident baseline to <= 1e-4
+    weight rel-err (EM) with device input residency bounded by
+    (prefetch + 2) RAW D-wide chunks — m-independent and far below the
+    (N, m) phi residency every baseline pays.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import NystromSVM, PEMSVM, SVMConfig
+from repro.core.nystrom import nystrom_features
+from repro.data import save_libsvm
+from repro.kernels import ops
+
+from .common import append_json, emit
+
+BENCH_JSON = os.environ.get("BENCH_NYSTROM_JSON", "BENCH_nystrom.json")
+
+PEAK_FLOPS = 197e12     # v5e, matches benchmarks/roofline.py
+HBM_BW = 819e9
+
+
+def _roofline(n: int, d: int, m: int) -> dict[str, dict[str, float]]:
+    """Analytic per-iteration roofline terms for the three paths.
+
+    FLOPs (identical featurize+stats math): cross 2NmD + project 2NmM
+    + margin/b 4NM + Sigma 2NM^2, M = m + 1. Bytes: every path streams
+    its input once; device_phi adds the 2NM phi round-trip; host_phi
+    streams the resident phi (no featurize FLOPs on device, but phi
+    must exist — its residency is reported separately).
+
+    fused and device_phi run IDENTICAL FLOPs, so the fusion win is pure
+    HBM traffic: memory_s is strictly smaller at every m, and bound_s
+    strictly smaller wherever device_phi is memory-bound (m up to
+    ~M/2 = ridge-point FLOP/byte on v5e; above that both paths sit on
+    the compute roof and the fusion buys launch count + phi residency,
+    not bound time — DESIGN.md §Perf/Nystrom)."""
+    M = m + 1
+    feat_flops = 2.0 * n * m * d + 2.0 * n * m * M
+    stat_flops = 4.0 * n * M + 2.0 * n * M * M
+    x_bytes = 4.0 * n * d
+    phi_bytes = 4.0 * n * M
+    small = 4.0 * (m * d + m * M + 2 * n + M + M * M)
+    out = {}
+    for name, (flops, byts) in {
+        "fused": (feat_flops + stat_flops, x_bytes + small),
+        "device_phi": (feat_flops + stat_flops,
+                       x_bytes + 2 * phi_bytes + small),
+        "host_phi": (stat_flops, phi_bytes + small),
+    }.items():
+        compute_s, memory_s = flops / PEAK_FLOPS, byts / HBM_BW
+        out[name] = {"compute_s": compute_s, "memory_s": memory_s,
+                     "bound_s": max(compute_s, memory_s)}
+    return out
+
+
+def _time_best(fn, repeats: int = 3) -> float:
+    fn()                                    # warm the jit caches
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _statistic_rows(n: int, d: int, ms, backend: str | None,
+                    failures: list) -> list[dict]:
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    y = rng.choice([-1.0, 1.0], n).astype(np.float32)
+    Xd, yd = jnp.asarray(X), jnp.asarray(y)
+    mask = jnp.ones(n, jnp.float32)
+    rows = []
+    for m in ms:
+        L = jnp.asarray(X[rng.choice(n, m, replace=False)])
+        proj = jnp.asarray(
+            (0.1 * rng.normal(size=(m, m))).astype(np.float32))
+        wv = jnp.asarray(rng.normal(size=m + 1).astype(np.float32))
+        kw = dict(sigma=2.0, kind="rbf", add_bias=True, eps=1e-2)
+
+        def fused():
+            return [np.asarray(o) for o in ops.nystrom_fused_stats(
+                Xd, L, proj, yd, yd, wv, mask, backend=backend, **kw)]
+
+        def device_phi():
+            phi = ops.nystrom_phi(Xd, L, proj, mask, sigma=2.0,
+                                  add_bias=True, backend=backend)
+            return [np.asarray(o) for o in ops.fused_stats(
+                phi, yd, yd, wv, mask, eps=1e-2, backend=backend)]
+
+        # host_phi featurizes ONCE per fit (f64, outside the per-
+        # iteration timing) and then streams the resident phi through
+        # the statistic every iteration — time only the recurring part,
+        # matching the roofline leg; the one-time cost is recorded.
+        t0 = time.perf_counter()
+        phi_host = jnp.asarray(np.concatenate(
+            [nystrom_features(X, np.asarray(L), sigma=2.0),
+             np.ones((n, 1), np.float32)], 1))
+        host_featurize_s = time.perf_counter() - t0
+
+        def host_phi():
+            return [np.asarray(o) for o in ops.fused_stats(
+                phi_host, yd, yd, wv, mask, eps=1e-2, backend=backend)]
+
+        # accuracy parity gate: all three produce the same statistic
+        # (host_phi featurizes in f64 with its own projection, so it is
+        # checked at fit level in the out-of-core section instead)
+        ref_out = fused()
+        for name, fn in (("device_phi", device_phi),):
+            for a, b, part in zip(fn(), ref_out,
+                                  ("margin", "gamma", "b", "S")):
+                err = (np.abs(a - b).max()
+                       / max(1.0, np.abs(b).max()))
+                if err > 2e-3:
+                    failures.append(
+                        f"m={m} {name} {part} parity {err:.2e}")
+
+        secs = {"fused": _time_best(fused),
+                "device_phi": _time_best(device_phi),
+                "host_phi": _time_best(host_phi)}
+        roof = _roofline(n, d, m)
+        # The fusion's claim is structural: identical FLOPs, strictly
+        # fewer HBM bytes. Asserted per the roofline: memory time
+        # strictly drops at EVERY m; the bound strictly drops wherever
+        # device_phi is memory-bound; never rises.
+        f, dp = roof["fused"], roof["device_phi"]
+        if not f["memory_s"] < dp["memory_s"]:
+            failures.append(f"m={m}: fused memory_s not below device_phi")
+        if f["bound_s"] > dp["bound_s"]:
+            failures.append(f"m={m}: fused bound_s above device_phi")
+        if (dp["memory_s"] > dp["compute_s"]
+                and not f["bound_s"] < dp["bound_s"]):
+            failures.append(
+                f"m={m}: memory-bound but fused bound_s not below")
+        if jax.default_backend() == "tpu" and (
+                secs["fused"] >= secs["device_phi"]):
+            failures.append(
+                f"m={m}: fused measured {secs['fused']:.4f}s not below "
+                f"device_phi {secs['device_phi']:.4f}s on TPU")
+        rows.append({
+            "name": f"statistic_m{m}", "n": n, "d": d, "m": m,
+            "backend": backend or ops.default_backend(),
+            "seconds_fused": secs["fused"],
+            "seconds_device_phi": secs["device_phi"],
+            "seconds_host_phi": secs["host_phi"],
+            "host_phi_onetime_featurize_s": host_featurize_s,
+            "measured_speedup_vs_device_phi": round(
+                secs["device_phi"] / secs["fused"], 3),
+            "roofline": {k: {kk: round(vv, 9) for kk, vv in v.items()}
+                         for k, v in roof.items()},
+            "roofline_memory_speedup_vs_device_phi": round(
+                dp["memory_s"] / f["memory_s"], 3),
+            "roofline_bound_speedup_vs_device_phi": round(
+                dp["bound_s"] / f["bound_s"], 3),
+            "kernel_launches": {"fused": 1, "device_phi": 2},
+            "phi_roundtrip_bytes_saved": int(8.0 * n * (m + 1)),
+        })
+    return rows
+
+
+def _out_of_core_row(n: int, d: int, m: int, chunk_rows: int,
+                     prefetch: int, failures: list) -> dict:
+    rng = np.random.default_rng(1)
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    wt = rng.normal(size=d)
+    y = np.where(np.tanh(X @ wt) + 0.3 * rng.normal(size=n) > 0,
+                 1.0, -1.0).astype(np.float32)
+    kw = dict(formulation="KRN", lam=1.0, sigma=3.0, eps=1e-2,
+              max_iters=15, min_iters=15)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "bench.libsvm")
+        save_libsvm(path, X, y)
+        ny = NystromSVM(SVMConfig(driver="stream", chunk_rows=chunk_rows,
+                                  prefetch=prefetch, **kw), n_landmarks=m)
+        t0 = time.perf_counter()
+        r_stream = ny.fit_libsvm(path, n_features=d)
+        t_stream = time.perf_counter() - t0
+
+    # host-phi resident baseline on the SAME landmarks (f64 featurize)
+    t0 = time.perf_counter()
+    phi = nystrom_features(X, ny._landmarks, sigma=3.0)
+    import dataclasses
+    base = PEMSVM(dataclasses.replace(ny.svm.config, phi_spec=None,
+                                      add_bias=True, driver="scan"))
+    r_host = base.fit(phi, y)
+    t_host = time.perf_counter() - t0
+
+    rel = float(np.abs(r_stream.weights - r_host.weights).max()
+                / np.abs(r_host.weights).max())
+    raw_chunk_bytes = chunk_rows * d * 4 + 2 * chunk_rows * 4
+    bound = (prefetch + 2) * raw_chunk_bytes
+    phi_resident_bytes = n * (m + 1) * 4
+    parity_ok = bool(rel <= 1e-4)
+    residency_ok = (0 < r_stream.peak_input_bytes <= bound
+                    and r_stream.peak_input_bytes < phi_resident_bytes)
+    if not parity_ok:
+        failures.append(f"stream-vs-host-phi rel {rel:.2e} > 1e-4")
+    if not residency_ok:
+        failures.append(
+            f"peak {r_stream.peak_input_bytes} outside (0, {bound}] "
+            f"or >= phi residency {phi_resident_bytes}")
+    return {
+        "name": "stream_fit_libsvm", "n": n, "d": d, "m": m,
+        "chunk_rows": chunk_rows, "prefetch": prefetch,
+        "iters": 15, "seconds": t_stream,
+        "host_phi_resident_seconds": t_host,
+        "weights_rel_err": rel, "parity_ok": parity_ok,
+        "peak_input_bytes": int(r_stream.peak_input_bytes),
+        "peak_bound_bytes": bound,
+        "phi_resident_bytes": phi_resident_bytes,
+        "peak_over_phi_resident": round(
+            r_stream.peak_input_bytes / phi_resident_bytes, 4),
+        "residency_ok": residency_ok,
+    }
+
+
+def run(full: bool = False, backend: str | None = None):
+    # Kernel-level comparison runs the REAL kernel body (interpret off
+    # TPU) so grid structure and launch counts are exercised; the fit
+    # gate uses the default backend (ref -> XLA on CPU hosts).
+    kernel_backend = backend or (
+        "pallas" if jax.default_backend() == "tpu" else "interpret")
+    n, d = (16384, 128) if full else (2048, 64)
+    failures: list[str] = []
+    rows = _statistic_rows(n, d, (256, 512, 1024), kernel_backend,
+                           failures)
+    rows.append(_out_of_core_row(8192 if full else 4096, 24, 64,
+                                 chunk_rows=256, prefetch=2,
+                                 failures=failures))
+    emit(rows, "nystrom_fused")
+    append_json(rows, BENCH_JSON)
+    assert not failures, "; ".join(failures)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

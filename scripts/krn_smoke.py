@@ -1,0 +1,79 @@
+#!/usr/bin/env python
+"""CPU nonlinear-streaming smoke for CI: tiny libsvm file ->
+``NystromSVM(driver="stream")`` fit -> parity against the host-phi
+resident baseline (mirrors scripts/stream_smoke.py for the KRN path).
+
+Writes a small rbf-separable dataset to a tmpdir in libsvm format, fits
+it out-of-core — reservoir-sampled landmarks, then raw D-wide chunks
+streamed through the fused featurize-and-accumulate statistic — and
+gates on:
+
+  * final-weight parity with the float64 host-featurized resident fit
+    on the SAME landmarks (<= 1e-4 rel-err — deterministic EM, so this
+    IS gateable on noisy CI machines);
+  * peak device input residency <= (prefetch+2) RAW chunks (D-wide,
+    not m-wide: the (N, m) phi matrix must never exist).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> int:
+    import numpy as np
+
+    from repro.core import NystromSVM, PEMSVM, SVMConfig
+    from repro.core.nystrom import nystrom_features
+    from repro.data import save_libsvm
+
+    rng = np.random.default_rng(0)
+    N, D, m = 900, 10, 48
+    X = rng.normal(size=(N, D)).astype(np.float32)
+    wt = rng.normal(size=D)
+    y = np.where(np.tanh(X @ wt) + 0.2 * rng.normal(size=N) > 0,
+                 1.0, -1.0).astype(np.float32)
+
+    chunk_rows, prefetch = 96, 2                 # < N/8 = 112
+    cfg = SVMConfig(formulation="KRN", driver="stream",
+                    chunk_rows=chunk_rows, prefetch=prefetch,
+                    lam=1.0, sigma=3.0, eps=1e-2,
+                    max_iters=15, min_iters=15)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "krn_smoke.libsvm")
+        save_libsvm(path, X, y)
+        model = NystromSVM(cfg, n_landmarks=m)
+        streamed = model.fit_libsvm(path, n_features=D)
+
+    phi = nystrom_features(X, model._landmarks, sigma=3.0)
+    base = PEMSVM(dataclasses.replace(model.svm.config, phi_spec=None,
+                                      add_bias=True, driver="scan"))
+    resident = base.fit(phi, y)
+
+    rel = (np.abs(streamed.weights - resident.weights).max()
+           / np.abs(resident.weights).max())
+    # (prefetch + 2) RAW chunks: queued + worker in-hand + consumer
+    bound = (prefetch + 2) * (chunk_rows * D * 4 + 2 * chunk_rows * 4)
+    phi_bytes = N * (m + 1) * 4
+    print(f"weights rel-err: {rel:.3e}   peak input bytes: "
+          f"{streamed.peak_input_bytes} (bound {bound}, "
+          f"phi residency would be {phi_bytes})")
+    if rel > 1e-4:
+        print("KRN STREAM PARITY FAIL")
+        return 1
+    if not 0 < streamed.peak_input_bytes <= bound:
+        print("KRN STREAM RESIDENCY FAIL")
+        return 1
+    if streamed.peak_input_bytes >= phi_bytes:
+        print("KRN STREAM RESIDENCY FAIL (not below phi residency)")
+        return 1
+    print("krn smoke complete")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

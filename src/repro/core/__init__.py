@@ -8,5 +8,5 @@ Public API:
 """
 from .head import MaxMarginHead, last_token_pool, mean_pool  # noqa: F401
 from .nystrom import NystromSVM  # noqa: F401
-from .linear import SVMData  # noqa: F401
+from .linear import PhiSpec, SVMData  # noqa: F401
 from .solver import FitResult, PEMSVM, SVMConfig, lam_from_C  # noqa: F401

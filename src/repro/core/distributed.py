@@ -84,15 +84,19 @@ def shard_rows(mesh: Mesh, axes: Sequence[str], X: np.ndarray,
 
 def shard_wrap(mesh: Mesh, axes: Sequence[str],
                step_fn: Callable, *, state_spec=P(None),
-               has_prior: bool = False) -> Callable:
+               has_prior: bool = False,
+               prior_spec=P(None, None)) -> Callable:
     """shard_map a step(data, [prior,] state, key) -> (state, aux) function.
 
     data is row-sharded over ``axes``; state/key/prior replicated; outputs
     replicated (the psum/replicated-solve structure guarantees it).
+    ``prior_spec`` is the (pytree of) replicated spec(s) for the prior
+    slot — a single (N, N) Gram for exact KRN, or the Nystrom
+    (landmarks, projection) pair.
     """
     dspec = P(tuple(axes))
     data_specs = SVMData(X=P(tuple(axes), None), target=dspec, mask=dspec)
-    in_specs = ((data_specs, P(None, None), state_spec, P(None)) if has_prior
+    in_specs = ((data_specs, prior_spec, state_spec, P(None)) if has_prior
                 else (data_specs, state_spec, P(None)))
     out_specs = (state_spec, P())  # P() = replicated scalars in the aux dict
 

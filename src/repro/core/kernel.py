@@ -64,10 +64,6 @@ def krn_step(data: SVMData, K_prior: jnp.ndarray, omega: jnp.ndarray,
     Returns (omega_new, aux dict).
     """
     K_rows, y, mask = data
-    gkey = key
-    if axes:
-        for ax in axes:
-            gkey = jax.random.fold_in(gkey, jax.lax.axis_index(ax))
 
     # Identical structure to LIN with X := K_rows, w := omega.
     # Masked rows contribute: their K-row is e_d (blockdiag identity), but
@@ -79,8 +75,13 @@ def krn_step(data: SVMData, K_prior: jnp.ndarray, omega: jnp.ndarray,
                                               wmask=mask, eps=eps,
                                               backend=backend)
     else:
+        # MC gamma draws are keyed per GLOBAL row (like the LIN paths
+        # post-PR-2): fold_in(iter_key, row index) makes the sampled
+        # chain independent of the mesh layout — the old per-axis key
+        # folds gave each sharding a different chain.
+        row0 = stats.shard_row_offset(K_rows.shape[0], axes)
         margin = K_rows.astype(jnp.float32) @ omega.astype(jnp.float32)
-        gamma = augment.gamma_mc(gkey, y - margin, eps)
+        gamma = augment.gamma_mc_rowwise(key, y - margin, eps, row0)
         b = K_rows.astype(jnp.float32).T @ (y / gamma + y)
         S = ops.syrk_tri(K_rows, mask / gamma, backend=backend)
     S, b = stats.reduce_stats(S, b, axes, triangle=triangle,

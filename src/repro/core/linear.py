@@ -21,6 +21,7 @@ data axes only and all-gathered over the model axis.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 from typing import NamedTuple, Sequence
 
@@ -39,10 +40,33 @@ class SVMData(NamedTuple):
     mask: jnp.ndarray    # (N,) 1.0 valid / 0.0 padding
 
 
+@dataclasses.dataclass(frozen=True)
+class PhiSpec:
+    """Static half of a Nystrom feature map (core/nystrom.py).
+
+    The array half — the (m, D) landmark strip and the (m, m)
+    ``K_mm^{-1/2}`` projection — travels separately as a ``phi``
+    operand pair through every step/chunk function, because SVMConfig
+    must stay hashable (the solver lru-caches jitted builders on it)
+    and the arrays must stay traced (no retrace per fit).
+
+    With a PhiSpec present, the chunk-callable statistics featurize
+    on device: data.X holds RAW rows (D-wide), and the state/statistic
+    dimension is ``proj.shape[1] + add_bias``. ``add_bias`` appends the
+    phi-space bias column (mask-valued, so padding stays a no-op) —
+    the X-space ``SVMConfig.add_bias`` must be False in this mode.
+    """
+    sigma: float = 1.0
+    kind: str = "rbf"
+    add_bias: bool = True
+
+
 def accumulate_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
                      w: jnp.ndarray, *, mode: str, key: jax.Array | None,
                      eps: float, backend: str | None,
-                     row0: jnp.ndarray | int = 0):
+                     row0: jnp.ndarray | int = 0,
+                     phi=None, phi_spec: PhiSpec | None = None,
+                     mask: jnp.ndarray | None = None):
     """(margin, gamma, Sigma^p, mu^p) for the generic hinge over one row
     block — THE chunk-callable statistic every driver shares: the
     in-memory drivers call it on the whole (padded) set, the mesh SPMD
@@ -62,7 +86,21 @@ def accumulate_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
     Sigma in a single HBM pass); MC needs the gamma draw between the
     E-step and the Sigma pass, so it computes the E-step inline and uses
     the triangle-blocked SYRK for Sigma (half the dense FLOPs).
+
+    ``phi``/``phi_spec`` switch the statistic to Nystrom phi-space
+    (core/nystrom.py): X holds RAW rows and phi = (landmarks, proj) is
+    featurized ON DEVICE inside the statistic. EM fuses featurization
+    into the single X sweep (``ops.nystrom_fused_stats`` — the (N, m)
+    phi matrix never exists); MC featurizes this block only
+    (``ops.nystrom_phi``, block-bounded residency) because the gamma
+    draw sits between the E-step and the Sigma pass. ``mask`` is
+    required in phi-space — a zero X row is NOT a zero phi row, so
+    padding must be masked rather than relying on the zero-row layout.
     """
+    if phi_spec is not None:
+        return _phi_accumulate_stats(X, rho, beta, w, mode=mode, key=key,
+                                     eps=eps, backend=backend, row0=row0,
+                                     phi=phi, phi_spec=phi_spec, mask=mask)
     if mode == "EM":
         margin, gamma, b, S = ops.fused_stats(X, rho, beta, w, eps=eps,
                                               backend=backend)
@@ -72,6 +110,27 @@ def accumulate_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
         coef = rho.astype(jnp.float32) / gamma + beta.astype(jnp.float32)
         b = X.astype(jnp.float32).T @ coef
         S = ops.syrk_tri(X, 1.0 / gamma, backend=backend)
+    return margin, gamma, S, b
+
+
+def _phi_accumulate_stats(X, rho, beta, w, *, mode, key, eps, backend,
+                          row0, phi, phi_spec: PhiSpec, mask):
+    """Phi-space flavor of ``accumulate_stats`` (see its docstring)."""
+    landmarks, proj = phi
+    if mask is None:
+        mask = jnp.ones((X.shape[0],), jnp.float32)
+    common = dict(sigma=phi_spec.sigma, kind=phi_spec.kind,
+                  add_bias=phi_spec.add_bias, backend=backend)
+    if mode == "EM":
+        margin, gamma, b, S = ops.nystrom_fused_stats(
+            X, landmarks, proj, rho, beta, w, mask, eps=eps, **common)
+    else:
+        phi_mat = ops.nystrom_phi(X, landmarks, proj, mask, **common)
+        margin = phi_mat @ w.astype(jnp.float32)
+        gamma = augment.gamma_mc_rowwise(key, rho - margin, eps, row0)
+        coef = rho.astype(jnp.float32) / gamma + beta.astype(jnp.float32)
+        b = phi_mat.T @ coef
+        S = ops.syrk_tri(phi_mat, mask / gamma, backend=backend)
     return margin, gamma, S, b
 
 
@@ -100,13 +159,14 @@ def _k_block(S_or_X, axis_name):
 
 @partial(jax.jit, static_argnames=("mode", "lam", "eps", "jitter", "axes",
                                    "triangle", "backend", "k_shard_axis",
-                                   "reduce_dtype"))
+                                   "reduce_dtype", "phi_spec"))
 def cls_step(data: SVMData, w: jnp.ndarray, key: jax.Array, *,
              mode: str = "EM", lam: float = 1.0, eps: float = 1e-6,
              jitter: float = 1e-6, axes: Sequence[str] = (),
              triangle: bool = True, backend: str | None = None,
              k_shard_axis: str | None = None,
-             reduce_dtype: str | None = None):
+             reduce_dtype: str | None = None,
+             phi=None, phi_spec: PhiSpec | None = None):
     """One LIN-*-CLS iteration. Returns (w_new, aux dict)."""
     X, y, mask = data
     # Rowwise MC draws are keyed by global row index, so shards need no
@@ -114,10 +174,15 @@ def cls_step(data: SVMData, w: jnp.ndarray, key: jax.Array, *,
     # the chain identical to the single-device and streaming drivers.
     row0 = stats.shard_row_offset(X.shape[0], axes)
 
+    if phi_spec is not None and k_shard_axis is not None:
+        raise NotImplementedError(
+            "k_shard_axis does not compose with the Nystrom phi path "
+            "yet: the 2-D Sigma column split would need a column-tiled "
+            "featurize kernel")
     if k_shard_axis is None:
         margin, gamma, S, b = accumulate_stats(
             X, y, y, w, mode=mode, key=key, eps=eps, backend=backend,
-            row0=row0)
+            row0=row0, phi=phi, phi_spec=phi_spec, mask=mask)
         S, b = stats.reduce_stats(S, b, axes, triangle=triangle,
                                   reduce_dtype=reduce_dtype)
     else:
@@ -150,18 +215,20 @@ def cls_step(data: SVMData, w: jnp.ndarray, key: jax.Array, *,
 
 def cls_chunk_stats(chunk: SVMData, w: jnp.ndarray, key: jax.Array,
                     row0: jnp.ndarray, *, mode: str, eps: float,
-                    backend: str | None) -> dict:
+                    backend: str | None, phi=None,
+                    phi_spec: PhiSpec | None = None) -> dict:
     """Streaming E-step body for CLS: one chunk's additive contributions.
 
     Every field is an exact sum over the chunk's valid rows, so the
     stream driver tree-sums these dicts across chunks and lands on the
     same (Sigma, b, loss, aux) the in-memory step computes in one shot
-    (padded rows contribute zero by the layout convention).
+    (padded rows contribute zero by the layout convention; in phi-space
+    the mask enforces it — see ``accumulate_stats``).
     """
     X, y, mask = chunk
     margin, gamma, S, b = accumulate_stats(
         X, y, y, w, mode=mode, key=key, eps=eps, backend=backend,
-        row0=row0)
+        row0=row0, phi=phi, phi_spec=phi_spec, mask=mask)
     return {
         "S": S,
         "b": b,

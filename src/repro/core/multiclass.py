@@ -31,10 +31,36 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
 from . import objective, stats
-from .linear import SVMData, accumulate_stats
+from .linear import PhiSpec, SVMData, accumulate_stats
 
 _NEG = -1e30
+
+
+def _maybe_featurize(X: jnp.ndarray, mask: jnp.ndarray, phi,
+                     phi_spec: PhiSpec | None, backend: str | None):
+    """Nystrom phi-space entry for MLT: featurize the block and run the
+    per-class conditional on the (rows, M_phi) result.
+
+    In the in-memory step the block is the whole (local) set, so one
+    featurize serves all M class passes (scores + M stats sweeps) —
+    cheaper than M fused featurize passes, the opposite trade from
+    binary CLS where the fused kernel's single pass wins (DESIGN.md
+    §Perf/Nystrom). The STREAMING driver re-streams chunks per class
+    pass, so it pays this featurize (M + 1) times per chunk per
+    iteration — inherent to not holding phi resident, and the same
+    recompute-vs-residency trade the LIN stream path already makes for
+    MLT's score matrix (module docstring): at most ~(1 + D/m) extra
+    work over each pass's O(rows · m^2) Sigma statistic. Zeroed phi
+    rows keep padded rows exact no-ops for Sigma/b even though the
+    Crammer-Singer rho of a padded row is nonzero."""
+    if phi_spec is None:
+        return X
+    landmarks, proj = phi
+    return ops.nystrom_phi(X, landmarks, proj, mask, sigma=phi_spec.sigma,
+                           kind=phi_spec.kind, add_bias=phi_spec.add_bias,
+                           backend=backend)
 
 
 def _rho_beta(F: jnp.ndarray, labels: jnp.ndarray, y: jnp.ndarray,
@@ -56,7 +82,8 @@ def _rho_beta(F: jnp.ndarray, labels: jnp.ndarray, y: jnp.ndarray,
 def mlt_class_chunk_stats(chunk: SVMData, W: jnp.ndarray, key: jax.Array,
                           row0: jnp.ndarray, y: jnp.ndarray, *,
                           num_classes: int, mode: str, eps: float,
-                          backend: str | None) -> dict:
+                          backend: str | None, phi=None,
+                          phi_spec: PhiSpec | None = None) -> dict:
     """Streaming class-y E-step body: one chunk's (Sigma, b) contribution.
 
     Recomputes the chunk's score matrix from the *current* W (classes
@@ -66,6 +93,7 @@ def mlt_class_chunk_stats(chunk: SVMData, W: jnp.ndarray, key: jax.Array,
     ``mlt_step``'s per-class keying, so MC chains agree bitwise with the
     in-memory drivers."""
     X, labels, mask = chunk
+    X = _maybe_featurize(X, mask, phi, phi_spec, backend)
     F = X.astype(jnp.float32) @ W.T.astype(jnp.float32)
     rho, beta = _rho_beta(F, labels, y, num_classes)
     _, _, S, b = accumulate_stats(
@@ -74,10 +102,13 @@ def mlt_class_chunk_stats(chunk: SVMData, W: jnp.ndarray, key: jax.Array,
     return {"S": S, "b": b}
 
 
-def mlt_chunk_obj(chunk: SVMData, W: jnp.ndarray) -> dict:
+def mlt_chunk_obj(chunk: SVMData, W: jnp.ndarray, phi=None,
+                  phi_spec: PhiSpec | None = None,
+                  backend: str | None = None) -> dict:
     """Streaming objective body: the chunk's Crammer-Singer loss terms
     at the end-of-sweep W, plus the valid-row count (both additive)."""
     X, labels, mask = chunk
+    X = _maybe_featurize(X, mask, phi, phi_spec, backend)
     F = X.astype(jnp.float32) @ W.T.astype(jnp.float32)
     return {"loss": objective.cs_obj_terms(F, labels, mask),
             "mask_sum": jnp.sum(mask)}
@@ -85,18 +116,20 @@ def mlt_chunk_obj(chunk: SVMData, W: jnp.ndarray) -> dict:
 
 @partial(jax.jit, static_argnames=("num_classes", "mode", "lam", "eps",
                                    "jitter", "axes", "triangle", "backend",
-                                   "reduce_dtype"))
+                                   "reduce_dtype", "phi_spec"))
 def mlt_step(data: SVMData, W: jnp.ndarray, key: jax.Array, *,
              num_classes: int, mode: str = "EM", lam: float = 1.0,
              eps: float = 1e-6, jitter: float = 1e-6,
              axes: Sequence[str] = (), triangle: bool = True,
              backend: str | None = None,
-             reduce_dtype: str | None = None):
+             reduce_dtype: str | None = None,
+             phi=None, phi_spec: PhiSpec | None = None):
     """One outer MLT iteration = one block sweep over all M classes.
 
     W: (M, K). Returns (W_new, aux dict).
     """
     X, labels, mask = data
+    X = _maybe_featurize(X, mask, phi, phi_spec, backend)
     M = num_classes
     Xf = X.astype(jnp.float32)
     row0 = stats.shard_row_offset(X.shape[0], axes)

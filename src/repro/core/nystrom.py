@@ -19,88 +19,178 @@ parallel machinery then applies unchanged:
   * iteration cost falls from O(N^2[N/P + log N]) to O(m^2[N/P + log m])
     = O(N[N/P + ...]) at m = sqrt(N) — the cubic-in-N blocker the paper
     names is gone;
-  * the map step is embarrassingly parallel over rows (phi is computed
-    per shard); the reduce is the familiar m x m triangle psum;
-  * EM/MC/CLS/SVR/MLT all inherit the approximation for free (it's just
-    a feature transform).
+  * the map step is embarrassingly parallel over rows; the reduce is the
+    familiar m x m triangle psum;
+  * EM/MC x CLS/SVR/MLT all inherit the approximation for free, INCLUDING
+    the drivers: ``NystromSVM`` delegates to the linear PEMSVM with
+    ``config.phi_spec`` set, so ``driver="scan"`` (chunked on-device) and
+    ``driver="stream"`` (out-of-core over RAW rows) both work — the
+    nonlinear path inherits every hot-path optimization of the linear one.
 
-K_mm^{-1/2} is computed once via eigendecomposition with a spectral
-floor (rank truncation) for stability.
+Featurization happens ON DEVICE inside the statistic kernels
+(``kernels/nystrom_phi.py``): the EM hot path fuses the RBF cross-Gram,
+the K_mm^{-1/2} projection and the (margin, gamma, b, Sigma) accumulation
+into one X sweep — the (N, m) phi matrix never exists in HBM, and the
+stream driver's device residency is bounded by (prefetch + 2) raw D-wide
+chunks regardless of m (DESIGN.md §Perf/Nystrom).
+
+Host-side work is exactly two one-time O(m^2)-memory steps: landmark
+selection (uniform; reservoir-sampled for out-of-core sources) and the
+``K_mm^{-1/2}`` eigendecomposition with a spectral floor — cached on the
+model, so prediction never refactorizes.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
-from . import kernel as krn
-from .solver import PEMSVM, SVMConfig
-
 import jax.numpy as jnp
+
+from . import kernel as krn
+from .linear import PhiSpec
+from .solver import FitResult, PEMSVM, SVMConfig
+
+
+def nystrom_projection(landmarks: np.ndarray, *, kind: str = "rbf",
+                       sigma: float = 1.0, spectral_floor: float = 1e-6,
+                       backend: str | None = None) -> np.ndarray:
+    """K_mm^{-1/2} (m, m) float64 via one eigendecomposition.
+
+    The spectral floor truncates near-null directions of the landmark
+    Gram (rank deficiency from duplicate/near-duplicate landmarks) so
+    the inverse square root stays bounded. This is the ONLY
+    decomposition the Nyström path ever runs — fit computes it once and
+    caches it; prediction reuses it.
+    """
+    K_mm = np.asarray(krn.gram_matrix(
+        jnp.asarray(landmarks), jnp.asarray(landmarks), kind=kind,
+        sigma=sigma, backend=backend), np.float64)
+    w, V = np.linalg.eigh(0.5 * (K_mm + K_mm.T))
+    floor = spectral_floor * max(w.max(), 1e-30)
+    keep = w > floor
+    return (V[:, keep] / np.sqrt(w[keep])) @ V[:, keep].T
 
 
 def nystrom_features(X: np.ndarray, landmarks: np.ndarray, *,
                      kind: str = "rbf", sigma: float = 1.0,
                      spectral_floor: float = 1e-6,
                      backend: str | None = None) -> np.ndarray:
-    """phi = K_nm @ K_mm^{-1/2}: (N, m) Nyström features."""
-    K_mm = np.asarray(krn.gram_matrix(
-        jnp.asarray(landmarks), jnp.asarray(landmarks), kind=kind,
-        sigma=sigma, backend=backend), np.float64)
+    """phi = K_nm @ K_mm^{-1/2}: (N, m) Nyström features.
+
+    Host float64 featurization that MATERIALIZES phi — kept as the
+    accuracy oracle and benchmark baseline; the fit path uses the
+    on-device fused kernels instead (see module docstring)."""
+    proj = nystrom_projection(landmarks, kind=kind, sigma=sigma,
+                              spectral_floor=spectral_floor,
+                              backend=backend)
     K_nm = np.asarray(krn.gram_matrix(
         jnp.asarray(X), jnp.asarray(landmarks), kind=kind, sigma=sigma,
         backend=backend), np.float64)
-    w, V = np.linalg.eigh(0.5 * (K_mm + K_mm.T))
-    floor = spectral_floor * max(w.max(), 1e-30)
-    keep = w > floor
-    inv_sqrt = (V[:, keep] / np.sqrt(w[keep])) @ V[:, keep].T
-    return (K_nm @ inv_sqrt).astype(np.float32)
+    return (K_nm @ proj).astype(np.float32)
 
 
 class NystromSVM:
-    """KRN-*-{CLS,SVR,MLT} via Nyström features + the linear parallel
-    solver. m defaults to ceil(sqrt(N)) per the paper's PSVM reference."""
+    """KRN-{EM,MC}-{CLS,SVR,MLT} via on-device Nyström featurization +
+    the linear parallel solver. m defaults to ceil(sqrt(N)) per the
+    paper's PSVM reference.
+
+    Accepts any KRN ``SVMConfig`` — including ``driver="stream"`` (the
+    out-of-core nonlinear fit; raw rows stream, phi never materializes)
+    and the SVR/MLT tasks the exact Gram solver cannot serve.
+    """
 
     def __init__(self, config: SVMConfig, n_landmarks: int | None = None,
-                 mesh=None, data_axes=None, seed: int = 0):
+                 mesh=None, data_axes=None, seed: int = 0,
+                 spectral_floor: float = 1e-6):
         assert config.formulation == "KRN", "NystromSVM approximates KRN"
+        self.config = config
         self.kernel_kind = config.kernel
         self.sigma = config.sigma
         self.n_landmarks = n_landmarks
         self.seed = seed
-        # delegate to the LIN machinery in phi-space; lam carries over
+        self.spectral_floor = spectral_floor
+        # Delegate to the LIN machinery in phi-space; lam carries over
         # because the phi-space pseudo-prior is lam^{-1} I exactly.
-        lin_cfg = SVMConfig(
-            formulation="LIN", algorithm=config.algorithm, task=config.task,
-            lam=config.lam, eps=config.eps, eps_ins=config.eps_ins,
-            num_classes=config.num_classes, max_iters=config.max_iters,
-            min_iters=config.min_iters, patience=config.patience,
-            tol=config.tol, burnin=config.burnin,
-            triangle_reduce=config.triangle_reduce,
-            reduce_dtype=config.reduce_dtype, backend=config.backend,
-            add_bias=True, seed=config.seed)
+        # dataclasses.replace propagates EVERY config field (driver,
+        # scan_chunk, chunk_rows, prefetch, jitter, k_shard_axis, and
+        # whatever is added next) — only the three phi-mode fields are
+        # overridden: the bias moves to phi-space (add_bias=False +
+        # PhiSpec.add_bias=True; an X-space bias column would perturb
+        # the RBF distances).
+        lin_cfg = dataclasses.replace(
+            config, formulation="LIN", add_bias=False,
+            phi_spec=PhiSpec(sigma=config.sigma, kind=config.kernel,
+                             add_bias=True))
         self.svm = PEMSVM(lin_cfg, mesh=mesh, data_axes=data_axes)
         self._landmarks: np.ndarray | None = None
+        self._proj: np.ndarray | None = None
 
-    def fit(self, X: np.ndarray, y: np.ndarray):
+    # ------------------------------------------------------------ fitting
+    def _install_featurizer(self, landmarks: np.ndarray) -> None:
+        """The one-time host-side setup: cache the landmark strip and
+        K_mm^{-1/2}, and hand both to the delegate's device path.
+        ``eigh`` runs exactly once per fit; predict/score/
+        decision_function reuse the cache."""
+        self._landmarks = np.asarray(landmarks, np.float32)
+        self._proj = nystrom_projection(
+            self._landmarks, kind=self.kernel_kind, sigma=self.sigma,
+            spectral_floor=self.spectral_floor,
+            backend=self.svm.config.backend).astype(np.float32)
+        self.svm._phi_arrays = (self._landmarks, self._proj)
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> FitResult:
         X = np.asarray(X, np.float32)
         N = X.shape[0]
         m = self.n_landmarks or int(np.ceil(np.sqrt(N)))
         rng = np.random.default_rng(self.seed)
-        self._landmarks = X[rng.choice(N, size=min(m, N), replace=False)]
-        phi = nystrom_features(X, self._landmarks, kind=self.kernel_kind,
-                               sigma=self.sigma,
-                               backend=self.svm.config.backend)
-        return self.svm.fit(phi, y)
+        self._install_featurizer(
+            X[rng.choice(N, size=min(m, N), replace=False)])
+        return self.svm.fit(X, y)
 
+    def fit_libsvm(self, path: str, n_features: int) -> FitResult:
+        """Out-of-core nonlinear fit from a libsvm file.
+
+        One reservoir-sampling pass picks the landmarks (O(m D) host
+        memory), then the delegate streams RAW rows chunk by chunk —
+        featurize-and-accumulate on device, so peak device input
+        residency is (prefetch + 2) D-wide chunks and the dataset is
+        never resident on host or device."""
+        from repro.data import iter_libsvm, reservoir_rows
+
+        cfg = self.svm.config
+        chunks = iter_libsvm(path, cfg.chunk_rows, n_features)
+        if self.n_landmarks:
+            landmarks, _ = reservoir_rows(chunks, self.n_landmarks,
+                                          seed=self.seed)
+        else:
+            # m = ceil(sqrt(N)) needs N first: count on a cheap extra
+            # pass (the file is re-read every iteration anyway).
+            n_valid = sum(int(np.sum(np.asarray(mc) > 0))
+                          for _, _, mc in chunks)
+            m = int(np.ceil(np.sqrt(n_valid)))
+            landmarks, _ = reservoir_rows(
+                iter_libsvm(path, cfg.chunk_rows, n_features), m,
+                seed=self.seed)
+        self._install_featurizer(landmarks)
+        return self.svm.fit_libsvm(path, n_features)
+
+    # ---------------------------------------------------------- inference
     def _phi(self, X: np.ndarray) -> np.ndarray:
-        return nystrom_features(np.asarray(X, np.float32), self._landmarks,
-                                kind=self.kernel_kind, sigma=self.sigma,
-                                backend=self.svm.config.backend)
+        """(N, m) Nyström features from the CACHED projection (no
+        eigendecomposition; host-precision oracle path)."""
+        assert self._proj is not None, "fit first"
+        K_nm = np.asarray(krn.gram_matrix(
+            jnp.asarray(np.asarray(X, np.float32)),
+            jnp.asarray(self._landmarks), kind=self.kernel_kind,
+            sigma=self.sigma, backend=self.svm.config.backend), np.float64)
+        return (K_nm @ self._proj.astype(np.float64)).astype(np.float32)
 
     def predict(self, X: np.ndarray) -> np.ndarray:
-        return self.svm.predict(self._phi(X))
+        return self.svm.predict(np.asarray(X, np.float32))
 
     def decision_function(self, X: np.ndarray) -> np.ndarray:
-        return self.svm.decision_function(self._phi(X))
+        return self.svm.decision_function(np.asarray(X, np.float32))
 
     def score(self, X: np.ndarray, y: np.ndarray) -> float:
-        return self.svm.score(self._phi(X), y)
+        return self.svm.score(np.asarray(X, np.float32), y)

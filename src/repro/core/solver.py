@@ -28,7 +28,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import (distributed, kernel as krn, linear, multiclass, objective,
                stats, svr)
-from .linear import SVMData
+from .linear import PhiSpec, SVMData
 
 FORMULATIONS = ("LIN", "KRN")
 ALGORITHMS = ("EM", "MC")
@@ -67,6 +67,7 @@ class SVMConfig:
     add_bias: bool = True
     seed: int = 0
     k_shard_axis: str | None = None  # beyond-paper 2-D Sigma statistic
+    phi_spec: PhiSpec | None = None  # Nystrom phi-space mode (NystromSVM)
 
     def __post_init__(self):
         assert self.formulation in FORMULATIONS, self.formulation
@@ -76,13 +77,18 @@ class SVMConfig:
         assert self.scan_chunk >= 1, self.scan_chunk
         assert self.chunk_rows >= 1, self.chunk_rows
         assert self.prefetch >= 1, self.prefetch  # residency = prefetch+2
-        if self.formulation == "KRN" and self.task != "CLS":
-            raise NotImplementedError(
-                "paper provides KRN for binary classification")
-        if self.formulation == "KRN" and self.driver == "stream":
-            raise NotImplementedError(
-                "driver='stream' is LIN-only: the KRN statistic is the "
-                "N x N Gram, which is not a row-chunk-additive sum")
+        # KRN x {SVR, MLT, stream} is valid CONFIGURATION now: NystromSVM
+        # serves all of it through the phi-space route. Only the exact
+        # N x N-Gram solver (PEMSVM) rejects those combinations, at fit
+        # time — see PEMSVM._prepare / fit.
+        if self.phi_spec is not None:
+            assert self.formulation == "LIN", (
+                "phi_spec is the LIN-delegate mode NystromSVM builds; "
+                "construct a KRN config and wrap it in NystromSVM")
+            assert not self.add_bias, (
+                "phi_spec carries its own phi-space bias column; "
+                "X-space add_bias must be False (a bias feature would "
+                "perturb the RBF distances)")
         if self.jitter is None:
             object.__setattr__(
                 self, "jitter",
@@ -125,6 +131,29 @@ def _build_step_fn(cfg: SVMConfig, mesh: Mesh | None,
     if cfg.formulation == "KRN":
         def step(data, prior, state, key):
             return krn.krn_step(data, prior, state, key, **common)
+    elif cfg.phi_spec is not None:
+        # Nystrom phi-space steps: the featurizer arrays (landmarks,
+        # K_mm^{-1/2}) ride the replicated ``prior`` slot — the same
+        # plumbing the exact-KRN Gram prior uses — so the scan driver
+        # and shard_wrap carry them without a second mechanism.
+        if cfg.task == "CLS":
+            def step(data, prior, state, key):
+                return linear.cls_step(data, state, key,
+                                       k_shard_axis=cfg.k_shard_axis,
+                                       phi=prior, phi_spec=cfg.phi_spec,
+                                       **common)
+        elif cfg.task == "SVR":
+            def step(data, prior, state, key):
+                return svr.svr_step(data, state, key,
+                                    eps_ins=cfg.eps_ins, phi=prior,
+                                    phi_spec=cfg.phi_spec, **common)
+        else:
+            def step(data, prior, state, key):
+                return multiclass.mlt_step(data, state, key,
+                                           num_classes=cfg.num_classes,
+                                           phi=prior,
+                                           phi_spec=cfg.phi_spec,
+                                           **common)
     elif cfg.task == "CLS":
         def step(data, state, key):
             return linear.cls_step(data, state, key,
@@ -143,9 +172,12 @@ def _build_step_fn(cfg: SVMConfig, mesh: Mesh | None,
     if mesh is None:
         return step
     state_spec = P(None, None) if cfg.task == "MLT" else P(None)
+    prior_spec = ((P(None, None), P(None, None))
+                  if cfg.phi_spec is not None else P(None, None))
     return distributed.shard_wrap(mesh, data_axes, step,
                                   state_spec=state_spec,
-                                  has_prior=has_prior)
+                                  has_prior=has_prior,
+                                  prior_spec=prior_spec)
 
 
 @functools.lru_cache(maxsize=256)
@@ -215,16 +247,22 @@ def _stream_fns(cfg: SVMConfig):
     For MLT, ``chunk``/``mstep`` additionally take the traced class
     index (one solve per class per sweep) and ``obj`` scores the
     end-of-sweep W on one block.
+
+    Every chunk/obj fn takes a trailing ``phi`` operand — None for LIN,
+    the (landmarks, projection) pair for the Nystrom phi-space route,
+    in which case the chunk featurizes ON DEVICE and the raw D-wide
+    rows are all that ever crosses host->device.
     """
-    common = dict(mode=cfg.algorithm, eps=cfg.eps, backend=cfg.backend)
+    common = dict(mode=cfg.algorithm, eps=cfg.eps, backend=cfg.backend,
+                  phi_spec=cfg.phi_spec)
     add = jax.jit(functools.partial(jax.tree_util.tree_map, jnp.add))
 
     if cfg.task == "MLT":
         @jax.jit
-        def chunk(data, W, key, row0, y_cls):
+        def chunk(data, W, key, row0, y_cls, phi):
             return multiclass.mlt_class_chunk_stats(
                 data, W, key, row0, y_cls,
-                num_classes=cfg.num_classes, **common)
+                num_classes=cfg.num_classes, phi=phi, **common)
 
         @jax.jit
         def mstep(W, S, b, key, y_cls):
@@ -238,8 +276,9 @@ def _stream_fns(cfg: SVMConfig):
             return W.at[y_cls].set(w_new)
 
         @jax.jit
-        def obj(data, W):
-            return multiclass.mlt_chunk_obj(data, W)
+        def obj(data, W, phi):
+            return multiclass.mlt_chunk_obj(data, W, phi, cfg.phi_spec,
+                                            cfg.backend)
 
         @jax.jit
         def obj_total(W, loss_sum):
@@ -250,13 +289,15 @@ def _stream_fns(cfg: SVMConfig):
 
     if cfg.task == "SVR":
         @jax.jit
-        def chunk(data, w, key, row0):
+        def chunk(data, w, key, row0, phi):
             return svr.svr_chunk_stats(data, w, key, row0,
-                                       eps_ins=cfg.eps_ins, **common)
+                                       eps_ins=cfg.eps_ins, phi=phi,
+                                       **common)
     else:
         @jax.jit
-        def chunk(data, w, key, row0):
-            return linear.cls_chunk_stats(data, w, key, row0, **common)
+        def chunk(data, w, key, row0, phi):
+            return linear.cls_chunk_stats(data, w, key, row0, phi=phi,
+                                          **common)
 
     @jax.jit
     def mstep(S, b, loss_sum, key):
@@ -280,8 +321,21 @@ class PEMSVM:
             data_axes = distributed.data_axes_of(mesh, model_axes=excl)
         self.data_axes: tuple[str, ...] = tuple(data_axes or ())
         self._train_X: np.ndarray | None = None  # kept for KRN prediction
+        # Nystrom phi-space featurizer arrays (landmarks, K_mm^{-1/2});
+        # set by NystromSVM before fit when config.phi_spec is present.
+        self._phi_arrays: tuple | None = None
 
     # ------------------------------------------------------------- fitting
+    def _phi_width(self) -> int:
+        """State/statistic dimension in phi-space: projection columns
+        plus the phi-space bias column."""
+        assert self._phi_arrays is not None, (
+            "config.phi_spec is set but no featurizer arrays were "
+            "installed; fit through NystromSVM, which selects landmarks "
+            "and computes K_mm^{-1/2} before delegating")
+        return (self._phi_arrays[1].shape[1]
+                + int(self.config.phi_spec.add_bias))
+
     def fit(self, X: np.ndarray, y: np.ndarray) -> FitResult:
         cfg = self.config
         X = np.asarray(X, np.float32)
@@ -291,6 +345,11 @@ class PEMSVM:
         N = X.shape[0]
 
         if cfg.driver == "stream":
+            if cfg.formulation == "KRN":
+                raise NotImplementedError(
+                    "driver='stream' cannot use the exact N x N Gram "
+                    "statistic (not row-chunk-additive); use NystromSVM, "
+                    "whose phi-space route streams raw rows")
             return self._fit_stream_arrays(X, y)
 
         data, prior, state = self._prepare(X, y)
@@ -316,7 +375,9 @@ class PEMSVM:
             X, y = load_libsvm(path, n_features, rank=rank, world=world)
             return self.fit(X, y)
         if cfg.formulation == "KRN":
-            raise NotImplementedError("driver='stream' is LIN-only")
+            raise NotImplementedError(
+                "driver='stream' cannot use the exact N x N Gram "
+                "statistic; use NystromSVM.fit_libsvm")
         if world > 1:
             # A rank stripe is a PARTIAL dataset; stream has no
             # cross-rank reduction (it rejects meshes), so fitting a
@@ -326,7 +387,8 @@ class PEMSVM:
                 "driver='stream' with world > 1 needs a cross-host "
                 "reduction that does not exist yet; stream the full "
                 "file (world=1) or use a resident driver on a mesh")
-        K = n_features + (1 if cfg.add_bias else 0)
+        K = (self._phi_width() if cfg.phi_spec is not None
+             else n_features + (1 if cfg.add_bias else 0))
 
         def make_chunks():
             for Xc, yc, mc in iter_libsvm(path, cfg.chunk_rows,
@@ -366,7 +428,9 @@ class PEMSVM:
                 yield SVMData(Xp[i0:i0 + cr], tp[i0:i0 + cr],
                               mask[i0:i0 + cr])
 
-        return self._fit_stream(make_chunks, X.shape[1])
+        K = (self._phi_width() if cfg.phi_spec is not None
+             else X.shape[1])
+        return self._fit_stream(make_chunks, K)
 
     def _fit_scan(self, data, prior, state, N: int) -> FitResult:
         """Chunked on-device driver (DESIGN.md §Perf).
@@ -547,6 +611,10 @@ class PEMSVM:
             state = jnp.zeros((cfg.num_classes, K), jnp.float32)
         else:
             state = jnp.zeros((K,), jnp.float32)
+        # Nystrom featurizer arrays ride along to every chunk call; the
+        # raw D-wide rows are the only per-chunk host->device traffic.
+        phi = (tuple(jnp.asarray(a) for a in self._phi_arrays)
+               if cfg.phi_spec is not None else None)
         peak_bytes = 0
 
         def sweep(fn):
@@ -575,15 +643,16 @@ class PEMSVM:
             if is_mlt:
                 for y_cls in range(cfg.num_classes):
                     t = sweep(lambda d, r0, _y=jnp.int32(y_cls):
-                              fns["chunk"](d, state, sub, r0, _y))
+                              fns["chunk"](d, state, sub, r0, _y, phi))
                     state = fns["mstep"](state, t["S"], t["b"], sub,
                                          jnp.int32(y_cls))
-                t = sweep(lambda d, r0: fns["obj"](d, state))
+                t = sweep(lambda d, r0: fns["obj"](d, state, phi))
                 obj, mask_sum = jax.device_get(
                     (fns["obj_total"](state, t["loss"]), t["mask_sum"]))
                 aux = {"objective": float(obj)}
             else:
-                t = sweep(lambda d, r0: fns["chunk"](d, state, sub, r0))
+                t = sweep(lambda d, r0: fns["chunk"](d, state, sub, r0,
+                                                     phi))
                 state, obj_dev = fns["mstep"](t["S"], t["b"], t["loss"],
                                               sub)
                 obj, scalars = jax.device_get(
@@ -617,6 +686,11 @@ class PEMSVM:
             target = np.asarray(y, np.float32)
 
         if cfg.formulation == "KRN":
+            if cfg.task != "CLS":
+                raise NotImplementedError(
+                    "the paper's exact KRN solver covers binary "
+                    "classification only; NystromSVM serves KRN "
+                    f"{cfg.task} through the phi-space route")
             self._train_X = X
             G = np.asarray(krn.gram_matrix(
                 jnp.asarray(X), jnp.asarray(X), kind=cfg.kernel,
@@ -641,7 +715,8 @@ class PEMSVM:
             state = jnp.zeros((Gp.shape[0],), jnp.float32)
             return data, prior, state
 
-        # LIN
+        # LIN (raw rows in phi-space mode: featurization happens inside
+        # the step, so only D-wide rows are sharded/resident)
         if self.mesh is not None:
             data = distributed.shard_rows(self.mesh, self.data_axes, X,
                                           target)
@@ -649,6 +724,14 @@ class PEMSVM:
             Xp, tp, mask = distributed.pad_rows(X, target, 1)
             data = SVMData(jnp.asarray(Xp), jnp.asarray(tp),
                            jnp.asarray(mask))
+        prior = None
+        if cfg.phi_spec is not None:
+            K = self._phi_width()
+            prior = tuple(jnp.asarray(a, jnp.float32)
+                          for a in self._phi_arrays)
+            if self.mesh is not None:
+                rep = NamedSharding(self.mesh, P(None, None))
+                prior = tuple(jax.device_put(a, rep) for a in prior)
         if cfg.task == "MLT":
             state = jnp.zeros((cfg.num_classes, K), jnp.float32)
         else:
@@ -656,7 +739,7 @@ class PEMSVM:
         if self.mesh is not None:
             state = jax.device_put(state, NamedSharding(
                 self.mesh, P(*(None,) * state.ndim)))
-        return data, None, state
+        return data, prior, state
 
     def _build_step(self, has_prior: bool):
         return _build_step_fn(self.config, self.mesh,
@@ -673,7 +756,14 @@ class PEMSVM:
                 jnp.asarray(X), kind=cfg.kernel, sigma=cfg.sigma,
                 backend=cfg.backend)
             return np.asarray(f)
-        if cfg.add_bias:
+        if cfg.phi_spec is not None:
+            from repro.kernels import ops
+            landmarks, proj = (jnp.asarray(a) for a in self._phi_arrays)
+            X = ops.nystrom_phi(
+                jnp.asarray(X), landmarks, proj, None,
+                sigma=cfg.phi_spec.sigma, kind=cfg.phi_spec.kind,
+                add_bias=cfg.phi_spec.add_bias, backend=cfg.backend)
+        elif cfg.add_bias:
             X = np.concatenate([X, np.ones((X.shape[0], 1), np.float32)], 1)
         if cfg.task == "MLT":
             return np.asarray(jnp.asarray(X) @ w.T)

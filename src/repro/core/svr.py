@@ -28,19 +28,36 @@ import jax.numpy as jnp
 
 from repro.kernels import ops
 from . import augment, objective, stats
-from .linear import SVMData
+from .linear import PhiSpec, SVMData
 
 
 def svr_local_stats(X: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray, *,
                     mode: str, key: jax.Array | None, eps: float,
                     eps_ins: float, backend: str | None,
-                    row0: jnp.ndarray | int = 0):
+                    row0: jnp.ndarray | int = 0,
+                    phi=None, phi_spec: PhiSpec | None = None,
+                    mask: jnp.ndarray | None = None):
     """(pred, gamma, omega, Sigma^p, mu^p) over one row block.
 
     MC draws both mixtures per global row (two independent streams via
     a key split, each rowwise-keyed), so the chain is invariant to
     chunking and sharding layout. Padded rows (X-row = 0, y = 0)
-    contribute exactly zero to Sigma and b."""
+    contribute exactly zero to Sigma and b.
+
+    ``phi``/``phi_spec`` switch to Nystrom phi-space: the block is
+    featurized on device (``ops.nystrom_phi``, block-bounded) and the
+    double mixture runs on phi rows. The single-pass fused kernel does
+    not apply here — SVR's statistic needs BOTH mixtures' weights, and
+    MC additionally draws between E-step and Sigma — so the phi-space
+    SVR route is featurize-then-accumulate per block, with ``mask``
+    zeroing phi rows (a zero X row is not a zero phi row)."""
+    if phi_spec is not None:
+        landmarks, proj = phi
+        if mask is None:
+            mask = jnp.ones((X.shape[0],), jnp.float32)
+        X = ops.nystrom_phi(X, landmarks, proj, mask, sigma=phi_spec.sigma,
+                            kind=phi_spec.kind, add_bias=phi_spec.add_bias,
+                            backend=backend)
     k_lo = k_hi = None
     if mode == "MC":
         k_lo, k_hi = jax.random.split(key)
@@ -50,6 +67,8 @@ def svr_local_stats(X: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray, *,
     omega = augment.update_gamma(mode, k_hi, res + eps_ins, eps, row0=row0)
 
     weights = 1.0 / gamma + 1.0 / omega
+    if phi_spec is not None:
+        weights = weights * mask  # phi rows are zeroed, but keep S exact
     S = ops.syrk_tri(X, weights, backend=backend)
     coef = (y - eps_ins) / gamma + (y + eps_ins) / omega
     b = X.astype(jnp.float32).T @ coef
@@ -58,13 +77,14 @@ def svr_local_stats(X: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray, *,
 
 def svr_chunk_stats(chunk: SVMData, w: jnp.ndarray, key: jax.Array,
                     row0: jnp.ndarray, *, mode: str, eps: float,
-                    eps_ins: float, backend: str | None) -> dict:
+                    eps_ins: float, backend: str | None, phi=None,
+                    phi_spec: PhiSpec | None = None) -> dict:
     """Streaming E-step body for SVR: one chunk's additive contributions
     (tree-summed across chunks by the stream driver)."""
     X, y, mask = chunk
     pred, gamma, omega, S, b = svr_local_stats(
         X, y, w, mode=mode, key=key, eps=eps, eps_ins=eps_ins,
-        backend=backend, row0=row0)
+        backend=backend, row0=row0, phi=phi, phi_spec=phi_spec, mask=mask)
     return {
         "S": S,
         "b": b,
@@ -77,20 +97,21 @@ def svr_chunk_stats(chunk: SVMData, w: jnp.ndarray, key: jax.Array,
 
 @partial(jax.jit, static_argnames=("mode", "lam", "eps", "eps_ins", "jitter",
                                    "axes", "triangle", "backend",
-                                   "reduce_dtype"))
+                                   "reduce_dtype", "phi_spec"))
 def svr_step(data: SVMData, w: jnp.ndarray, key: jax.Array, *,
              mode: str = "EM", lam: float = 1.0, eps: float = 1e-6,
              eps_ins: float = 1e-3, jitter: float = 1e-6,
              axes: Sequence[str] = (), triangle: bool = True,
              backend: str | None = None,
-             reduce_dtype: str | None = None):
+             reduce_dtype: str | None = None,
+             phi=None, phi_spec: PhiSpec | None = None):
     """One LIN-*-SVR iteration. Returns (w_new, aux dict)."""
     X, y, mask = data
     row0 = stats.shard_row_offset(X.shape[0], axes)
 
     pred, gamma, omega, S, b = svr_local_stats(
         X, y, w, mode=mode, key=key, eps=eps, eps_ins=eps_ins,
-        backend=backend, row0=row0)
+        backend=backend, row0=row0, phi=phi, phi_spec=phi_spec, mask=mask)
     S, b = stats.reduce_stats(S, b, axes, triangle=triangle,
                               reduce_dtype=reduce_dtype)
 

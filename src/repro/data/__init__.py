@@ -5,4 +5,5 @@ from .synthetic import (  # noqa: F401
     make_blobs, make_circles, make_lm_tokens)
 from .libsvm import (iter_libsvm, load_libsvm, parse_libsvm_line,  # noqa: F401
                      save_libsvm)
-from .pipeline import ChunkPrefetcher, ShardedBatcher  # noqa: F401
+from .pipeline import (ChunkPrefetcher, ShardedBatcher,  # noqa: F401
+                       reservoir_rows)

@@ -25,6 +25,43 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
+def reservoir_rows(chunks: Iterable, m: int, seed: int = 0
+                   ) -> tuple[np.ndarray, int]:
+    """Uniform sample of ``m`` valid rows from an iterator of
+    (X, y, mask) host chunks, in ONE pass and O(m * D) memory.
+
+    Classic reservoir sampling over the masked rows, so an out-of-core
+    source (``iter_libsvm``) can supply Nystrom landmarks without ever
+    being resident: valid row j replaces a reservoir slot with
+    probability m / (j + 1). The slot draws are vectorized per CHUNK
+    (one ``rng.integers`` call with a per-row high vector — the draws
+    stay independent with the classic marginals), so the pass costs
+    O(rows) NumPy work, not one Generator call per row. Returns
+    (rows (m', D), n_valid) with m' = min(m, n_valid); chunk padding
+    (mask == 0) is skipped.
+    """
+    rng = np.random.default_rng(seed)
+    reservoir: list[np.ndarray] = []
+    seen = 0
+    for Xc, _, mc in chunks:
+        rows = np.asarray(Xc, np.float32)[np.asarray(mc) > 0]
+        fill = min(max(m - len(reservoir), 0), len(rows))
+        reservoir.extend(np.array(r) for r in rows[:fill])
+        seen += fill
+        rows = rows[fill:]
+        if not len(rows):
+            continue
+        # Row i of this chunk is global valid-row (seen + i): draw its
+        # slot from [0, seen + i + 1) — all rows in one call.
+        slots = rng.integers(0, seen + 1 + np.arange(len(rows)))
+        seen += len(rows)
+        for i in np.nonzero(slots < m)[0]:    # in order: later rows win
+            reservoir[slots[i]] = np.array(rows[i])
+    if not reservoir:
+        raise ValueError("reservoir_rows: source yielded no valid rows")
+    return np.stack(reservoir), seen
+
+
 class ChunkPrefetcher:
     """Double-buffered host->device prefetch over an iterator of array
     tuples.

@@ -11,10 +11,13 @@ TPU-native counterpart (see DESIGN.md §3):
   * fused_stats   — the WHOLE iteration statistic (margin, gamma, b,
                     Sigma) in a single X pass (one HBM stream/iter).
   * rbf_gram      — tiled RBF Gram blocks for the KRN formulation.
+  * nystrom_phi / nystrom_fused_stats — Nystrom featurization fused
+                    with the iteration statistic: the phi tile lives
+                    only in VMEM (nonlinear path, DESIGN.md §Perf).
 
 ``ops`` holds the backend-dispatching public wrappers; ``ref`` the pure-jnp
 oracles used as ground truth and as the CPU path.
 """
 from . import ops, ref  # noqa: F401
-from .ops import (fused_estep, fused_stats, rbf_gram, syrk_tri,  # noqa: F401
-                  weighted_gram)
+from .ops import (fused_estep, fused_stats, nystrom_fused_stats,  # noqa: F401
+                  nystrom_phi, rbf_gram, syrk_tri, weighted_gram)

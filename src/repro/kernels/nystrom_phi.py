@@ -1,0 +1,238 @@
+"""Pallas TPU kernels: fused Nystrom featurize(-and-accumulate).
+
+The Nystrom path (core/nystrom.py) turns the kernel SVM into the linear
+PEMSVM on phi(x) = K_mm^{-1/2} k_m(x). Naively that is three passes with
+two HBM round-trips of an (N, m) intermediate:
+
+    K_nm = rbf(X, landmarks)      (N, m)  -> HBM
+    phi  = K_nm @ proj            (N, m)  -> HBM
+    stats = fused_stats(phi, ...)         <- HBM
+
+Both kernels here keep phi tile-local in VMEM instead. Per (bn, D)
+X block they compute the RBF cross-Gram against the (m, D) landmark
+strip (the ``rbf_gram`` tile body, shared code), apply the precomputed
+(m, m) ``K_mm^{-1/2}`` projection on the MXU, and then either
+
+  * ``nystrom_phi``         — write the phi tile out (the device-side
+    featurizer: prediction, and the MC path which must draw gamma
+    between the E-step and the Sigma pass), or
+  * ``nystrom_fused_stats`` — feed the phi tile straight into the
+    one-sweep statistic (margin, gamma, b, Sigma) of ``fused_stats``:
+    X streams HBM->VMEM ONCE and phi NEVER exists as an (N, m) array.
+
+Layout conventions (match the solver's padding scheme):
+
+  * ``mask`` zeroes phi rows explicitly — unlike LIN, a zero X row does
+    NOT give a zero phi row (rbf k(0, l) = exp(-||l||^2/2 sigma^2)), so
+    padded rows must be killed by the mask, not the data.
+  * ``add_bias`` appends the phi-space bias as column m with value
+    ``mask`` (1 for valid rows, 0 for padding) — the same
+    bias-column-is-the-mask trick the stream driver uses for X.
+
+VMEM per grid step (fp32, padded dims): the X tile bn*D, the landmark
+strip m*D, the projection m*M, the cross tile bn*m, the phi tile bn*M,
+and the (M, M) Sigma accumulator (M = m + add_bias). ``ops.py`` holds
+the byte-budget check and falls back to featurize-then-accumulate
+(``nystrom_phi`` + the K-tiled ``fused_stats``) when it does not fit —
+see DESIGN.md §Perf/Nystrom for the accounting and the roofline
+argument for why the fusion wins in the m <= sqrt(N) regime.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .rbf_gram import rbf_tile
+
+
+def _phi_tile(x, lm, pj, maskv, *, kind: str, inv_two_sigma_sq: float,
+              bias_col: int | None):
+    """One (bn, M) phi tile from a (bn, D) X tile, entirely in VMEM.
+
+    x: (bn, Dp); lm: (Lp, Dp) landmark strip; pj: (Lp, Wp) projection
+    (zero-padded rows/cols are exact no-ops); maskv: (bn, 1).
+    ``bias_col`` (static) is the column index receiving the mask-valued
+    bias, or None.
+    """
+    if kind == "rbf":
+        kmat = rbf_tile(x, lm, inv_two_sigma_sq)            # (bn, Lp)
+    elif kind == "linear":  # the cross-Gram IS the inner product
+        kmat = jax.lax.dot_general(
+            x, lm, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    else:  # match the ref oracle: never silently fall through
+        raise ValueError(f"unknown kernel kind {kind!r}")
+    phi = jax.lax.dot_general(                               # (bn, Wp)
+        kmat, pj, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    if bias_col is not None:
+        cols = jax.lax.broadcasted_iota(jnp.int32, phi.shape, 1)
+        phi = phi + jnp.where(cols == bias_col, 1.0, 0.0)
+    return phi * maskv
+
+
+def _make_phi_kernel(kind: str, inv_two_sigma_sq: float,
+                     bias_col: int | None):
+    def _kernel(x_ref, lm_ref, pj_ref, mask_ref, out_ref):
+        out_ref[...] = _phi_tile(
+            x_ref[...].astype(jnp.float32),
+            lm_ref[...].astype(jnp.float32),
+            pj_ref[...].astype(jnp.float32),
+            mask_ref[...].astype(jnp.float32),
+            kind=kind, inv_two_sigma_sq=inv_two_sigma_sq,
+            bias_col=bias_col)
+    return _kernel
+
+
+def _make_fused_kernel(kind: str, inv_two_sigma_sq: float,
+                       bias_col: int | None, eps: float):
+    def _kernel(x_ref, lm_ref, pj_ref, mask_ref, rho_ref, beta_ref, w_ref,
+                margin_ref, gamma_ref, b_ref, s_ref):
+        maskv = mask_ref[...].astype(jnp.float32)            # (bn, 1)
+        phi = _phi_tile(
+            x_ref[...].astype(jnp.float32),
+            lm_ref[...].astype(jnp.float32),
+            pj_ref[...].astype(jnp.float32),
+            maskv, kind=kind, inv_two_sigma_sq=inv_two_sigma_sq,
+            bias_col=bias_col)
+        rho = rho_ref[...].astype(jnp.float32)               # (bn, 1)
+        beta = beta_ref[...].astype(jnp.float32)             # (bn, 1)
+        wv = w_ref[...].astype(jnp.float32)                  # (Wp, 1)
+
+        # From here this is exactly fused_stats' tile body with X := phi.
+        margin = jax.lax.dot_general(
+            phi, wv, dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        margin_ref[...] = margin
+        gamma = jnp.maximum(jnp.abs(rho - margin), eps)
+        gamma_ref[...] = gamma
+        coef = rho / gamma + beta
+
+        @pl.when(pl.program_id(0) == 0)
+        def _init():
+            b_ref[...] = jnp.zeros_like(b_ref)
+            s_ref[...] = jnp.zeros_like(s_ref)
+
+        b_ref[...] += jax.lax.dot_general(                   # phi^T coef
+            phi, coef, dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        pw = phi * (maskv / gamma)                           # weighted rows
+        s_ref[...] += jax.lax.dot_general(                   # phi^T D phi
+            pw, phi, dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    return _kernel
+
+
+def _pad_operands(X, landmarks, proj, mask, add_bias, bn):
+    """Zero-pad every operand to tile multiples; returns the padded
+    arrays plus (Np, Wp, M) where M = proj cols + add_bias."""
+    N, D = X.shape
+    m, P = proj.shape
+    assert landmarks.shape == (m, D), (landmarks.shape, (m, D))
+    M = P + int(add_bias)
+    Dp = _round_up(D, 128)
+    Lp = _round_up(m, 128)   # lane dim of the (bn, m) cross tile
+    Wp = _round_up(max(M, 1), 128)
+    Np = _round_up(N, bn)
+    if mask is None:
+        mask = jnp.ones((N,), jnp.float32)
+    X = jnp.pad(X, ((0, Np - N), (0, Dp - D)))
+    mask = jnp.pad(mask.astype(jnp.float32), (0, Np - N))
+    landmarks = jnp.pad(landmarks, ((0, Lp - m), (0, Dp - D)))
+    proj = jnp.pad(proj, ((0, Lp - m), (0, Wp - P)))
+    return X, landmarks, proj, mask, Np, Wp, M
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "kind", "add_bias",
+                                             "block_n", "interpret"))
+def nystrom_phi(X: jnp.ndarray, landmarks: jnp.ndarray, proj: jnp.ndarray,
+                mask: jnp.ndarray | None = None, *, sigma: float = 1.0,
+                kind: str = "rbf", add_bias: bool = False,
+                block_n: int = 256, interpret: bool = False) -> jnp.ndarray:
+    """phi = [rbf(X, landmarks) @ proj, bias] — (N, M) f32, M = m + bias.
+
+    One X stream, no (N, m) cross-Gram intermediate. ``mask`` zeroes
+    invalid rows (see module docstring); None means all rows valid.
+    """
+    N, D = X.shape
+    bn = min(block_n, _round_up(N, 8))
+    X, landmarks, proj, mask, Np, Wp, M = _pad_operands(
+        X, landmarks, proj, mask, add_bias, bn)
+    out = pl.pallas_call(
+        _make_phi_kernel(kind, 1.0 / (2.0 * float(sigma) ** 2),
+                         M - 1 if add_bias else None),
+        grid=(Np // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, X.shape[1]), lambda n: (n, 0)),
+            pl.BlockSpec(landmarks.shape, lambda n: (0, 0)),
+            pl.BlockSpec(proj.shape, lambda n: (0, 0)),
+            pl.BlockSpec((bn, 1), lambda n: (n, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, Wp), lambda n: (n, 0)),
+        out_shape=jax.ShapeDtypeStruct((Np, Wp), jnp.float32),
+        interpret=interpret,
+    )(X, landmarks, proj, mask.reshape(Np, 1))
+    return out[:N, :M]
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "kind", "add_bias",
+                                             "eps", "block_n", "interpret"))
+def nystrom_fused_stats(X: jnp.ndarray, landmarks: jnp.ndarray,
+                        proj: jnp.ndarray, rho: jnp.ndarray,
+                        beta: jnp.ndarray, wvec: jnp.ndarray,
+                        mask: jnp.ndarray | None = None, *,
+                        sigma: float = 1.0, kind: str = "rbf",
+                        add_bias: bool = False, eps: float = 1e-6,
+                        block_n: int = 256, interpret: bool = False):
+    """The whole phi-space EM statistic in ONE X pass.
+
+    Returns (margin (N,), gamma (N,), b (M,), S (M, M)), all f32 —
+    exactly ``fused_stats`` evaluated on phi = nystrom_phi(X, ...),
+    except phi never leaves VMEM. Padded/masked rows contribute zero to
+    b and S (phi row zeroed, rho = beta = 0 makes coef zero, and the
+    Sigma weight is mask/gamma).
+    """
+    N, D = X.shape
+    bn = min(block_n, _round_up(N, 8))
+    X, landmarks, proj, mask, Np, Wp, M = _pad_operands(
+        X, landmarks, proj, mask, add_bias, bn)
+    rho = jnp.pad(rho.astype(jnp.float32), (0, Np - N))
+    beta = jnp.pad(beta.astype(jnp.float32), (0, Np - N))
+    wvec = jnp.pad(wvec.astype(jnp.float32), (0, Wp - M))
+
+    margin, gamma, b, S = pl.pallas_call(
+        _make_fused_kernel(kind, 1.0 / (2.0 * float(sigma) ** 2),
+                           M - 1 if add_bias else None, float(eps)),
+        grid=(Np // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, X.shape[1]), lambda n: (n, 0)),   # X rows
+            pl.BlockSpec(landmarks.shape, lambda n: (0, 0)),    # strip
+            pl.BlockSpec(proj.shape, lambda n: (0, 0)),         # K_mm^-1/2
+            pl.BlockSpec((bn, 1), lambda n: (n, 0)),            # mask
+            pl.BlockSpec((bn, 1), lambda n: (n, 0)),            # rho
+            pl.BlockSpec((bn, 1), lambda n: (n, 0)),            # beta
+            pl.BlockSpec((Wp, 1), lambda n: (0, 0)),            # w
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, 1), lambda n: (n, 0)),            # margin
+            pl.BlockSpec((bn, 1), lambda n: (n, 0)),            # gamma
+            pl.BlockSpec((Wp, 1), lambda n: (0, 0)),            # b (revisit)
+            pl.BlockSpec((Wp, Wp), lambda n: (0, 0)),           # S (revisit)
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Np, 1), jnp.float32),
+            jax.ShapeDtypeStruct((Np, 1), jnp.float32),
+            jax.ShapeDtypeStruct((Wp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((Wp, Wp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(X, landmarks, proj, mask.reshape(Np, 1), rho.reshape(Np, 1),
+      beta.reshape(Np, 1), wvec.reshape(Wp, 1))
+    return margin[:N, 0], gamma[:N, 0], b[:M, 0], S[:M, :M]
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

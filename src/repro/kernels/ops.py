@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from . import fused_estep as _fused_estep
 from . import fused_stats as _fused_stats
+from . import nystrom_phi as _nystrom_phi
 from . import rbf_gram as _rbf_gram
 from . import ref
 from . import syrk as _syrk
@@ -105,3 +106,112 @@ def rbf_gram(X1: jnp.ndarray, X2: jnp.ndarray, *, sigma: float = 1.0,
         return ref.rbf_gram(X1, X2, sigma)
     return _rbf_gram.rbf_gram(
         X1, X2, sigma=float(sigma), interpret=(backend == "interpret"), **kw)
+
+
+# The fused Nystrom kernel holds the landmark strip, the projection, the
+# phi tile AND the (M, M) Sigma accumulator in VMEM at once; past this
+# landmark count (or the byte budget below, for wide D) it must not be
+# attempted. The fallback — featurize (nystrom_phi) then accumulate
+# (fused_stats, itself K-tiled past FUSED_STATS_MAX_K) — is the right
+# regime anyway: at large m the statistic turns compute-bound and the
+# fusion's HBM saving stops mattering (DESIGN.md §Perf/Nystrom).
+NYSTROM_FUSED_MAX_M = 1024
+_NYSTROM_VMEM_BUDGET = 14 * 2 ** 20
+
+
+def _ru(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _nystrom_vmem_words(n_landmarks: int, n_features: int, add_bias: bool,
+                        block_n: int, with_stats: bool) -> int:
+    """fp32 words resident per grid step of the Nystrom kernels
+    (DESIGN.md §Perf/Nystrom accounting). ``with_stats`` adds the
+    Sigma/b accumulators only the fused flavor allocates."""
+    Lp = _ru(n_landmarks, 128)
+    Dp = _ru(n_features, 128)
+    Wp = _ru(n_landmarks + int(add_bias), 128)
+    words = (block_n * Dp        # X tile
+             + Lp * Dp           # landmark strip
+             + Lp * Wp           # projection
+             + block_n * Lp      # cross-Gram tile
+             + block_n * Wp)     # phi tile
+    if with_stats:
+        words += (Wp * Wp        # Sigma accumulator
+                  + Wp + 4 * block_n)  # w/b + per-row vectors
+    return words
+
+
+def nystrom_fused_fits(n_landmarks: int, n_features: int,
+                       add_bias: bool = True, block_n: int = 256) -> bool:
+    """Whether the one-pass featurize-and-accumulate kernel's working
+    set fits the VMEM budget."""
+    if n_landmarks > NYSTROM_FUSED_MAX_M:
+        return False
+    return 4 * _nystrom_vmem_words(n_landmarks, n_features, add_bias,
+                                   block_n, True) <= _NYSTROM_VMEM_BUDGET
+
+
+def _nystrom_phi_fits(n_landmarks: int, n_features: int,
+                      add_bias: bool = True, block_n: int = 256) -> bool:
+    """Featurize-only working set — no Sigma/b accumulators, so the phi
+    kernel keeps serving shapes the fused budget rejects (e.g. wide D
+    at m near the cap)."""
+    if n_landmarks > NYSTROM_FUSED_MAX_M:
+        return False
+    return 4 * _nystrom_vmem_words(n_landmarks, n_features, add_bias,
+                                   block_n, False) <= _NYSTROM_VMEM_BUDGET
+
+
+def nystrom_phi(X: jnp.ndarray, landmarks: jnp.ndarray, proj: jnp.ndarray,
+                mask: jnp.ndarray | None = None, *, sigma: float = 1.0,
+                kind: str = "rbf", add_bias: bool = False,
+                backend: str | None = None, **kw) -> jnp.ndarray:
+    """Device-side Nystrom featurizer: phi = k(X, landmarks) @ proj with
+    masked rows zeroed and an optional mask-valued bias column.
+
+    (N, M) f32, M = proj.shape[1] + add_bias. One X stream, no (N, m)
+    cross-Gram intermediate. Oversized landmark strips fall back to the
+    jnp oracle (XLA tiles the matmuls itself)."""
+    backend = _resolve(backend)
+    if backend != "ref" and _nystrom_phi_fits(
+            landmarks.shape[0], X.shape[1], add_bias,
+            kw.get("block_n", 256)):
+        return _nystrom_phi.nystrom_phi(
+            X, landmarks, proj, mask, sigma=float(sigma), kind=kind,
+            add_bias=add_bias, interpret=(backend == "interpret"), **kw)
+    return ref.nystrom_phi(X, landmarks, proj, mask, float(sigma), kind,
+                           add_bias)
+
+
+def nystrom_fused_stats(X: jnp.ndarray, landmarks: jnp.ndarray,
+                        proj: jnp.ndarray, rho: jnp.ndarray,
+                        beta: jnp.ndarray, wvec: jnp.ndarray,
+                        mask: jnp.ndarray | None = None, *,
+                        sigma: float = 1.0, kind: str = "rbf",
+                        add_bias: bool = False, eps: float = 1e-6,
+                        backend: str | None = None, **kw):
+    """(margin, gamma, b, S): the whole phi-space EM statistic in one
+    X pass — ``fused_stats`` on nystrom_phi(X) with phi never leaving
+    VMEM (so the (N, m) feature matrix never exists in HBM).
+
+    When the landmark strip + projection + Sigma accumulator exceed the
+    VMEM budget (``nystrom_fused_fits``), falls back to
+    featurize-then-accumulate: nystrom_phi materializes phi for this
+    row block and fused_stats (K-tiled past its own cap) consumes it —
+    callers get the same outputs either way."""
+    backend = _resolve(backend)
+    if backend == "ref":
+        return ref.nystrom_fused_stats(X, landmarks, proj, rho, beta,
+                                       wvec, mask, float(sigma), kind,
+                                       add_bias, eps)
+    if not nystrom_fused_fits(landmarks.shape[0], X.shape[1], add_bias,
+                              kw.get("block_n", 256)):
+        phi = nystrom_phi(X, landmarks, proj, mask, sigma=sigma, kind=kind,
+                          add_bias=add_bias, backend=backend)
+        return fused_stats(phi, rho, beta, wvec, mask, eps=eps,
+                           backend=backend)
+    return _nystrom_phi.nystrom_fused_stats(
+        X, landmarks, proj, rho, beta, wvec, mask, sigma=float(sigma),
+        kind=kind, add_bias=add_bias, eps=eps,
+        interpret=(backend == "interpret"), **kw)

@@ -16,17 +16,28 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def rbf_tile(x1: jnp.ndarray, x2: jnp.ndarray,
+             inv_two_sigma_sq: float) -> jnp.ndarray:
+    """The RBF Gram tile body: K_ij = exp(-||x1_i - x2_j||^2 / 2 sigma^2)
+    for one (b1, K) x (b2, K) VMEM tile pair, inner product on the MXU.
+
+    Shared by ``rbf_gram`` and the fused Nystrom featurize kernel
+    (``nystrom_phi.py``), so the two paths cannot drift numerically.
+    """
+    sq1 = jnp.sum(x1 * x1, axis=1, keepdims=True)          # (b1, 1)
+    sq2 = jnp.sum(x2 * x2, axis=1, keepdims=True)          # (b2, 1)
+    cross = jax.lax.dot_general(                            # (b1, b2)
+        x1, x2, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(sq1 - 2.0 * cross + sq2.T, 0.0)
+    return jnp.exp(-d2 * inv_two_sigma_sq)
+
+
 def _make_kernel(inv_two_sigma_sq: float):
     def _kernel(x1_ref, x2_ref, out_ref):
         x1 = x1_ref[...].astype(jnp.float32)      # (b1, K)
         x2 = x2_ref[...].astype(jnp.float32)      # (b2, K)
-        sq1 = jnp.sum(x1 * x1, axis=1, keepdims=True)          # (b1, 1)
-        sq2 = jnp.sum(x2 * x2, axis=1, keepdims=True)          # (b2, 1)
-        cross = jax.lax.dot_general(                            # (b1, b2)
-            x1, x2, dimension_numbers=(((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        d2 = jnp.maximum(sq1 - 2.0 * cross + sq2.T, 0.0)
-        out_ref[...] = jnp.exp(-d2 * inv_two_sigma_sq)
+        out_ref[...] = rbf_tile(x1, x2, inv_two_sigma_sq)
     return _kernel
 
 

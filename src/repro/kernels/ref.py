@@ -73,6 +73,45 @@ def fused_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
     return margin, gamma, b, weighted_gram(X, w)
 
 
+def nystrom_phi(X: jnp.ndarray, landmarks: jnp.ndarray, proj: jnp.ndarray,
+                mask: jnp.ndarray | None, sigma: float, kind: str,
+                add_bias: bool) -> jnp.ndarray:
+    """Oracle for the fused Nystrom featurizer (nystrom_phi.py).
+
+    phi = k(X, landmarks) @ proj, rows zeroed by ``mask``, with an
+    optional mask-valued bias column appended (M = proj cols + bias).
+    A zero X row is NOT a zero phi row under rbf, so the mask is load-
+    bearing here — unlike the LIN kernels' zero-row convention.
+    """
+    Xf = X.astype(jnp.float32)
+    if kind == "rbf":
+        kmat = rbf_gram(Xf, landmarks, sigma)
+    elif kind == "linear":
+        kmat = Xf @ landmarks.astype(jnp.float32).T
+    else:
+        raise ValueError(f"unknown kernel kind {kind!r}")
+    phi = kmat @ proj.astype(jnp.float32)
+    maskv = (jnp.ones((X.shape[0], 1), jnp.float32) if mask is None
+             else mask.astype(jnp.float32)[:, None])
+    if add_bias:
+        phi = jnp.concatenate([phi, jnp.ones_like(maskv)], axis=1)
+    return phi * maskv
+
+
+def nystrom_fused_stats(X: jnp.ndarray, landmarks: jnp.ndarray,
+                        proj: jnp.ndarray, rho: jnp.ndarray,
+                        beta: jnp.ndarray, wvec: jnp.ndarray,
+                        mask: jnp.ndarray | None, sigma: float, kind: str,
+                        add_bias: bool, eps: float):
+    """Oracle for the featurize-and-accumulate kernel: fused_stats on
+    nystrom_phi, i.e. the whole phi-space EM statistic.
+
+    Returns (margin (N,), gamma (N,), b (M,), S (M, M)), all float32.
+    """
+    phi = nystrom_phi(X, landmarks, proj, mask, sigma, kind, add_bias)
+    return fused_stats(phi, rho, beta, wvec, mask, eps)
+
+
 def rbf_gram(X1: jnp.ndarray, X2: jnp.ndarray, sigma: float) -> jnp.ndarray:
     """RBF Gram block: K_ij = exp(-||x_i - x_j||^2 / (2 sigma^2)).
 

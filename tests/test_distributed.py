@@ -123,6 +123,72 @@ k.fit(Xc, yc); assert k.score(Xc, yc) > 0.97
 """, timeout=900)
 
 
+def test_krn_mc_chain_is_mesh_layout_invariant():
+    """KRN MC gamma draws are keyed per GLOBAL row (PR-3, mirroring the
+    LIN rowwise keying of PR-2): a mesh fit draws the SAME gamma chain
+    as the single-device one. The assertion target is the first
+    iteration's gamma_mean — margins are exactly 0 at omega = 0, so the
+    draws are bitwise-identical iff the keying is layout-invariant; the
+    pre-fix per-axis key folds shifted it by O(1/sqrt(N)). (Weight-level
+    parity is NOT testable for KRN: the near-singular lam*K + S solve
+    amplifies psum-reordering noise to O(1), same reason the EM mesh
+    test gates on score.) N = 320 divides both layouts' padding chunks
+    (8 and 64) so the two runs see identical padded shapes."""
+    run_with_devices("""
+import numpy as np, jax, jax.numpy as jnp
+from repro import compat
+from repro.core import PEMSVM, SVMConfig
+mesh = compat.make_mesh((4, 2), ("data", "model"),
+                     axis_types=("auto",) * 2)
+rng = np.random.default_rng(0)
+N = 320
+r_ = np.concatenate([rng.uniform(0, 1, N // 2),
+                     rng.uniform(1.5, 2.5, N // 2)])
+th = rng.uniform(0, 2 * np.pi, N)
+X = np.stack([r_ * np.cos(th), r_ * np.sin(th)], 1).astype(np.float32)
+y = np.concatenate([np.ones(N // 2), -np.ones(N // 2)]).astype(np.float32)
+cfg = SVMConfig(formulation="KRN", algorithm="MC", lam=0.1, sigma=0.7,
+                burnin=0, max_iters=1, min_iters=1)
+r1 = PEMSVM(cfg).fit(X, y)
+r8 = PEMSVM(cfg, mesh=mesh).fit(X, y)
+assert r1.weights.shape == r8.weights.shape, (r1.weights.shape,
+                                              r8.weights.shape)
+g1 = r1.aux_history["gamma_mean"][0]
+g8 = r8.aux_history["gamma_mean"][0]
+np.testing.assert_allclose(g8, g1, rtol=1e-5)
+np.testing.assert_allclose(r8.objective[0], r1.objective[0], rtol=1e-4)
+""")
+
+
+def test_nystrom_mesh_matches_single_device():
+    """The phi-space delegate on a mesh: raw rows are sharded, the
+    featurizer arrays ride the replicated prior slot, and the EM fit
+    matches the single-device one."""
+    run_with_devices("""
+import numpy as np
+from repro import compat
+from repro.core import NystromSVM, SVMConfig
+mesh = compat.make_mesh((4, 2), ("data", "model"),
+                     axis_types=("auto",) * 2)
+rng = np.random.default_rng(0)
+N, D = 1024, 12
+X = rng.normal(size=(N, D)).astype(np.float32)
+wt = rng.normal(size=D)
+y = np.where(np.tanh(X @ wt) + 0.3 * rng.normal(size=N) > 0,
+             1.0, -1.0).astype(np.float32)
+cfg = SVMConfig(formulation="KRN", lam=1.0, sigma=3.0, eps=1e-2,
+                max_iters=10, min_iters=10)
+a = NystromSVM(cfg, n_landmarks=32)
+r1 = a.fit(X, y)
+b = NystromSVM(cfg, mesh=mesh, data_axes=("data", "model"),
+               n_landmarks=32)
+r8 = b.fit(X, y)
+rel = np.abs(r8.weights - r1.weights).max() / np.abs(r1.weights).max()
+assert rel < 1e-3, rel
+assert abs(a.score(X, y) - b.score(X, y)) < 1e-2
+""")
+
+
 def test_k_shard_indivisible_K_raises():
     """K=23 over a model axis of 2: _k_block must raise, not silently
     drop the trailing column of Sigma."""

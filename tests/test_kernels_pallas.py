@@ -187,6 +187,126 @@ def test_accumulate_stats_partial_final_chunk_parity(backend, mode,
         b_pad, b_ref, rtol=2e-3, atol=2e-3 * max(1.0, np.abs(b_ref).max()))
 
 
+# ------------------------------------------------- fused Nystrom kernels
+def _nystrom_problem(n, d, m, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    landmarks = X[rng.choice(n, size=min(m, n), replace=False)]
+    if m > n:  # oversize-m cases: tile rows
+        landmarks = rng.normal(size=(m, d)).astype(np.float32)
+    proj = (0.2 * rng.normal(size=(m, m))).astype(np.float32)
+    mask = (rng.uniform(size=n) > 0.25).astype(np.float32)
+    y = rng.choice([-1.0, 1.0], n).astype(np.float32) * mask
+    return X, landmarks, proj, mask, y
+
+
+@pytest.mark.parametrize("n,d,m", [(64, 16, 32), (100, 7, 37),
+                                   (257, 33, 65), (9, 130, 5)])
+@pytest.mark.parametrize("add_bias", [False, True])
+def test_nystrom_phi_matches_ref(n, d, m, add_bias):
+    """Fused featurizer == host oracle on odd (N, D, m) with masked
+    padded rows and the mask-valued bias column."""
+    X, L, proj, mask, _ = _nystrom_problem(n, d, m)
+    kw = dict(sigma=1.3, kind="rbf", add_bias=add_bias)
+    got = ops.nystrom_phi(jnp.asarray(X), jnp.asarray(L),
+                          jnp.asarray(proj), jnp.asarray(mask),
+                          backend="interpret", block_n=64, **kw)
+    want = ref.nystrom_phi(jnp.asarray(X), jnp.asarray(L),
+                           jnp.asarray(proj), jnp.asarray(mask),
+                           1.3, "rbf", add_bias)
+    got, want = np.asarray(got), np.asarray(want)
+    assert got.shape == (n, m + int(add_bias))
+    np.testing.assert_allclose(got, want, rtol=2e-3,
+                               atol=2e-3 * max(1.0, np.abs(want).max()))
+    # masked rows must be EXACTLY zero — a zero X row is not a zero phi
+    # row under rbf, so the kernel's explicit masking is load-bearing
+    assert not np.any(got[mask == 0])
+
+
+@pytest.mark.parametrize("n,d,m", [(64, 16, 32), (100, 7, 37),
+                                   (257, 33, 65)])
+@pytest.mark.parametrize("kind", ["rbf", "linear"])
+def test_nystrom_fused_stats_matches_ref(n, d, m, kind):
+    """One-pass featurize-and-accumulate == featurize-then-accumulate
+    oracle: all four outputs, odd shapes, masked rows, phi-space bias."""
+    X, L, proj, mask, y = _nystrom_problem(n, d, m, seed=m)
+    wv = np.random.default_rng(1).normal(size=m + 1).astype(np.float32)
+    kw = dict(sigma=0.9, kind=kind, add_bias=True)
+    got = ops.nystrom_fused_stats(
+        jnp.asarray(X), jnp.asarray(L), jnp.asarray(proj), jnp.asarray(y),
+        jnp.asarray(y), jnp.asarray(wv), jnp.asarray(mask), eps=1e-6,
+        backend="interpret", block_n=64, **kw)
+    want = ref.nystrom_fused_stats(
+        jnp.asarray(X), jnp.asarray(L), jnp.asarray(proj), jnp.asarray(y),
+        jnp.asarray(y), jnp.asarray(wv), jnp.asarray(mask), 0.9, kind,
+        True, 1e-6)
+    for g, w_, name in zip(got, want, ("margin", "gamma", "b", "S")):
+        g, w_ = np.asarray(g), np.asarray(w_)
+        np.testing.assert_allclose(
+            g, w_, rtol=2e-3, atol=2e-3 * max(1.0, np.abs(w_).max()),
+            err_msg=name)
+
+
+def test_nystrom_fused_masked_rows_contribute_nothing():
+    """A block whose tail is masked must yield the stats of its valid
+    rows only — the streaming driver's padded-tail path."""
+    n, d, m, n_valid = 96, 12, 24, 61
+    X, L, proj, _, _ = _nystrom_problem(n, d, m, seed=3)
+    rng = np.random.default_rng(4)
+    y = np.zeros(n, np.float32)
+    y[:n_valid] = rng.choice([-1.0, 1.0], n_valid)
+    mask = (np.arange(n) < n_valid).astype(np.float32)
+    wv = rng.normal(size=m + 1).astype(np.float32)
+    kw = dict(sigma=1.1, kind="rbf", add_bias=True, eps=1e-6)
+    a = ops.nystrom_fused_stats(
+        jnp.asarray(X), jnp.asarray(L), jnp.asarray(proj), jnp.asarray(y),
+        jnp.asarray(y), jnp.asarray(wv), jnp.asarray(mask),
+        backend="interpret", block_n=32, **kw)
+    b = ops.nystrom_fused_stats(
+        jnp.asarray(X[:n_valid]), jnp.asarray(L), jnp.asarray(proj),
+        jnp.asarray(y[:n_valid]), jnp.asarray(y[:n_valid]),
+        jnp.asarray(wv), jnp.asarray(np.ones(n_valid, np.float32)),
+        backend="ref", **kw)
+    np.testing.assert_allclose(np.asarray(a[2]), np.asarray(b[2]),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(a[3]), np.asarray(b[3]),
+                               rtol=1e-3,
+                               atol=1e-3 * np.abs(np.asarray(b[3])).max())
+
+
+def test_nystrom_fused_oversize_m_falls_back():
+    """Past the VMEM budget the dispatch must route to
+    featurize-then-accumulate (never attempt the one-pass kernel) and
+    still match the oracle."""
+    n, d, m = 48, 6, ops.NYSTROM_FUSED_MAX_M + 8
+    assert not ops.nystrom_fused_fits(m, d)
+    X, L, proj, mask, y = _nystrom_problem(n, d, m, seed=5)
+    wv = np.random.default_rng(2).normal(size=m).astype(np.float32)
+    got = ops.nystrom_fused_stats(
+        jnp.asarray(X), jnp.asarray(L), jnp.asarray(proj), jnp.asarray(y),
+        jnp.asarray(y), jnp.asarray(wv), jnp.asarray(mask),
+        sigma=1.0, kind="rbf", add_bias=False, eps=1e-6,
+        backend="interpret")
+    want = ref.nystrom_fused_stats(
+        jnp.asarray(X), jnp.asarray(L), jnp.asarray(proj), jnp.asarray(y),
+        jnp.asarray(y), jnp.asarray(wv), jnp.asarray(mask), 1.0, "rbf",
+        False, 1e-6)
+    for g, w_, name in zip(got, want, ("margin", "gamma", "b", "S")):
+        g, w_ = np.asarray(g), np.asarray(w_)
+        np.testing.assert_allclose(
+            g, w_, rtol=2e-3, atol=2e-3 * max(1.0, np.abs(w_).max()),
+            err_msg=name)
+
+
+def test_nystrom_fused_fits_accounting():
+    """The byte-budget check: paper-regime shapes fit; the landmark cap
+    and a pathologically wide D do not."""
+    assert ops.nystrom_fused_fits(256, 784)
+    assert ops.nystrom_fused_fits(1024, 256)
+    assert not ops.nystrom_fused_fits(ops.NYSTROM_FUSED_MAX_M + 1, 16)
+    assert not ops.nystrom_fused_fits(1024, 8192)
+
+
 @pytest.mark.parametrize("n1,n2,k,sigma", [(64, 64, 16, 1.0),
                                            (100, 37, 8, 0.5),
                                            (129, 257, 33, 2.0)])

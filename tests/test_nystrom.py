@@ -1,8 +1,18 @@
-"""Nystrom-approximated kernel SVM (the paper's Sec-4.3 open question)."""
+"""Nystrom-approximated kernel SVM (the paper's Sec-4.3 open question).
+
+PR-3 rebuilt NystromSVM on the fused featurize-and-accumulate kernels:
+featurization happens ON DEVICE inside the chunk-callable statistics, so
+the scan and stream drivers both serve the nonlinear path. These tests
+cover the delegate-config contract, the one-time projection cache, fused
+vs host-phi fit parity, and stream vs resident parity across tasks.
+"""
+import dataclasses
+
 import numpy as np
+import pytest
 
 from repro.core import NystromSVM, PEMSVM, SVMConfig
-from repro.core.nystrom import nystrom_features
+from repro.core.nystrom import nystrom_features, nystrom_projection
 from repro.data import make_circles
 
 
@@ -46,3 +56,189 @@ def test_nystrom_mc_variant():
                               sigma=0.7, max_iters=40), n_landmarks=50)
     ny.fit(X, y)
     assert ny.score(X, y) > 0.97
+
+
+# ------------------------------------------------ delegate config contract
+def test_delegate_config_propagates_every_field():
+    """NystromSVM builds its LIN delegate with dataclasses.replace, so
+    NO config field is silently dropped — driver, scan_chunk,
+    chunk_rows, prefetch, jitter, k_shard_axis, and any field added
+    later all carry over. Only the three phi-mode fields are
+    overridden."""
+    cfg = SVMConfig(formulation="KRN", algorithm="MC", lam=0.37,
+                    eps=1e-3, num_classes=2, kernel="rbf", sigma=0.9,
+                    max_iters=77, min_iters=7, patience=3, tol=2e-3,
+                    driver="stream", scan_chunk=11, chunk_rows=123,
+                    prefetch=5, burnin=4, jitter=3e-5,
+                    triangle_reduce=False, reduce_dtype="bfloat16",
+                    backend="ref", seed=42, k_shard_axis="model")
+    ny = NystromSVM(cfg)
+    overridden = {"formulation": "LIN", "add_bias": False}
+    delegate = ny.svm.config
+    assert delegate.phi_spec is not None
+    assert delegate.phi_spec.sigma == cfg.sigma
+    assert delegate.phi_spec.kind == cfg.kernel
+    for f in dataclasses.fields(SVMConfig):
+        if f.name == "phi_spec":
+            continue
+        want = overridden.get(f.name, getattr(cfg, f.name))
+        got = getattr(delegate, f.name)
+        assert got == want, (f.name, got, want)
+
+
+def test_projection_cached_eigh_runs_once(monkeypatch):
+    """fit computes K_mm^{-1/2} ONCE; predict/decision_function/score
+    reuse the cache (the old implementation refactorized per call)."""
+    calls = []
+    orig = np.linalg.eigh
+
+    def counting_eigh(*a, **kw):
+        calls.append(1)
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(np.linalg, "eigh", counting_eigh)
+    X, y = make_circles(300, seed=5)
+    ny = NystromSVM(SVMConfig(formulation="KRN", lam=0.1, sigma=0.7,
+                              max_iters=10, min_iters=10),
+                    n_landmarks=40)
+    ny.fit(X, y)
+    ny.predict(X[:50])
+    ny.decision_function(X[:50])
+    ny.score(X[:50], y[:50])
+    assert len(calls) == 1, f"eigh ran {len(calls)} times"
+    np.testing.assert_allclose(
+        ny._proj, nystrom_projection(ny._landmarks, sigma=0.7).astype(
+            np.float32), rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------- fused vs host-phi parity
+def _parity_problem(seed=0, N=2048, D=16):
+    """Well-conditioned phi-space posterior (lam=1, wide rbf): the
+    chunked-vs-resident difference is pure fp32 reassociation noise
+    through a modest condition number, so 1e-4 weight parity is a real
+    bound rather than luck (see DESIGN.md §Perf/Nystrom exactness)."""
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(N, D)).astype(np.float32)
+    wt = rng.normal(size=D)
+    y = np.where(np.tanh(X @ wt) + 0.3 * rng.normal(size=N) > 0,
+                 1.0, -1.0).astype(np.float32)
+    return X, y
+
+
+def test_fused_fit_matches_host_phi_baseline():
+    """EM acceptance: the on-device fused path lands within 1e-4 of the
+    float64 host-featurized LIN fit on the SAME landmarks."""
+    X, y = _parity_problem()
+    cfg = SVMConfig(formulation="KRN", lam=1.0, sigma=3.0, eps=1e-2,
+                    max_iters=20, min_iters=20)
+    ny = NystromSVM(cfg, n_landmarks=64)
+    r_fused = ny.fit(X, y)
+
+    phi_host = nystrom_features(X, ny._landmarks, sigma=3.0)
+    base_cfg = dataclasses.replace(ny.svm.config, phi_spec=None,
+                                   add_bias=True)
+    base = PEMSVM(base_cfg)
+    r_host = base.fit(phi_host, y)
+
+    rel = (np.abs(r_fused.weights - r_host.weights).max()
+           / np.abs(r_host.weights).max())
+    assert rel <= 1e-4, rel
+    assert abs(ny.score(X, y) - base.score(phi_host, y)) <= 1e-3
+
+
+# ------------------------------------------------ stream vs resident parity
+# EM is deterministic: tight bound. MC forks through the IG sampler's
+# accept-reject branch on lsb-level margin differences (same analysis as
+# tests/test_streaming.py), so short chains + looser bounds.
+@pytest.mark.parametrize("options,kw,iters,bound", [
+    ("KRN-EM-CLS", {}, 20, 1e-4),
+    ("KRN-EM-SVR", dict(eps_ins=0.3), 20, 1e-4),
+    ("KRN-MC-CLS", dict(burnin=6), 12, 2e-3),
+    ("KRN-MC-SVR", dict(eps_ins=0.3, burnin=6), 12, 2e-3),
+])
+def test_nystrom_stream_matches_resident(options, kw, iters, bound):
+    task = options.split("-")[-1]
+    X, y = _parity_problem(seed=7, N=1536)
+    if task == "SVR":
+        rng = np.random.default_rng(8)
+        y = np.tanh(X @ rng.normal(size=X.shape[1])).astype(np.float32)
+    kw = {"lam": 1.0, "sigma": 3.0, "eps": 1e-2, **kw}
+    kw["max_iters"] = kw["min_iters"] = iters
+    resident = NystromSVM(SVMConfig.from_options(options, **kw),
+                          n_landmarks=48)
+    streamed = NystromSVM(SVMConfig.from_options(
+        options, driver="stream", chunk_rows=192, **kw), n_landmarks=48)
+    rr = resident.fit(X, y)
+    rs = streamed.fit(X, y)
+    np.testing.assert_array_equal(streamed._landmarks,
+                                  resident._landmarks)
+    rel = (np.abs(rs.weights - rr.weights).max()
+           / max(1e-12, np.abs(rr.weights).max()))
+    assert rel <= bound, (options, rel)
+    np.testing.assert_allclose(rs.objective[0], rr.objective[0],
+                               rtol=1e-4)
+    assert abs(streamed.score(X, y) - resident.score(X, y)) < 1e-2
+
+
+def test_nystrom_mlt_stream_and_resident():
+    """KRN-MLT (new capability: the exact solver is CLS-only) — the
+    phi-space Crammer-Singer sweep works resident and streamed."""
+    rng = np.random.default_rng(9)
+    N, D, M = 900, 8, 3
+    X = rng.normal(size=(N, D)).astype(np.float32)
+    labels = np.argmax(np.abs(X @ rng.normal(size=(M, D)).T), 1
+                       ).astype(np.int32)
+    kw = dict(formulation="KRN", task="MLT", num_classes=M, lam=1.0,
+              sigma=3.0, eps=1e-2, max_iters=10, min_iters=10)
+    resident = NystromSVM(SVMConfig(**kw), n_landmarks=48)
+    rr = resident.fit(X, labels)
+    assert resident.score(X, labels) > 0.75
+    streamed = NystromSVM(SVMConfig(driver="stream", chunk_rows=128,
+                                    **kw), n_landmarks=48)
+    rs = streamed.fit(X, labels)
+    rel = (np.abs(rs.weights - rr.weights).max()
+           / np.abs(rr.weights).max())
+    assert rel <= 1e-3, rel
+
+
+def test_nystrom_stream_fit_libsvm_out_of_core(tmp_path):
+    """File -> reservoir landmarks -> streamed featurize-and-accumulate
+    == host-phi resident fit on the same landmarks, with device input
+    residency bounded by (prefetch + 2) RAW D-wide chunks."""
+    from repro.data import save_libsvm
+
+    X, y = _parity_problem(seed=11, N=1200, D=10)
+    p = str(tmp_path / "ny.libsvm")
+    save_libsvm(p, X, y)
+    cfg = SVMConfig(formulation="KRN", driver="stream", chunk_rows=128,
+                    prefetch=2, lam=1.0, sigma=3.0, eps=1e-2,
+                    max_iters=12, min_iters=12)
+    ny = NystromSVM(cfg, n_landmarks=40)
+    res = ny.fit_libsvm(p, n_features=10)
+
+    # residency: (prefetch+2) chunks of RAW rows — D-wide, not m-wide
+    chunk_bytes = 128 * 10 * 4 + 2 * 128 * 4
+    assert 0 < res.peak_input_bytes <= 4 * chunk_bytes
+
+    phi_host = nystrom_features(X, ny._landmarks, sigma=3.0)
+    base = PEMSVM(dataclasses.replace(ny.svm.config, phi_spec=None,
+                                      add_bias=True, driver="scan"))
+    r_host = base.fit(phi_host, y)
+    rel = (np.abs(res.weights - r_host.weights).max()
+           / np.abs(r_host.weights).max())
+    assert rel <= 1e-4, rel
+
+
+def test_nystrom_predict_uses_delegate_featurization():
+    """decision_function on raw X == LIN decision on host phi features
+    (the delegate featurizes on device with the cached projection)."""
+    X, y = _parity_problem(seed=13, N=600, D=6)
+    ny = NystromSVM(SVMConfig(formulation="KRN", lam=1.0, sigma=2.0,
+                              max_iters=10, min_iters=10),
+                    n_landmarks=32)
+    ny.fit(X, y)
+    f_dev = ny.decision_function(X[:100])
+    phi = ny._phi(X[:100])
+    w = ny.svm._weights
+    f_host = np.concatenate([phi, np.ones((100, 1), np.float32)], 1) @ w
+    np.testing.assert_allclose(f_dev, f_host, rtol=1e-3, atol=1e-4)

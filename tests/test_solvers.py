@@ -135,7 +135,10 @@ def test_compressed_reduction_single_device_noop(blobs):
 def test_config_validation():
     with pytest.raises(AssertionError):
         SVMConfig(formulation="BAD")
+    # KRN x SVR is a valid CONFIGURATION (NystromSVM serves it through
+    # phi-space); only the exact N x N Gram solver rejects it, at fit.
+    cfg = SVMConfig(formulation="KRN", task="SVR")
     with pytest.raises(NotImplementedError):
-        SVMConfig(formulation="KRN", task="SVR")
+        PEMSVM(cfg).fit(np.zeros((8, 2), np.float32), np.zeros(8))
     assert SVMConfig.from_options("lin-mc-mlt").options == "LIN-MC-MLT"
     assert lam_from_C(2.0) == 1.0

@@ -264,9 +264,16 @@ def test_stream_fit_libsvm_end_to_end(tmp_path):
     assert rel <= 1e-4, rel
 
 
-def test_stream_rejects_krn_and_mesh():
-    with pytest.raises(NotImplementedError):
-        SVMConfig(formulation="KRN", driver="stream")
+def test_stream_rejects_exact_krn_and_mesh():
+    """KRN + stream is a valid CONFIG now (NystromSVM's phi-space route
+    streams raw rows); only the exact N x N Gram solver still rejects
+    it, at fit time, pointing at NystromSVM."""
+    cfg = SVMConfig(formulation="KRN", driver="stream")
+    X, y = _problem("CLS", N=64, K=4)
+    with pytest.raises(NotImplementedError, match="NystromSVM"):
+        PEMSVM(cfg).fit(X, y)
+    with pytest.raises(NotImplementedError, match="NystromSVM"):
+        PEMSVM(cfg).fit_libsvm("/nonexistent.libsvm", n_features=4)
 
 
 def test_stream_fit_libsvm_nonstream_falls_back(tmp_path):
