@@ -16,7 +16,7 @@ def main() -> None:
                     help="comma-separated benchmark names")
     args, _ = ap.parse_known_args()
 
-    from . import (fig2_cores, fig34_scaling, fig56_convergence,
+    from . import (fig2_cores, fig34_scaling, fig56_convergence, mc_fused,
                    nystrom_fused, roofline, stream_vs_resident, table5_dna,
                    table6_svr, table7_krn, table8_mlt, table9_gram)
     benches = {
@@ -31,6 +31,7 @@ def main() -> None:
         "roofline": roofline.run,
         "stream_vs_resident": stream_vs_resident.run,
         "nystrom_fused": nystrom_fused.run,
+        "mc_fused": mc_fused.run,
     }
     only = [x for x in args.only.split(",") if x]
     failed = []

@@ -1,0 +1,104 @@
+#!/usr/bin/env python
+"""CPU single-stream-Gibbs smoke for CI (mirrors the stream/krn smoke
+pattern): the fused MC and SVR epilogue paths, gated on draw parity and
+stream-vs-resident fit parity.
+
+Gates:
+
+  * BITWISE draw parity: the fused MC-CLS statistic's gamma draws (and
+    SVR's gamma/omega double mixture) equal the ``gamma_mc_rowwise`` /
+    split-key oracles bit for bit on the dispatch path — the property
+    that makes MC chains chunking- and sharding-invariant;
+  * MC-CLS stream-vs-resident whole-fit parity on a short chain
+    (<= 2e-4 rel-err — the IG accept-reject branch is the documented
+    fp32 fork channel, so MC is gated looser than EM);
+  * EM-SVR stream-vs-resident whole-fit parity (<= 1e-4 rel-err —
+    deterministic, so tight even on noisy CI machines).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> int:
+    import numpy as np
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import PEMSVM, SVMConfig, augment
+    from repro.kernels import ops
+
+    # Same problem family/size as tests/test_streaming.py's whole-fit
+    # parity matrix — chosen inside the non-chaotic window where the
+    # MC fork channel stays within the 2e-4 band on short chains.
+    rng = np.random.default_rng(0)
+    N, K = 1024, 16
+    X = rng.normal(size=(N, K)).astype(np.float32)
+    w_true = rng.normal(size=K)
+    y = np.where(X @ w_true + 0.3 * rng.normal(size=N) > 0,
+                 1.0, -1.0).astype(np.float32)
+    ys = (X @ w_true).astype(np.float32)
+
+    # --- gate 1: bitwise draw parity on the fused statistic ----------
+    w = jnp.asarray(rng.normal(size=K).astype(np.float32))
+    key = jax.random.PRNGKey(7)
+    Xd, yd = jnp.asarray(X), jnp.asarray(y)
+    margin = Xd @ w
+    g_want = augment.gamma_mc_rowwise(key, yd - margin, 1e-6, 5)
+    noise = augment.draw_ig_noise(key, N, 5)
+    out = ops.fused_stats(Xd, yd, yd, w, None, noise,
+                          epilogue="mc_hinge", eps=1e-6, backend="ref")
+    cls_ok = np.array_equal(np.asarray(out[1]), np.asarray(g_want))
+
+    k_lo, k_hi = jax.random.split(key)
+    res = jnp.asarray(ys) - margin
+    gs = augment.gamma_mc_rowwise(k_lo, res - 0.2, 1e-6, 5)
+    os_ = augment.gamma_mc_rowwise(k_hi, res + 0.2, 1e-6, 5)
+    n4 = (*augment.draw_ig_noise(k_lo, N, 5),
+          *augment.draw_ig_noise(k_hi, N, 5))
+    out = ops.fused_stats(Xd, jnp.asarray(ys), jnp.zeros(N), w, None,
+                          n4, epilogue="mc_svr", eps=1e-6, eps_ins=0.2,
+                          backend="ref")
+    svr_ok = (np.array_equal(np.asarray(out[1]), np.asarray(gs))
+              and np.array_equal(np.asarray(out[2]), np.asarray(os_)))
+    print(f"draw parity: cls bitwise={cls_ok} svr bitwise={svr_ok}")
+    if not (cls_ok and svr_ok):
+        print("MC DRAW PARITY FAIL")
+        return 1
+
+    # --- gate 2: MC-CLS stream vs resident (short chain) -------------
+    kw = dict(algorithm="MC", eps=1e-2, burnin=8, max_iters=16,
+              min_iters=16)
+    resident = PEMSVM(SVMConfig(**kw)).fit(X, y)
+    streamed = PEMSVM(SVMConfig(driver="stream", chunk_rows=100,
+                                **kw)).fit(X, y)
+    rel_mc = (np.abs(streamed.weights - resident.weights).max()
+              / np.abs(resident.weights).max())
+    print(f"MC-CLS stream-vs-resident rel-err: {rel_mc:.3e}")
+    if rel_mc > 2e-4:
+        print("MC STREAM PARITY FAIL")
+        return 1
+
+    # --- gate 3: EM-SVR stream vs resident (deterministic) -----------
+    kw = dict(task="SVR", eps=1e-2, eps_ins=0.3, max_iters=20,
+              min_iters=20)
+    resident = PEMSVM(SVMConfig(**kw)).fit(X, ys)
+    streamed = PEMSVM(SVMConfig(driver="stream", chunk_rows=100,
+                                **kw)).fit(X, ys)
+    rel_svr = (np.abs(streamed.weights - resident.weights).max()
+               / np.abs(resident.weights).max())
+    print(f"EM-SVR stream-vs-resident rel-err: {rel_svr:.3e}")
+    if rel_svr > 1e-4:
+        print("SVR STREAM PARITY FAIL")
+        return 1
+
+    print("mc smoke complete")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -12,34 +12,63 @@ per-class rho/beta (Eq. 34-36), and SVR uses two mixtures (Eq. 25-26).
 
 Per paper Sec 5.7.3, gamma values are clamped to >= eps instead of using
 Greene's restricted least squares to handle support vectors (gamma -> 0).
+
+Since the single-stream Gibbs refactor (DESIGN.md §Perf/MC-SVR) this
+module is split in two halves:
+
+  * DRAW GENERATION (here): rowwise-keyed PRNG — ``draw_ig_noise``
+    pre-draws the per-row (nu, u) pairs the MC epilogues consume, keyed
+    by GLOBAL row index so the chain is bitwise chunk/shard-invariant.
+    O(N) bytes — noise next to the N*K*4 X stream.
+  * IN-KERNEL TRANSFORM (``kernels/epilogues.py``): the deterministic
+    Michael-Schucany-Haas transform and the epilogue family applied to
+    the margin tile inside the fused statistics kernels (re-exported
+    here as ``ig_transform`` / ``ig_gamma_from_noise``).
+
+``gamma_mc`` / ``gamma_mc_rowwise`` remain the batch-level oracles the
+fused paths are tested against (bitwise, given the same residuals).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-# Clamp for the IG mean (mu = 1/|residual| explodes as the margin hits the
-# hinge knee). 1/MU_MAX is far below any useful gamma clamp.
-_MU_MAX = 1e8
+from repro.kernels.epilogues import (_MU_MAX, ig_gamma_from_noise,  # noqa: F401
+                                     ig_transform)
 
 
 def sample_inverse_gaussian(key: jax.Array, mu: jnp.ndarray,
                             lam: float = 1.0) -> jnp.ndarray:
-    """Draw IG(mu, lam) via the Michael-Schucany-Haas transform.
-
-    x = mu + mu^2 y/(2 lam) - mu/(2 lam) sqrt(4 mu lam y + mu^2 y^2), y = nu^2,
-    accepted with prob mu/(mu+x), else mu^2/x.
-    """
+    """Draw IG(mu, lam): split the key into (normal, uniform) noise and
+    apply the Michael-Schucany-Haas transform (``ig_transform``)."""
     k1, k2 = jax.random.split(key)
     nu = jax.random.normal(k1, mu.shape, dtype=mu.dtype)
-    y = nu * nu
-    muy = mu * y
-    x = mu + mu * muy / (2.0 * lam) - (mu / (2.0 * lam)) * jnp.sqrt(
-        4.0 * mu * lam * y + muy * muy)
-    # Guard the fp edge where the sqrt slightly overshoots mu.
-    x = jnp.maximum(x, jnp.finfo(mu.dtype).tiny)
     u = jax.random.uniform(k2, mu.shape, dtype=mu.dtype)
-    return jnp.where(u <= mu / (mu + x), x, mu * mu / x)
+    return ig_transform(mu, nu, u, lam)
+
+
+def draw_ig_noise(key: jax.Array, n: int, row0: jnp.ndarray | int = 0,
+                  dtype=jnp.float32) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Pre-draw the per-row (nu, u) noise one IG mixture consumes.
+
+    Row d draws from ``fold_in(key, row0 + d)`` split into a normal and
+    a uniform — exactly the keying and draw order of the
+    ``gamma_mc_rowwise`` oracle, so feeding these arrays to
+    ``ig_gamma_from_noise`` (host-side or inside a fused kernel
+    epilogue) reproduces the oracle's gamma draws bitwise, for ANY
+    chunking or sharding of the rows. SVR's double mixture calls this
+    twice on split keys (gamma's then omega's mixture), matching the
+    pre-fusion split-key oracle.
+    """
+    ids = jnp.asarray(row0, jnp.int32) + jnp.arange(n, dtype=jnp.int32)
+    keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(key, ids)
+
+    def one(k):
+        k1, k2 = jax.random.split(k)
+        return (jax.random.normal(k1, (), dtype),
+                jax.random.uniform(k2, (), dtype))
+
+    return jax.vmap(one)(keys)
 
 
 def gamma_em(residual: jnp.ndarray, eps: float) -> jnp.ndarray:
@@ -67,6 +96,10 @@ def gamma_mc_rowwise(key: jax.Array, residual: jnp.ndarray, eps: float,
     ``driver="stream"`` exactly reproducible against the in-memory
     oracle for MC (DESIGN.md §Perf/Streaming). Costs one extra threefry
     hash per row — O(N), noise next to the O(NK^2) Sigma statistic.
+
+    This is THE draw oracle: the fused single-stream MC paths pre-draw
+    the same per-row noise (``draw_ig_noise``) and apply the transform
+    in-kernel, and are tested bitwise against this function.
     """
     n = residual.shape[0]
     ids = jnp.asarray(row0, jnp.int32) + jnp.arange(n, dtype=jnp.int32)

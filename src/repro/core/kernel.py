@@ -70,20 +70,19 @@ def krn_step(data: SVMData, K_prior: jnp.ndarray, omega: jnp.ndarray,
     # y = 0 there, so b gets 0; S would get (1/gamma_pad) e_d e_d^T — a
     # positive diagonal on padded components only. gamma_pad = |0 - omega_d|
     # stays near 0 -> clamp; suppress via the explicit Sigma weight mask.
+    # Both modes stream the Gram rows ONCE: MC pre-draws per-GLOBAL-row
+    # (nu, u) noise (fold_in(iter_key, row index) — the sampled chain is
+    # independent of the mesh layout) and the IG transform runs inside
+    # the kernel epilogue (DESIGN.md §Perf/MC-SVR).
     if mode == "EM":
-        margin, gamma, b, S = ops.fused_stats(K_rows, y, y, omega,
-                                              wmask=mask, eps=eps,
-                                              backend=backend)
+        epilogue, noise = "em_hinge", None
     else:
-        # MC gamma draws are keyed per GLOBAL row (like the LIN paths
-        # post-PR-2): fold_in(iter_key, row index) makes the sampled
-        # chain independent of the mesh layout — the old per-axis key
-        # folds gave each sharding a different chain.
         row0 = stats.shard_row_offset(K_rows.shape[0], axes)
-        margin = K_rows.astype(jnp.float32) @ omega.astype(jnp.float32)
-        gamma = augment.gamma_mc_rowwise(key, y - margin, eps, row0)
-        b = K_rows.astype(jnp.float32).T @ (y / gamma + y)
-        S = ops.syrk_tri(K_rows, mask / gamma, backend=backend)
+        epilogue = "mc_hinge"
+        noise = augment.draw_ig_noise(key, K_rows.shape[0], row0)
+    margin, gamma, b, S = ops.fused_stats(K_rows, y, y, omega, mask,
+                                          noise, epilogue=epilogue,
+                                          eps=eps, backend=backend)
     S, b = stats.reduce_stats(S, b, axes, triangle=triangle,
                               reduce_dtype=reduce_dtype)
 

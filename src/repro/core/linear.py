@@ -79,58 +79,43 @@ def accumulate_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
     Sigma and b, so a partially-valid block needs no special casing.
 
     ``row0`` is the block's global row offset: MC gamma draws are keyed
-    per global row (``augment.gamma_mc_rowwise``) so the sampled chain
-    is invariant to chunking and sharding layout.
+    per global row so the sampled chain is invariant to chunking and
+    sharding layout.
 
-    EM streams X once through ``fused_stats`` (margin, gamma, b and
-    Sigma in a single HBM pass); MC needs the gamma draw between the
-    E-step and the Sigma pass, so it computes the E-step inline and uses
-    the triangle-blocked SYRK for Sigma (half the dense FLOPs).
+    BOTH modes stream X once through ``fused_stats``: EM with the
+    ``em_hinge`` epilogue (today's path), MC with ``mc_hinge`` — the
+    per-row (nu, u) noise is pre-drawn here (``augment.draw_ig_noise``,
+    rowwise-keyed, bitwise-identical to the ``gamma_mc_rowwise``
+    oracle) and the inverse-Gaussian transform runs INSIDE the kernel
+    on the margin tile, so the draw no longer forces a separate margin
+    pass + SYRK (3 X streams -> 1; DESIGN.md §Perf/MC-SVR).
 
     ``phi``/``phi_spec`` switch the statistic to Nystrom phi-space
     (core/nystrom.py): X holds RAW rows and phi = (landmarks, proj) is
-    featurized ON DEVICE inside the statistic. EM fuses featurization
-    into the single X sweep (``ops.nystrom_fused_stats`` — the (N, m)
-    phi matrix never exists); MC featurizes this block only
-    (``ops.nystrom_phi``, block-bounded residency) because the gamma
-    draw sits between the E-step and the Sigma pass. ``mask`` is
-    required in phi-space — a zero X row is NOT a zero phi row, so
+    featurized ON DEVICE inside the statistic. Both modes fuse
+    featurization into the single X sweep (``ops.nystrom_fused_stats``
+    — the (N, m) phi matrix never exists, for EM *and* MC). ``mask``
+    is required in phi-space — a zero X row is NOT a zero phi row, so
     padding must be masked rather than relying on the zero-row layout.
     """
+    if mode == "EM":
+        epilogue, noise = "em_hinge", None
+    else:
+        epilogue = "mc_hinge"
+        noise = augment.draw_ig_noise(key, X.shape[0], row0)
     if phi_spec is not None:
-        return _phi_accumulate_stats(X, rho, beta, w, mode=mode, key=key,
-                                     eps=eps, backend=backend, row0=row0,
-                                     phi=phi, phi_spec=phi_spec, mask=mask)
-    if mode == "EM":
-        margin, gamma, b, S = ops.fused_stats(X, rho, beta, w, eps=eps,
-                                              backend=backend)
-    else:
-        margin = X.astype(jnp.float32) @ w.astype(jnp.float32)
-        gamma = augment.gamma_mc_rowwise(key, rho - margin, eps, row0)
-        coef = rho.astype(jnp.float32) / gamma + beta.astype(jnp.float32)
-        b = X.astype(jnp.float32).T @ coef
-        S = ops.syrk_tri(X, 1.0 / gamma, backend=backend)
-    return margin, gamma, S, b
-
-
-def _phi_accumulate_stats(X, rho, beta, w, *, mode, key, eps, backend,
-                          row0, phi, phi_spec: PhiSpec, mask):
-    """Phi-space flavor of ``accumulate_stats`` (see its docstring)."""
-    landmarks, proj = phi
-    if mask is None:
-        mask = jnp.ones((X.shape[0],), jnp.float32)
-    common = dict(sigma=phi_spec.sigma, kind=phi_spec.kind,
-                  add_bias=phi_spec.add_bias, backend=backend)
-    if mode == "EM":
+        landmarks, proj = phi
+        if mask is None:
+            mask = jnp.ones((X.shape[0],), jnp.float32)
         margin, gamma, b, S = ops.nystrom_fused_stats(
-            X, landmarks, proj, rho, beta, w, mask, eps=eps, **common)
+            X, landmarks, proj, rho, beta, w, mask, noise,
+            sigma=phi_spec.sigma, kind=phi_spec.kind,
+            add_bias=phi_spec.add_bias, epilogue=epilogue, eps=eps,
+            backend=backend)
     else:
-        phi_mat = ops.nystrom_phi(X, landmarks, proj, mask, **common)
-        margin = phi_mat @ w.astype(jnp.float32)
-        gamma = augment.gamma_mc_rowwise(key, rho - margin, eps, row0)
-        coef = rho.astype(jnp.float32) / gamma + beta.astype(jnp.float32)
-        b = phi_mat.T @ coef
-        S = ops.syrk_tri(phi_mat, mask / gamma, backend=backend)
+        margin, gamma, b, S = ops.fused_stats(
+            X, rho, beta, w, None, noise, epilogue=epilogue, eps=eps,
+            backend=backend)
     return margin, gamma, S, b
 
 
@@ -194,7 +179,12 @@ def cls_step(data: SVMData, w: jnp.ndarray, key: jax.Array, *,
         else:
             margin = X.astype(jnp.float32) @ w.astype(jnp.float32)
             gamma = augment.gamma_mc_rowwise(key, y - margin, eps, row0)
-            b = X.astype(jnp.float32).T @ (y / gamma + y)
+            # Cast BEFORE the arithmetic, matching accumulate_stats'
+            # rho/beta handling: a wider target dtype (f64 under x64)
+            # would otherwise silently upcast b and the whole posterior
+            # solve (regression: tests/test_mc_fused.py).
+            yf = y.astype(jnp.float32)
+            b = X.astype(jnp.float32).T @ (yf / gamma + yf)
         start, blk = _k_block(X, k_shard_axis)
         Xcols = jax.lax.dynamic_slice_in_dim(X, start, blk, axis=1)
         S_blk = (X.astype(jnp.float32) * (1.0 / gamma)[:, None]).T @ Xcols

@@ -13,6 +13,14 @@ Eq. 38-39 — i.e. exactly ``linear.accumulate_stats`` with per-class
 (rho, beta). Delta is the standard 0/1 cost. Iteration time is M x LIN
 (paper Sec 4.3).
 
+Each class conditional IS ``linear.accumulate_stats``, so the fused
+epilogue family applies per class: an MC sweep issues M single-stream
+fused passes (margin, Gibbs gamma via in-kernel IG transform, b, Sigma
+per class) instead of the pre-fusion 3M X streams — the M-class Gibbs
+sweep itself stays inherently sequential (class y's rho depends on the
+already-updated w_{<y}), so M streams per sweep is the floor
+(DESIGN.md §Perf/MC-SVR, ROADMAP Open items).
+
 The class loop maintains the score matrix F = X W^T and refreshes only
 column y after updating w_y (one GEMV instead of a full GEMM per class).
 The streaming path (``mlt_class_chunk_stats``) instead *recomputes* the

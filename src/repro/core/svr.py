@@ -39,39 +39,44 @@ def svr_local_stats(X: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray, *,
                     mask: jnp.ndarray | None = None):
     """(pred, gamma, omega, Sigma^p, mu^p) over one row block.
 
-    MC draws both mixtures per global row (two independent streams via
-    a key split, each rowwise-keyed), so the chain is invariant to
-    chunking and sharding layout. Padded rows (X-row = 0, y = 0)
-    contribute exactly zero to Sigma and b.
+    BOTH mixtures now run as a ``fused_stats`` epilogue (``em_svr`` /
+    ``mc_svr``): the kernel computes gamma and omega from the margin
+    tile, the combined weights 1/gamma + 1/omega and the coef
+    (y-eps)/gamma + (y+eps)/omega, so the whole Eq. 25-28 statistic is
+    ONE X stream per iteration instead of the pre-fusion three (pred
+    matmul, b matmul, SYRK) — DESIGN.md §Perf/MC-SVR. MC pre-draws both
+    mixtures' (nu, u) noise per global row (two independent streams via
+    a key split — gamma's mixture from the low key, omega's from the
+    high, exactly the split-key rowwise oracle), so the chain stays
+    invariant to chunking and sharding layout. Padded rows (X-row = 0,
+    y = 0) contribute exactly zero to Sigma and b.
 
-    ``phi``/``phi_spec`` switch to Nystrom phi-space: the block is
-    featurized on device (``ops.nystrom_phi``, block-bounded) and the
-    double mixture runs on phi rows. The single-pass fused kernel does
-    not apply here — SVR's statistic needs BOTH mixtures' weights, and
-    MC additionally draws between E-step and Sigma — so the phi-space
-    SVR route is featurize-then-accumulate per block, with ``mask``
-    zeroing phi rows (a zero X row is not a zero phi row)."""
+    ``phi``/``phi_spec`` switch to Nystrom phi-space through
+    ``ops.nystrom_fused_stats`` under the same SVR epilogues: the block
+    featurizes in VMEM and no phi block is materialized, for EM and MC
+    alike; ``mask`` zeroes phi rows (a zero X row is not a zero phi
+    row) and scales the Sigma weights."""
+    epilogue = "em_svr" if mode == "EM" else "mc_svr"
+    noise = None
+    if mode == "MC":
+        k_lo, k_hi = jax.random.split(key)
+        nu_g, u_g = augment.draw_ig_noise(k_lo, X.shape[0], row0)
+        nu_o, u_o = augment.draw_ig_noise(k_hi, X.shape[0], row0)
+        noise = (nu_g, u_g, nu_o, u_o)
+    beta0 = jnp.zeros((X.shape[0],), jnp.float32)  # hinge sign: unused
     if phi_spec is not None:
         landmarks, proj = phi
         if mask is None:
             mask = jnp.ones((X.shape[0],), jnp.float32)
-        X = ops.nystrom_phi(X, landmarks, proj, mask, sigma=phi_spec.sigma,
-                            kind=phi_spec.kind, add_bias=phi_spec.add_bias,
-                            backend=backend)
-    k_lo = k_hi = None
-    if mode == "MC":
-        k_lo, k_hi = jax.random.split(key)
-    pred = X.astype(jnp.float32) @ w.astype(jnp.float32)
-    res = y.astype(jnp.float32) - pred
-    gamma = augment.update_gamma(mode, k_lo, res - eps_ins, eps, row0=row0)
-    omega = augment.update_gamma(mode, k_hi, res + eps_ins, eps, row0=row0)
-
-    weights = 1.0 / gamma + 1.0 / omega
-    if phi_spec is not None:
-        weights = weights * mask  # phi rows are zeroed, but keep S exact
-    S = ops.syrk_tri(X, weights, backend=backend)
-    coef = (y - eps_ins) / gamma + (y + eps_ins) / omega
-    b = X.astype(jnp.float32).T @ coef
+        pred, gamma, omega, b, S = ops.nystrom_fused_stats(
+            X, landmarks, proj, y, beta0, w, mask, noise,
+            sigma=phi_spec.sigma, kind=phi_spec.kind,
+            add_bias=phi_spec.add_bias, epilogue=epilogue, eps=eps,
+            eps_ins=eps_ins, backend=backend)
+    else:
+        pred, gamma, omega, b, S = ops.fused_stats(
+            X, y, beta0, w, None, noise, epilogue=epilogue, eps=eps,
+            eps_ins=eps_ins, backend=backend)
     return pred, gamma, omega, S, b
 
 

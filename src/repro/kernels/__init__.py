@@ -8,8 +8,11 @@ TPU-native counterpart (see DESIGN.md §3):
   * syrk_tri      — same statistic over only the lower-triangle block
                     pairs (~2x fewer FLOPs; DESIGN.md §Perf).
   * fused_estep   — margin -> gamma -> mu-numerator in one HBM pass.
-  * fused_stats   — the WHOLE iteration statistic (margin, gamma, b,
-                    Sigma) in a single X pass (one HBM stream/iter).
+  * fused_stats   — the WHOLE iteration statistic (margin, aug, b,
+                    Sigma) in a single X pass (one HBM stream/iter),
+                    parameterized by an augmentation epilogue
+                    (``epilogues``: EM/MC hinge, SVR double mixture —
+                    MC noise pre-drawn, transform applied in-kernel).
   * rbf_gram      — tiled RBF Gram blocks for the KRN formulation.
   * nystrom_phi / nystrom_fused_stats — Nystrom featurization fused
                     with the iteration statistic: the phi tile lives
@@ -18,6 +21,6 @@ TPU-native counterpart (see DESIGN.md §3):
 ``ops`` holds the backend-dispatching public wrappers; ``ref`` the pure-jnp
 oracles used as ground truth and as the CPU path.
 """
-from . import ops, ref  # noqa: F401
+from . import epilogues, ops, ref  # noqa: F401
 from .ops import (fused_estep, fused_stats, nystrom_fused_stats,  # noqa: F401
                   nystrom_phi, rbf_gram, syrk_tri, weighted_gram)

@@ -1,0 +1,132 @@
+"""Per-row augmentation epilogues executed INSIDE the fused statistics
+kernels (the in-kernel half of the ``core/augment.py`` split).
+
+The one-sweep kernels (``fused_stats``, ``nystrom_fused_stats``) compute
+the margin tile and the (b, Sigma) accumulators from one HBM pass over
+X. What sits between the margin and the accumulators is the per-row
+augmentation update — gamma for the hinge, (gamma, omega) for SVR's
+double mixture — and it differs by {EM, MC} x {hinge, SVR}. This module
+is that family, written as pure elementwise jnp so the SAME code runs
+
+  * on (bn, 1) tiles inside a Pallas kernel body,
+  * on (N,) vectors in the ``ref`` oracles and the K-tiled fallbacks.
+
+MC draws are split into *draw generation* and *transform*: the PRNG half
+(``core/augment.draw_ig_noise``) pre-draws per-row (nu, u) pairs keyed
+by GLOBAL row index — O(N) bytes streamed into the kernel as extra
+(N,) operands, noise next to the N*K*4 X stream — and the kernel applies
+the deterministic Michael-Schucany-Haas transform (``ig_transform``)
+below. Because the (nu, u) bits depend only on (iteration key, global
+row), the sampled chain is bitwise chunk/shard-invariant and identical
+to the ``augment.gamma_mc_rowwise`` oracle; the kernel never needs a
+PRNG (DESIGN.md §Perf/MC-SVR).
+
+Epilogue contract: ``apply_epilogue`` maps the margin tile to
+(aug, sigma_weight, coef) where
+
+  aug           per-row augmentation variables — (gamma,) for the hinge
+                epilogues, (gamma, omega) for SVR (kernel outputs);
+  sigma_weight  Sigma = X^T diag(wmask * sigma_weight) X;
+  coef          b = X^T coef (the mu-numerator weights).
+
+This module must stay import-free of ``repro.core`` (the kernels import
+it, and core imports the kernels).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Clamp for the IG mean (mu = 1/|residual| explodes as the margin hits
+# the hinge knee). 1/MU_MAX is far below any useful gamma clamp.
+_MU_MAX = 1e8
+
+# em_hinge  — today's EM E-step: gamma = max(eps, |rho - margin|)
+#             (paper Eq. 9/36 + the Sec 5.7.3 clamp).
+# mc_hinge  — the Gibbs draw gamma^{-1} ~ IG(1/|rho - margin|, 1)
+#             (paper Eq. 5) via pre-drawn (nu, u).
+# em_svr /  — SVR's double mixture (paper Eq. 25-28): gamma from
+# mc_svr      res - eps_ins, omega from res + eps_ins, combined weights
+#             1/gamma + 1/omega and coef (y-eps)/gamma + (y+eps)/omega.
+EPILOGUES = ("em_hinge", "mc_hinge", "em_svr", "mc_svr")
+
+# (nu, u) operand pairs consumed per row: one per IG mixture drawn.
+_NOISE_ARITY = {"em_hinge": 0, "mc_hinge": 2, "em_svr": 0, "mc_svr": 4}
+# augmentation variables emitted per row: (gamma,) or (gamma, omega).
+_AUG_ARITY = {"em_hinge": 1, "mc_hinge": 1, "em_svr": 2, "mc_svr": 2}
+
+
+def noise_arity(epilogue: str) -> int:
+    """Number of pre-drawn (N,) noise operands the epilogue consumes."""
+    return _NOISE_ARITY[epilogue]
+
+
+def aug_arity(epilogue: str) -> int:
+    """Number of per-row augmentation outputs (1 hinge, 2 SVR)."""
+    return _AUG_ARITY[epilogue]
+
+
+def ig_transform(mu: jnp.ndarray, nu: jnp.ndarray, u: jnp.ndarray,
+                 lam: float = 1.0) -> jnp.ndarray:
+    """Michael-Schucany-Haas IG(mu, lam) transform of pre-drawn noise.
+
+    x = mu + mu^2 y/(2 lam) - mu/(2 lam) sqrt(4 mu lam y + mu^2 y^2),
+    y = nu^2, accepted when u <= mu/(mu+x), else mu^2/x. Deterministic
+    given (nu ~ N(0,1), u ~ U(0,1)) — the PRNG lives with the caller,
+    which is what lets the fused kernels apply this on a margin tile.
+    """
+    y = nu * nu
+    muy = mu * y
+    x = mu + mu * muy / (2.0 * lam) - (mu / (2.0 * lam)) * jnp.sqrt(
+        4.0 * mu * lam * y + muy * muy)
+    # Guard the fp edge where the sqrt slightly overshoots mu.
+    x = jnp.maximum(x, jnp.finfo(mu.dtype).tiny)
+    return jnp.where(u <= mu / (mu + x), x, mu * mu / x)
+
+
+def ig_gamma_from_noise(residual: jnp.ndarray, nu: jnp.ndarray,
+                        u: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """Gibbs gamma update from pre-drawn noise (paper Eq. 5, clamped).
+
+    gamma^{-1} ~ IG(1/|residual|, 1) realized through ``ig_transform``;
+    arithmetic is kept identical to ``augment.gamma_mc`` so the fused
+    kernels reproduce the oracle draws bitwise given the same residual.
+    """
+    r = jnp.abs(residual.astype(jnp.float32))
+    mu = jnp.minimum(1.0 / jnp.maximum(r, 1.0 / _MU_MAX), _MU_MAX)
+    inv_gamma = ig_transform(mu, nu, u)
+    return jnp.maximum(1.0 / jnp.maximum(inv_gamma, 1.0 / _MU_MAX), eps)
+
+
+def apply_epilogue(epilogue: str, margin: jnp.ndarray, rho: jnp.ndarray,
+                   beta: jnp.ndarray, noise: tuple, eps: float,
+                   eps_ins: float = 0.0):
+    """-> (aug, sigma_weight, coef); see the module docstring contract.
+
+    All inputs are f32 and shape-aligned with ``margin`` (tiles or
+    vectors). ``rho`` is the generic-hinge intercept for the hinge
+    epilogues and the regression target y for the SVR ones; ``beta`` is
+    the hinge sign (unused by SVR). ``noise`` carries ``noise_arity``
+    pre-drawn arrays: (nu, u) for mc_hinge, (nu_g, u_g, nu_o, u_o) for
+    mc_svr — gamma's mixture first, then omega's.
+    """
+    if epilogue == "em_hinge":
+        gamma = jnp.maximum(jnp.abs(rho - margin), eps)
+        return (gamma,), 1.0 / gamma, rho / gamma + beta
+    if epilogue == "mc_hinge":
+        nu, u = noise
+        gamma = ig_gamma_from_noise(rho - margin, nu, u, eps)
+        return (gamma,), 1.0 / gamma, rho / gamma + beta
+    if epilogue in ("em_svr", "mc_svr"):
+        res = rho - margin
+        if epilogue == "em_svr":
+            gamma = jnp.maximum(jnp.abs(res - eps_ins), eps)
+            omega = jnp.maximum(jnp.abs(res + eps_ins), eps)
+        else:
+            nu_g, u_g, nu_o, u_o = noise
+            gamma = ig_gamma_from_noise(res - eps_ins, nu_g, u_g, eps)
+            omega = ig_gamma_from_noise(res + eps_ins, nu_o, u_o, eps)
+        weight = 1.0 / gamma + 1.0 / omega
+        coef = (rho - eps_ins) / gamma + (rho + eps_ins) / omega
+        return (gamma, omega), weight, coef
+    raise ValueError(f"epilogue must be one of {EPILOGUES}, "
+                     f"got {epilogue!r}")

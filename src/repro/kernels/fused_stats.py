@@ -2,32 +2,41 @@
 
 ``fused_estep`` already fuses (margin, gamma, b); the Sigma statistic was
 a second full pass over X (``weighted_gram``/``syrk_tri``). This kernel
-emits all four outputs of one EM iteration from a single ``pallas_call``:
+emits every output of one iteration from a single ``pallas_call``:
 
-    margin_d = w^T x_d
-    gamma_d  = max(eps, |rho_d - margin_d|)          (paper Eq. 9/36)
-    b        = sum_d (rho_d/gamma_d + beta_d) x_d    (Eq. 6/39 numerator)
-    S        = sum_d (m_d/gamma_d) x_d x_d^T         (Sigma^p, Table 9)
+    margin_d  = w^T x_d
+    aug_d     = per-row augmentation update on the margin tile
+                (an EPILOGUE from ``epilogues.py``: EM gamma, the MC
+                inverse-Gaussian transform of pre-drawn (nu, u) noise,
+                or SVR's double (gamma, omega) mixture — Eq. 9/5/25-28)
+    b         = sum_d coef_d x_d                 (Eq. 6/28/39 numerator)
+    S         = sum_d (m_d * weight_d) x_d x_d^T (Sigma^p, Table 9)
 
-so X streams HBM->VMEM ONCE per iteration instead of twice — on a
-memory-bound statistic that halves iteration HBM traffic (DESIGN.md
-§Perf). ``m_d`` is an optional extra weight mask on the Sigma weights
-only (the KRN path suppresses padded Gram rows with it; LIN passes ones).
+so X streams HBM->VMEM ONCE per iteration instead of two (EM) or three
+(the pre-fusion MC/SVR paths: margin matmul, b matmul, SYRK) — on a
+memory-bound statistic stream count IS iteration time (DESIGN.md
+§Perf, §Perf/MC-SVR). ``m_d`` is an optional extra weight mask on the
+Sigma weights only (the KRN path suppresses padded Gram rows with it;
+LIN passes ones). MC epilogues consume pre-drawn per-row noise streamed
+in as extra (N,) operands — O(N) bytes next to the N*K*4 X stream — so
+the kernel stays PRNG-free and the draws stay bitwise identical to the
+``augment.gamma_mc_rowwise`` oracle (see ``epilogues.py``).
 
 Grid is 1-D over N-blocks; each step holds a (bn, K) X tile, the (K, 1)
 weight vector and the full (K, K) fp32 Sigma accumulator in VMEM. That
 accumulator bounds the usable K: K <= ~1500 fits the ~16 MB VMEM budget
-with bn=512 (K*K*4B + 2*bn*K*4B). Larger K should use ``syrk_tri`` +
-``fused_estep`` (two passes, tiled K). The SVM regime of the paper
-(K = 54..800 after bias) sits comfortably inside.
+with bn=512 (K*K*4B + 2*bn*K*4B; the per-row noise/aug vectors add
+<= 6*bn*4B — noise). Larger K should use the split pair (two passes,
+tiled K). The SVM regime of the paper (K = 54..800 after bias) sits
+comfortably inside.
 
 Unlike ``syrk_tri`` the Sigma accumulation here is a dense rank-bn
 update: the triangle trick does not compose with single-pass streaming
 (a triangle block grid must revisit X tiles per (i, j) pair, which is
-exactly the second pass we are eliminating). Dense-SYRK FLOPs at half
-the HBM traffic vs half the FLOPs at full traffic — the roofline in
-DESIGN.md §Perf says fused wins whenever the statistic is memory-bound,
-i.e. precisely when N >> K.
+exactly the second pass we are eliminating). Dense-SYRK FLOPs at a
+third to half the HBM traffic vs half the FLOPs at full traffic — the
+roofline in DESIGN.md §Perf says fused wins whenever the statistic is
+memory-bound, i.e. precisely when N >> K.
 """
 from __future__ import annotations
 
@@ -37,23 +46,33 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from . import epilogues
 
-def _make_kernel(eps: float):
-    def _kernel(x_ref, rho_ref, beta_ref, wmask_ref, w_ref,
-                margin_ref, gamma_ref, b_ref, s_ref):
+
+def _make_kernel(epilogue: str, eps: float, eps_ins: float,
+                 n_noise: int, n_aug: int):
+    def _kernel(*refs):
+        x_ref, rho_ref, beta_ref, wmask_ref, w_ref = refs[:5]
+        noise_refs = refs[5:5 + n_noise]
+        outs = refs[5 + n_noise:]
+        margin_ref, aug_refs = outs[0], outs[1:1 + n_aug]
+        b_ref, s_ref = outs[-2], outs[-1]
+
         x = x_ref[...].astype(jnp.float32)          # (bn, K)
         wv = w_ref[...].astype(jnp.float32)         # (K, 1)
         rho = rho_ref[...].astype(jnp.float32)      # (bn, 1)
         beta = beta_ref[...].astype(jnp.float32)    # (bn, 1)
         wmask = wmask_ref[...].astype(jnp.float32)  # (bn, 1)
+        noise = tuple(r[...].astype(jnp.float32) for r in noise_refs)
 
         margin = jax.lax.dot_general(                # (bn, 1) on the MXU
             x, wv, dimension_numbers=(((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
         margin_ref[...] = margin
-        gamma = jnp.maximum(jnp.abs(rho - margin), eps)
-        gamma_ref[...] = gamma
-        coef = rho / gamma + beta                    # (bn, 1)
+        aug, weight, coef = epilogues.apply_epilogue(
+            epilogue, margin, rho, beta, noise, eps, eps_ins)
+        for ref, a in zip(aug_refs, aug):
+            ref[...] = a
 
         @pl.when(pl.program_id(0) == 0)
         def _init():
@@ -63,26 +82,39 @@ def _make_kernel(eps: float):
         b_ref[...] += jax.lax.dot_general(           # x^T coef: (K, 1)
             x, coef, dimension_numbers=(((0,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
-        xw = x * (wmask / gamma)                     # (bn, K) weighted rows
-        s_ref[...] += jax.lax.dot_general(           # x^T diag(m/gamma) x
+        xw = x * (wmask * weight)                    # (bn, K) weighted rows
+        s_ref[...] += jax.lax.dot_general(           # x^T diag(m*w) x
             xw, x, dimension_numbers=(((0,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
     return _kernel
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("eps", "block_n", "interpret"))
+                   static_argnames=("epilogue", "eps", "eps_ins",
+                                    "block_n", "interpret"))
 def fused_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
-                wvec: jnp.ndarray, wmask: jnp.ndarray | None = None, *,
-                eps: float = 1e-6, block_n: int = 512,
+                wvec: jnp.ndarray, wmask: jnp.ndarray | None = None,
+                noise: tuple | None = None, *,
+                epilogue: str = "em_hinge", eps: float = 1e-6,
+                eps_ins: float = 0.0, block_n: int = 512,
                 interpret: bool = False):
-    """Returns (margin (N,), gamma (N,), b (K,), S (K, K)), all f32.
+    """Returns (margin (N,), *aug (N,) each, b (K,), S (K, K)), all f32
+    — aug is (gamma,) for the hinge epilogues, (gamma, omega) for SVR.
 
-    X: (N, K); rho/beta/wmask: (N,); wvec: (K,). Zero-padded rows carry
-    rho = beta = 0 so coef is exactly 0, and their X-row is 0 so the S
-    contribution vanishes regardless of the padded gamma value.
+    X: (N, K); rho/beta/wmask: (N,); wvec: (K,); noise: ``noise_arity``
+    pre-drawn (N,) arrays for the MC epilogues (see ``epilogues.py``).
+    Zero-padded rows carry rho = beta = 0 so the hinge coef is exactly
+    0, and their X-row is 0 so the b/S contributions vanish regardless
+    of the augmentation values (SVR's MC coef is nonzero on padded rows
+    — the zero X-row alone makes it a no-op).
     """
     N, K = X.shape
+    n_noise = epilogues.noise_arity(epilogue)
+    n_aug = epilogues.aug_arity(epilogue)
+    noise = tuple(noise) if noise is not None else ()
+    assert len(noise) == n_noise, (
+        f"epilogue {epilogue!r} needs {n_noise} noise operands, "
+        f"got {len(noise)}")
     if wmask is None:
         wmask = jnp.ones((N,), jnp.float32)
     bn = min(block_n, _round_up(N, 8))
@@ -94,34 +126,38 @@ def fused_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
         beta = jnp.pad(beta, (0, Np - N))
         wmask = jnp.pad(wmask, (0, Np - N))
         wvec = jnp.pad(wvec, (0, Kp - K))
+        noise = tuple(jnp.pad(z, (0, Np - N)) for z in noise)
 
     grid = (Np // bn,)
-    margin, gamma, b, S = pl.pallas_call(
-        _make_kernel(float(eps)),
+    row_spec = pl.BlockSpec((bn, 1), lambda n: (n, 0))
+    outs = pl.pallas_call(
+        _make_kernel(epilogue, float(eps), float(eps_ins), n_noise,
+                     n_aug),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bn, Kp), lambda n: (n, 0)),   # X rows
-            pl.BlockSpec((bn, 1), lambda n: (n, 0)),    # rho
-            pl.BlockSpec((bn, 1), lambda n: (n, 0)),    # beta
-            pl.BlockSpec((bn, 1), lambda n: (n, 0)),    # Sigma weight mask
+            row_spec,                                   # rho
+            row_spec,                                   # beta
+            row_spec,                                   # Sigma weight mask
             pl.BlockSpec((Kp, 1), lambda n: (0, 0)),    # w (replicated)
-        ],
-        out_specs=[
-            pl.BlockSpec((bn, 1), lambda n: (n, 0)),    # margin
-            pl.BlockSpec((bn, 1), lambda n: (n, 0)),    # gamma
+        ] + [row_spec] * n_noise,                       # pre-drawn noise
+        out_specs=[row_spec]                            # margin
+        + [row_spec] * n_aug                            # gamma (, omega)
+        + [
             pl.BlockSpec((Kp, 1), lambda n: (0, 0)),    # b (revisited)
             pl.BlockSpec((Kp, Kp), lambda n: (0, 0)),   # S (revisited)
         ],
-        out_shape=[
-            jax.ShapeDtypeStruct((Np, 1), jnp.float32),
-            jax.ShapeDtypeStruct((Np, 1), jnp.float32),
+        out_shape=[jax.ShapeDtypeStruct((Np, 1), jnp.float32)]
+        * (1 + n_aug)
+        + [
             jax.ShapeDtypeStruct((Kp, 1), jnp.float32),
             jax.ShapeDtypeStruct((Kp, Kp), jnp.float32),
         ],
         interpret=interpret,
     )(X, rho.reshape(Np, 1), beta.reshape(Np, 1), wmask.reshape(Np, 1),
-      wvec.reshape(Kp, 1))
-    return margin[:N, 0], gamma[:N, 0], b[:K, 0], S[:K, :K]
+      wvec.reshape(Kp, 1), *(z.reshape(Np, 1) for z in noise))
+    per_row, (b, S) = outs[:1 + n_aug], outs[-2:]
+    return (*(v[:N, 0] for v in per_row), b[:K, 0], S[:K, :K])
 
 
 def _round_up(x: int, m: int) -> int:

@@ -14,11 +14,14 @@ strip (the ``rbf_gram`` tile body, shared code), apply the precomputed
 (m, m) ``K_mm^{-1/2}`` projection on the MXU, and then either
 
   * ``nystrom_phi``         — write the phi tile out (the device-side
-    featurizer: prediction, and the MC path which must draw gamma
-    between the E-step and the Sigma pass), or
+    featurizer: prediction, and MLT's M-pass class sweep where one
+    featurize serves all M statistics passes), or
   * ``nystrom_fused_stats`` — feed the phi tile straight into the
-    one-sweep statistic (margin, gamma, b, Sigma) of ``fused_stats``:
-    X streams HBM->VMEM ONCE and phi NEVER exists as an (N, m) array.
+    one-sweep statistic (margin, aug, b, Sigma) of ``fused_stats``,
+    under ANY augmentation epilogue (``epilogues.py``: EM/MC hinge,
+    SVR's double mixture — MC noise is pre-drawn and streamed in as
+    (N,) operands): X streams HBM->VMEM ONCE and phi NEVER exists as
+    an (N, m) array, for EM and MC, CLS and SVR alike.
 
 Layout conventions (match the solver's padding scheme):
 
@@ -45,6 +48,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from . import epilogues
 from .rbf_gram import rbf_tile
 
 
@@ -88,9 +92,15 @@ def _make_phi_kernel(kind: str, inv_two_sigma_sq: float,
 
 
 def _make_fused_kernel(kind: str, inv_two_sigma_sq: float,
-                       bias_col: int | None, eps: float):
-    def _kernel(x_ref, lm_ref, pj_ref, mask_ref, rho_ref, beta_ref, w_ref,
-                margin_ref, gamma_ref, b_ref, s_ref):
+                       bias_col: int | None, epilogue: str, eps: float,
+                       eps_ins: float, n_noise: int, n_aug: int):
+    def _kernel(*refs):
+        x_ref, lm_ref, pj_ref, mask_ref, rho_ref, beta_ref, w_ref = refs[:7]
+        noise_refs = refs[7:7 + n_noise]
+        outs = refs[7 + n_noise:]
+        margin_ref, aug_refs = outs[0], outs[1:1 + n_aug]
+        b_ref, s_ref = outs[-2], outs[-1]
+
         maskv = mask_ref[...].astype(jnp.float32)            # (bn, 1)
         phi = _phi_tile(
             x_ref[...].astype(jnp.float32),
@@ -101,15 +111,17 @@ def _make_fused_kernel(kind: str, inv_two_sigma_sq: float,
         rho = rho_ref[...].astype(jnp.float32)               # (bn, 1)
         beta = beta_ref[...].astype(jnp.float32)             # (bn, 1)
         wv = w_ref[...].astype(jnp.float32)                  # (Wp, 1)
+        noise = tuple(r[...].astype(jnp.float32) for r in noise_refs)
 
         # From here this is exactly fused_stats' tile body with X := phi.
         margin = jax.lax.dot_general(
             phi, wv, dimension_numbers=(((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
         margin_ref[...] = margin
-        gamma = jnp.maximum(jnp.abs(rho - margin), eps)
-        gamma_ref[...] = gamma
-        coef = rho / gamma + beta
+        aug, weight, coef = epilogues.apply_epilogue(
+            epilogue, margin, rho, beta, noise, eps, eps_ins)
+        for ref, a in zip(aug_refs, aug):
+            ref[...] = a
 
         @pl.when(pl.program_id(0) == 0)
         def _init():
@@ -119,7 +131,7 @@ def _make_fused_kernel(kind: str, inv_two_sigma_sq: float,
         b_ref[...] += jax.lax.dot_general(                   # phi^T coef
             phi, coef, dimension_numbers=(((0,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
-        pw = phi * (maskv / gamma)                           # weighted rows
+        pw = phi * (maskv * weight)                          # weighted rows
         s_ref[...] += jax.lax.dot_general(                   # phi^T D phi
             pw, phi, dimension_numbers=(((0,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
@@ -179,59 +191,77 @@ def nystrom_phi(X: jnp.ndarray, landmarks: jnp.ndarray, proj: jnp.ndarray,
 
 
 @functools.partial(jax.jit, static_argnames=("sigma", "kind", "add_bias",
-                                             "eps", "block_n", "interpret"))
+                                             "epilogue", "eps", "eps_ins",
+                                             "block_n", "interpret"))
 def nystrom_fused_stats(X: jnp.ndarray, landmarks: jnp.ndarray,
                         proj: jnp.ndarray, rho: jnp.ndarray,
                         beta: jnp.ndarray, wvec: jnp.ndarray,
-                        mask: jnp.ndarray | None = None, *,
+                        mask: jnp.ndarray | None = None,
+                        noise: tuple | None = None, *,
                         sigma: float = 1.0, kind: str = "rbf",
-                        add_bias: bool = False, eps: float = 1e-6,
+                        add_bias: bool = False,
+                        epilogue: str = "em_hinge", eps: float = 1e-6,
+                        eps_ins: float = 0.0,
                         block_n: int = 256, interpret: bool = False):
-    """The whole phi-space EM statistic in ONE X pass.
+    """The whole phi-space iteration statistic in ONE X pass.
 
-    Returns (margin (N,), gamma (N,), b (M,), S (M, M)), all f32 —
-    exactly ``fused_stats`` evaluated on phi = nystrom_phi(X, ...),
-    except phi never leaves VMEM. Padded/masked rows contribute zero to
-    b and S (phi row zeroed, rho = beta = 0 makes coef zero, and the
-    Sigma weight is mask/gamma).
+    Returns (margin (N,), *aug (N,) each, b (M,), S (M, M)), all f32 —
+    exactly ``fused_stats`` (same epilogue family: EM/MC hinge, SVR's
+    double mixture) evaluated on phi = nystrom_phi(X, ...), except phi
+    never leaves VMEM. MC epilogues consume pre-drawn per-row ``noise``
+    operands like ``fused_stats`` does. Padded/masked rows contribute
+    zero to b and S (phi row zeroed, and the Sigma weight is
+    mask-scaled; the hinge coef is additionally zero at rho = beta = 0).
     """
     N, D = X.shape
+    n_noise = epilogues.noise_arity(epilogue)
+    n_aug = epilogues.aug_arity(epilogue)
+    noise = tuple(noise) if noise is not None else ()
+    assert len(noise) == n_noise, (
+        f"epilogue {epilogue!r} needs {n_noise} noise operands, "
+        f"got {len(noise)}")
     bn = min(block_n, _round_up(N, 8))
     X, landmarks, proj, mask, Np, Wp, M = _pad_operands(
         X, landmarks, proj, mask, add_bias, bn)
     rho = jnp.pad(rho.astype(jnp.float32), (0, Np - N))
     beta = jnp.pad(beta.astype(jnp.float32), (0, Np - N))
     wvec = jnp.pad(wvec.astype(jnp.float32), (0, Wp - M))
+    noise = tuple(jnp.pad(z.astype(jnp.float32), (0, Np - N))
+                  for z in noise)
 
-    margin, gamma, b, S = pl.pallas_call(
+    row_spec = pl.BlockSpec((bn, 1), lambda n: (n, 0))
+    outs = pl.pallas_call(
         _make_fused_kernel(kind, 1.0 / (2.0 * float(sigma) ** 2),
-                           M - 1 if add_bias else None, float(eps)),
+                           M - 1 if add_bias else None, epilogue,
+                           float(eps), float(eps_ins), n_noise, n_aug),
         grid=(Np // bn,),
         in_specs=[
             pl.BlockSpec((bn, X.shape[1]), lambda n: (n, 0)),   # X rows
             pl.BlockSpec(landmarks.shape, lambda n: (0, 0)),    # strip
             pl.BlockSpec(proj.shape, lambda n: (0, 0)),         # K_mm^-1/2
-            pl.BlockSpec((bn, 1), lambda n: (n, 0)),            # mask
-            pl.BlockSpec((bn, 1), lambda n: (n, 0)),            # rho
-            pl.BlockSpec((bn, 1), lambda n: (n, 0)),            # beta
+            row_spec,                                           # mask
+            row_spec,                                           # rho
+            row_spec,                                           # beta
             pl.BlockSpec((Wp, 1), lambda n: (0, 0)),            # w
-        ],
-        out_specs=[
-            pl.BlockSpec((bn, 1), lambda n: (n, 0)),            # margin
-            pl.BlockSpec((bn, 1), lambda n: (n, 0)),            # gamma
+        ] + [row_spec] * n_noise,                               # noise
+        out_specs=[row_spec]                                    # margin
+        + [row_spec] * n_aug                                    # gamma(,omega)
+        + [
             pl.BlockSpec((Wp, 1), lambda n: (0, 0)),            # b (revisit)
             pl.BlockSpec((Wp, Wp), lambda n: (0, 0)),           # S (revisit)
         ],
-        out_shape=[
-            jax.ShapeDtypeStruct((Np, 1), jnp.float32),
-            jax.ShapeDtypeStruct((Np, 1), jnp.float32),
+        out_shape=[jax.ShapeDtypeStruct((Np, 1), jnp.float32)]
+        * (1 + n_aug)
+        + [
             jax.ShapeDtypeStruct((Wp, 1), jnp.float32),
             jax.ShapeDtypeStruct((Wp, Wp), jnp.float32),
         ],
         interpret=interpret,
     )(X, landmarks, proj, mask.reshape(Np, 1), rho.reshape(Np, 1),
-      beta.reshape(Np, 1), wvec.reshape(Wp, 1))
-    return margin[:N, 0], gamma[:N, 0], b[:M, 0], S[:M, :M]
+      beta.reshape(Np, 1), wvec.reshape(Wp, 1),
+      *(z.reshape(Np, 1) for z in noise))
+    per_row, (b, S) = outs[:1 + n_aug], outs[-2:]
+    return (*(v[:N, 0] for v in per_row), b[:M, 0], S[:M, :M])
 
 
 def _round_up(x: int, m: int) -> int:

@@ -15,6 +15,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from . import epilogues
 from . import fused_estep as _fused_estep
 from . import fused_stats as _fused_stats
 from . import nystrom_phi as _nystrom_phi
@@ -35,6 +36,18 @@ def _resolve(backend: str | None) -> str:
     if backend not in VALID_BACKENDS:
         raise ValueError(f"backend must be one of {VALID_BACKENDS}, got {backend!r}")
     return backend
+
+
+def _check_noise(epilogue: str, noise: tuple | None) -> None:
+    """Validate the pre-drawn noise arity HERE, once, so every route —
+    ref, kernel, K-tiled and VMEM fallbacks — fails with the same
+    message instead of an opaque unpack error inside the epilogue."""
+    want = epilogues.noise_arity(epilogue)
+    got = 0 if noise is None else len(noise)
+    if got != want:
+        raise ValueError(
+            f"epilogue {epilogue!r} needs {want} pre-drawn noise "
+            f"operands (augment.draw_ig_noise), got {got}")
 
 
 def weighted_gram(X: jnp.ndarray, w: jnp.ndarray, *,
@@ -61,30 +74,55 @@ def syrk_tri(X: jnp.ndarray, w: jnp.ndarray, *,
 # past this K the tile no longer fits (~16 MB VMEM with the X tile) and
 # the kernel must not be attempted (DESIGN.md §Perf). Above it, the
 # K-tiled two-pass pair is the correct regime anyway (compute-bound).
+# The augmentation epilogues only add per-row (bn, 1) vectors (noise,
+# gamma/omega) — <= 6 * bn * 4 B, noise next to the K^2 accumulator —
+# so one cap serves every epilogue.
 FUSED_STATS_MAX_K = 1536
 
 
 def fused_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
-                wvec: jnp.ndarray, wmask: jnp.ndarray | None = None, *,
-                eps: float = 1e-6, backend: str | None = None, **kw):
-    """(margin, gamma, b, S): the whole EM iteration statistic in one
-    X pass (single HBM stream instead of estep + gram).
+                wvec: jnp.ndarray, wmask: jnp.ndarray | None = None,
+                noise: tuple | None = None, *,
+                epilogue: str = "em_hinge", eps: float = 1e-6,
+                eps_ins: float = 0.0, backend: str | None = None, **kw):
+    """(margin, *aug, b, S): the whole iteration statistic in one X
+    pass (single HBM stream instead of the split margin/b/Sigma
+    passes), under any augmentation ``epilogue`` (``epilogues.py``):
+    em_hinge/mc_hinge return (margin, gamma, b, S); the SVR double
+    mixture returns (margin, gamma, omega, b, S). MC flavors consume
+    pre-drawn per-row ``noise`` arrays (``augment.draw_ig_noise``).
 
     For K > FUSED_STATS_MAX_K the Pallas flavors fall back to the
-    K-tiled split pair (fused_estep + syrk_tri) rather than blow the
-    VMEM budget — callers get the same outputs either way."""
+    K-tiled split pair (E-step + syrk_tri) rather than blow the VMEM
+    budget — callers get the same outputs either way."""
     backend = _resolve(backend)
+    _check_noise(epilogue, noise)
     if backend == "ref":
-        return ref.fused_stats(X, rho, beta, wvec, wmask, eps)
+        return ref.fused_stats(X, rho, beta, wvec, wmask, eps,
+                               epilogue=epilogue, noise=noise,
+                               eps_ins=eps_ins)
     if X.shape[1] > FUSED_STATS_MAX_K:
         kw.pop("block_n", None)
-        margin, gamma, b = fused_estep(X, rho, beta, wvec, eps=eps,
-                                       backend=backend)
-        w = (1.0 / gamma) if wmask is None else wmask / gamma
-        return margin, gamma, b, syrk_tri(X, w, backend=backend)
+        if epilogue == "em_hinge":
+            margin, gamma, b = fused_estep(X, rho, beta, wvec, eps=eps,
+                                           backend=backend)
+            w = (1.0 / gamma) if wmask is None else wmask / gamma
+            return margin, gamma, b, syrk_tri(X, w, backend=backend)
+        # Generalized split fallback: the O(NK) E-step (margin, aug,
+        # coef) runs as plain XLA; only the O(NK^2) Sigma goes through
+        # the K-tiled SYRK kernel. 3 X streams — the compute-bound
+        # regime where stream count stops being the bound anyway.
+        Xf = X.astype(jnp.float32)
+        margin = Xf @ wvec.astype(jnp.float32)
+        aug, weight, coef = epilogues.apply_epilogue(
+            epilogue, margin, rho.astype(jnp.float32),
+            beta.astype(jnp.float32), noise, eps, eps_ins)
+        w = weight if wmask is None else wmask.astype(jnp.float32) * weight
+        b = Xf.T @ coef
+        return (margin, *aug, b, syrk_tri(X, w, backend=backend))
     return _fused_stats.fused_stats(
-        X, rho, beta, wvec, wmask, eps=eps,
-        interpret=(backend == "interpret"), **kw)
+        X, rho, beta, wvec, wmask, noise, epilogue=epilogue, eps=eps,
+        eps_ins=eps_ins, interpret=(backend == "interpret"), **kw)
 
 
 def fused_estep(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
@@ -124,10 +162,13 @@ def _ru(x: int, m: int) -> int:
 
 
 def _nystrom_vmem_words(n_landmarks: int, n_features: int, add_bias: bool,
-                        block_n: int, with_stats: bool) -> int:
+                        block_n: int, with_stats: bool,
+                        epilogue: str = "em_hinge") -> int:
     """fp32 words resident per grid step of the Nystrom kernels
     (DESIGN.md §Perf/Nystrom accounting). ``with_stats`` adds the
-    Sigma/b accumulators only the fused flavor allocates."""
+    Sigma/b accumulators only the fused flavor allocates; the epilogue
+    adds its pre-drawn noise operands and extra aug outputs (per-row
+    vectors — noise next to the phi tile, but accounted)."""
     Lp = _ru(n_landmarks, 128)
     Dp = _ru(n_features, 128)
     Wp = _ru(n_landmarks + int(add_bias), 128)
@@ -137,19 +178,25 @@ def _nystrom_vmem_words(n_landmarks: int, n_features: int, add_bias: bool,
              + block_n * Lp      # cross-Gram tile
              + block_n * Wp)     # phi tile
     if with_stats:
+        per_row = (4                               # mask/rho/beta/margin
+                   + epilogues.noise_arity(epilogue)
+                   + epilogues.aug_arity(epilogue))
         words += (Wp * Wp        # Sigma accumulator
-                  + Wp + 4 * block_n)  # w/b + per-row vectors
+                  + Wp + per_row * block_n)  # w/b + per-row vectors
     return words
 
 
 def nystrom_fused_fits(n_landmarks: int, n_features: int,
-                       add_bias: bool = True, block_n: int = 256) -> bool:
+                       add_bias: bool = True, block_n: int = 256,
+                       epilogue: str = "em_hinge") -> bool:
     """Whether the one-pass featurize-and-accumulate kernel's working
-    set fits the VMEM budget."""
+    set fits the VMEM budget (epilogue-aware: MC/SVR flavors carry up
+    to 6 extra per-row vectors)."""
     if n_landmarks > NYSTROM_FUSED_MAX_M:
         return False
     return 4 * _nystrom_vmem_words(n_landmarks, n_features, add_bias,
-                                   block_n, True) <= _NYSTROM_VMEM_BUDGET
+                                   block_n, True,
+                                   epilogue) <= _NYSTROM_VMEM_BUDGET
 
 
 def _nystrom_phi_fits(n_landmarks: int, n_features: int,
@@ -187,31 +234,40 @@ def nystrom_phi(X: jnp.ndarray, landmarks: jnp.ndarray, proj: jnp.ndarray,
 def nystrom_fused_stats(X: jnp.ndarray, landmarks: jnp.ndarray,
                         proj: jnp.ndarray, rho: jnp.ndarray,
                         beta: jnp.ndarray, wvec: jnp.ndarray,
-                        mask: jnp.ndarray | None = None, *,
+                        mask: jnp.ndarray | None = None,
+                        noise: tuple | None = None, *,
                         sigma: float = 1.0, kind: str = "rbf",
-                        add_bias: bool = False, eps: float = 1e-6,
+                        add_bias: bool = False,
+                        epilogue: str = "em_hinge", eps: float = 1e-6,
+                        eps_ins: float = 0.0,
                         backend: str | None = None, **kw):
-    """(margin, gamma, b, S): the whole phi-space EM statistic in one
-    X pass — ``fused_stats`` on nystrom_phi(X) with phi never leaving
-    VMEM (so the (N, m) feature matrix never exists in HBM).
+    """(margin, *aug, b, S): the whole phi-space iteration statistic in
+    one X pass — ``fused_stats`` (any augmentation epilogue: EM/MC
+    hinge, SVR's double mixture) on nystrom_phi(X) with phi never
+    leaving VMEM (so the (N, m) feature matrix never exists in HBM).
 
-    When the landmark strip + projection + Sigma accumulator exceed the
-    VMEM budget (``nystrom_fused_fits``), falls back to
-    featurize-then-accumulate: nystrom_phi materializes phi for this
-    row block and fused_stats (K-tiled past its own cap) consumes it —
+    When the landmark strip + projection + Sigma accumulator (+ the
+    epilogue's per-row noise/aug vectors) exceed the VMEM budget
+    (``nystrom_fused_fits``), falls back to featurize-then-accumulate:
+    nystrom_phi materializes phi for this row block and fused_stats
+    (K-tiled past its own cap) consumes it under the same epilogue —
     callers get the same outputs either way."""
     backend = _resolve(backend)
+    _check_noise(epilogue, noise)
     if backend == "ref":
         return ref.nystrom_fused_stats(X, landmarks, proj, rho, beta,
                                        wvec, mask, float(sigma), kind,
-                                       add_bias, eps)
+                                       add_bias, eps, epilogue=epilogue,
+                                       noise=noise, eps_ins=eps_ins)
     if not nystrom_fused_fits(landmarks.shape[0], X.shape[1], add_bias,
-                              kw.get("block_n", 256)):
+                              kw.get("block_n", 256), epilogue):
         phi = nystrom_phi(X, landmarks, proj, mask, sigma=sigma, kind=kind,
                           add_bias=add_bias, backend=backend)
-        return fused_stats(phi, rho, beta, wvec, mask, eps=eps,
+        return fused_stats(phi, rho, beta, wvec, mask, noise,
+                           epilogue=epilogue, eps=eps, eps_ins=eps_ins,
                            backend=backend)
     return _nystrom_phi.nystrom_fused_stats(
-        X, landmarks, proj, rho, beta, wvec, mask, sigma=float(sigma),
-        kind=kind, add_bias=add_bias, eps=eps,
+        X, landmarks, proj, rho, beta, wvec, mask, noise,
+        sigma=float(sigma), kind=kind, add_bias=add_bias,
+        epilogue=epilogue, eps=eps, eps_ins=eps_ins,
         interpret=(backend == "interpret"), **kw)

@@ -7,6 +7,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from . import epilogues
+
 
 def weighted_gram(X: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     """S = X^T diag(w) X  == sum_d w_d x_d x_d^T.
@@ -59,18 +61,29 @@ def syrk_tri(X: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
 
 def fused_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
                 wvec: jnp.ndarray, wmask: jnp.ndarray | None,
-                eps: float):
-    """One-sweep iteration statistic: fused_estep + the Sigma SYRK.
+                eps: float, epilogue: str = "em_hinge",
+                noise: tuple | None = None, eps_ins: float = 0.0):
+    """One-sweep iteration statistic under any augmentation epilogue:
+    margin -> (aug, sigma_weight, coef) -> (b, Sigma) in one logical
+    pass (``kernels/epilogues.py`` holds the epilogue family; MC
+    flavors consume pre-drawn per-row ``noise``).
 
-    S = X^T diag(wmask/gamma) X with gamma from THIS sweep's E-step;
-    wmask defaults to ones (the KRN path passes its row mask).
+    S = X^T diag(wmask * sigma_weight) X with the weights from THIS
+    sweep's epilogue; wmask defaults to ones (the KRN path passes its
+    row mask, the phi-space paths their row-validity mask).
 
     Returns:
-      (margin (N,), gamma (N,), b (K,), S (K, K)), all float32.
+      (margin (N,), *aug (N,) each, b (K,), S (K, K)), all float32 —
+      aug = (gamma,) for the hinge epilogues, (gamma, omega) for SVR.
     """
-    margin, gamma, b = fused_estep(X, rho, beta, wvec, eps)
-    w = (1.0 / gamma) if wmask is None else wmask.astype(jnp.float32) / gamma
-    return margin, gamma, b, weighted_gram(X, w)
+    Xf = X.astype(jnp.float32)
+    margin = Xf @ wvec.astype(jnp.float32)
+    aug, weight, coef = epilogues.apply_epilogue(
+        epilogue, margin, rho.astype(jnp.float32),
+        beta.astype(jnp.float32), noise, eps, eps_ins)
+    w = weight if wmask is None else wmask.astype(jnp.float32) * weight
+    b = Xf.T @ coef
+    return (margin, *aug, b, weighted_gram(X, w))
 
 
 def nystrom_phi(X: jnp.ndarray, landmarks: jnp.ndarray, proj: jnp.ndarray,
@@ -102,14 +115,18 @@ def nystrom_fused_stats(X: jnp.ndarray, landmarks: jnp.ndarray,
                         proj: jnp.ndarray, rho: jnp.ndarray,
                         beta: jnp.ndarray, wvec: jnp.ndarray,
                         mask: jnp.ndarray | None, sigma: float, kind: str,
-                        add_bias: bool, eps: float):
+                        add_bias: bool, eps: float,
+                        epilogue: str = "em_hinge",
+                        noise: tuple | None = None, eps_ins: float = 0.0):
     """Oracle for the featurize-and-accumulate kernel: fused_stats on
-    nystrom_phi, i.e. the whole phi-space EM statistic.
+    nystrom_phi, i.e. the whole phi-space iteration statistic under any
+    augmentation epilogue (EM/MC hinge, SVR's double mixture).
 
-    Returns (margin (N,), gamma (N,), b (M,), S (M, M)), all float32.
+    Returns (margin (N,), *aug (N,) each, b (M,), S (M, M)), all f32.
     """
     phi = nystrom_phi(X, landmarks, proj, mask, sigma, kind, add_bias)
-    return fused_stats(phi, rho, beta, wvec, mask, eps)
+    return fused_stats(phi, rho, beta, wvec, mask, eps,
+                       epilogue=epilogue, noise=noise, eps_ins=eps_ins)
 
 
 def rbf_gram(X1: jnp.ndarray, X2: jnp.ndarray, sigma: float) -> jnp.ndarray:
