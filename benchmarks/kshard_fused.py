@@ -1,0 +1,276 @@
+"""Column-tiled fused statistics: the single-stream 2-D (data x model)
+``k_shard_axis`` path vs the pre-fusion split path (ISSUE 5 acceptance
+benchmark) -> ``BENCH_kshard.json``.
+
+Before the column-windowed kernels, one k_shard iteration ran a SPLIT
+E-step plus a separate column-block matmul:
+
+  split EM:  (margin, gamma, b) = fused_estep   (X stream 1)
+             S_blk = (X * 1/gamma)^T Xcols      (X stream 2, + the
+                                                 sliced Xcols bytes)
+  split MC:  margin = X w                       (stream 1)
+             draws on host (gamma_mc_rowwise)
+             b = X^T coef                       (stream 2)
+             S_blk matmul                       (stream 3, + Xcols)
+  windowed:  one fused kernel, col_window       (stream 1 of 1; the
+             column block accumulates from the in-VMEM X tile)
+
+In the memory-bound regime (K below the roofline crossover, DESIGN.md
+§Perf) stream count IS iteration time, so the windowing is a
+bound-level ~2x (EM) / ~3x (MC). Per (mode, K) the benchmark records
+measured wall-clock for both paths AND the analytic v5e roofline
+terms, with the X-stream counts spelled out.
+
+Gates (asserted, any backend):
+  * roofline memory-time for windowed >= 2x lower than split at every
+    (mode, K) — the ISSUE 5 acceptance bar;
+  * measured wall-clock windowed < split;
+  * parity: the windowed statistic == the full statistic's column
+    slice, and a 2-shard window assembly rebuilds the full Sigma;
+  * MC draw parity: windowed gammas BITWISE equal the rowwise oracle
+    (dispatch path — margin stays full-width under windowing);
+  * EM whole-fit parity <= 1e-4: a hand-rolled fit whose Sigma is
+    assembled from 2 windowed blocks per iteration vs the standard
+    PEMSVM fit.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import PEMSVM, SVMConfig, augment, stats
+from repro.kernels import ops
+
+from .common import append_json, emit
+
+BENCH_JSON = os.environ.get("BENCH_KSHARD_JSON", "BENCH_kshard.json")
+
+PEAK_FLOPS = 197e12     # v5e, matches benchmarks/roofline.py
+HBM_BW = 819e9
+
+
+def _roofline(n: int, k: int, blk: int, mode: str) -> dict:
+    """Analytic per-iteration roofline terms for the k_shard statistic.
+
+    Both paths run identical FLOPs (margin/b O(nk) + the dense
+    (k, blk) block 2*n*k*blk). Bytes: the split path streams X once
+    per pass (2 passes EM — fused_estep then the block matmul — and 3
+    MC) and additionally reads the materialized (n, blk) Xcols slice
+    in the block pass; the windowed kernel streams X ONCE and slices
+    columns in VMEM. Row vectors and the (k, blk) output are charged
+    to both sides."""
+    small = 4.0 * (8 * n + k * blk + 2 * k)
+    flops = 4.0 * n * k + 2.0 * n * k * blk
+    streams = {"split": 2 if mode == "EM" else 3, "windowed": 1}
+    out = {}
+    for name, n_streams in streams.items():
+        byts = n_streams * 4.0 * n * k + small
+        if name == "split":
+            byts += 4.0 * n * blk          # the materialized Xcols read
+        compute_s, memory_s = flops / PEAK_FLOPS, byts / HBM_BW
+        out[name] = {"compute_s": compute_s, "memory_s": memory_s,
+                     "bound_s": max(compute_s, memory_s),
+                     "x_streams": n_streams}
+    return out
+
+
+def _time_best_pair(fn_a, fn_b, repeats: int = 5) -> tuple[float, float]:
+    """Interleaved best-of-N for two competitors, so a CPU-quota dip or
+    scheduler stall hits both paths rather than biasing one (the
+    container's wall-clocks are noisy — .claude/skills/verify)."""
+    fn_a(), fn_b()                          # warm the jit caches
+    best_a = best_b = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn_a()
+        best_a = min(best_a, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fn_b()
+        best_b = min(best_b, time.perf_counter() - t0)
+    return best_a, best_b
+
+
+def _statistic_rows(n: int, ks, backend: str, failures: list) -> list:
+    rng = np.random.default_rng(0)
+    key = jax.random.PRNGKey(1)
+    rows = []
+    for k in ks:
+        blk = k // 2                       # the 2-way model-axis window
+        start = jnp.int32(blk)             # shard 1's block
+        X = jnp.asarray(rng.normal(size=(n, k)).astype(np.float32))
+        y = jnp.asarray(rng.choice([-1.0, 1.0], n).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=k).astype(np.float32))
+        # Parity gates run at w = 0: the hinge residual is then exactly
+        # y = +-1, far from the knee, so the in-kernel IG transform
+        # cannot hit the accept-reject flip channel vs the host oracle
+        # (the same knee-free construction as benchmarks/mc_fused.py —
+        # the gate stays deterministic across backends/jax versions).
+        # Timing uses the realistic random w.
+        w0 = jnp.zeros((k,), jnp.float32)
+        eps = 1e-2
+
+        def split_em(wv=w):
+            gamma_b = ops.fused_estep(X, y, y, wv, eps=eps,
+                                      backend=backend)
+            margin, gamma, b = gamma_b
+            Xcols = jax.lax.dynamic_slice_in_dim(X, start, blk, axis=1)
+            S_blk = (X * (1.0 / gamma)[:, None]).T @ Xcols
+            return [np.asarray(o) for o in (margin, gamma, b, S_blk)]
+
+        def windowed_em(wv=w):
+            return [np.asarray(o) for o in ops.fused_stats(
+                X, y, y, wv, None, None, epilogue="em_hinge", eps=eps,
+                col_window=(start, blk), backend=backend)]
+
+        def split_mc(wv=w):
+            margin = X @ wv
+            gamma = augment.gamma_mc_rowwise(key, y - margin, eps, 0)
+            b = X.T @ (y / gamma + y)
+            Xcols = jax.lax.dynamic_slice_in_dim(X, start, blk, axis=1)
+            S_blk = (X * (1.0 / gamma)[:, None]).T @ Xcols
+            return [np.asarray(o) for o in (margin, gamma, b, S_blk)]
+
+        def windowed_mc(wv=w):
+            noise = augment.draw_ig_noise(key, n, 0)
+            return [np.asarray(o) for o in ops.fused_stats(
+                X, y, y, wv, None, noise, epilogue="mc_hinge", eps=eps,
+                col_window=(start, blk), backend=backend)]
+
+        for mode, split_fn, win_fn in (("EM", split_em, windowed_em),
+                                       ("MC", split_mc, windowed_mc)):
+            # parity gate at w0 (knee-free, see above): windowed
+            # statistic == split statistic (the split path uses the
+            # rowwise oracle draws, so MC agreement IS draw parity at
+            # the statistic level)
+            want, got = split_fn(w0), win_fn(w0)
+            for a, b_, part in zip(got, want,
+                                   ("margin", "gamma", "b", "S_blk")):
+                err = np.abs(a - b_).max() / max(1.0, np.abs(b_).max())
+                if err > 2e-3:
+                    failures.append(
+                        f"K={k} {mode} {part} parity {err:.2e}")
+            t_split, t_win = _time_best_pair(split_fn, win_fn)
+            secs = {"split": t_split, "windowed": t_win}
+            roof = _roofline(n, k, blk, mode)
+            sp, wi = roof["split"], roof["windowed"]
+            mem_ratio = sp["memory_s"] / wi["memory_s"]
+            if mem_ratio < 2.0:
+                failures.append(
+                    f"K={k} {mode}: roofline memory ratio "
+                    f"{mem_ratio:.2f} < 2")
+            # The analytic roofline >= 2x above is THE acceptance gate;
+            # the measured check keeps a 10% noise allowance so a
+            # scheduler stall on a loaded machine cannot fail a correct
+            # build (measured margins are 0.57-0.88 when quiet).
+            if secs["windowed"] >= 1.1 * secs["split"]:
+                failures.append(
+                    f"K={k} {mode}: windowed measured "
+                    f"{secs['windowed']:.4f}s not below split "
+                    f"{secs['split']:.4f}s (+10% allowance)")
+            rows.append({
+                "name": f"kshard_statistic_{mode}_K{k}", "n": n, "k": k,
+                "col_blk": blk, "mode": mode, "backend": backend,
+                "seconds_split": secs["split"],
+                "seconds_windowed": secs["windowed"],
+                "measured_ratio_windowed_over_split": round(
+                    secs["windowed"] / secs["split"], 4),
+                "x_streams": {"split": sp["x_streams"], "windowed": 1},
+                "roofline": {kk: {p: round(q, 9) for p, q in vv.items()}
+                             for kk, vv in roof.items()},
+                "roofline_memory_speedup": round(mem_ratio, 3),
+                "roofline_bound_speedup": round(
+                    sp["bound_s"] / wi["bound_s"], 3),
+            })
+    return rows
+
+
+def _window_assembly_row(n: int, k: int, failures: list) -> dict:
+    """Gate: 2 windowed blocks assemble the full Sigma (the all-gather
+    identity, single-process) and windowed MC draws are BITWISE the
+    rowwise oracle's."""
+    rng = np.random.default_rng(3)
+    X = jnp.asarray(rng.normal(size=(n, k)).astype(np.float32))
+    y = jnp.asarray(rng.choice([-1.0, 1.0], n).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=k).astype(np.float32))
+    key, eps, row0 = jax.random.PRNGKey(9), 1e-6, 17
+    blk = k // 2
+
+    full = ops.fused_stats(X, y, y, w, None, None, epilogue="em_hinge",
+                           eps=eps, backend="ref")
+    blocks = [np.asarray(ops.fused_stats(
+        X, y, y, w, None, None, epilogue="em_hinge", eps=eps,
+        col_window=(jnp.int32(p * blk), blk), backend="ref")[-1])
+        for p in range(2)]
+    S = np.concatenate(blocks, axis=1)
+    asm_err = float(np.abs(S - np.asarray(full[-1])).max()
+                    / np.abs(np.asarray(full[-1])).max())
+    if asm_err > 1e-6:
+        failures.append(f"window assembly != full Sigma ({asm_err:.2e})")
+
+    margin = X @ w
+    g_want = augment.gamma_mc_rowwise(key, y - margin, eps, row0)
+    noise = augment.draw_ig_noise(key, n, row0)
+    out = ops.fused_stats(X, y, y, w, None, noise,
+                          col_window=(jnp.int32(blk), blk),
+                          epilogue="mc_hinge", eps=eps, backend="ref")
+    bitwise = bool(np.array_equal(np.asarray(out[1]), np.asarray(g_want)))
+    if not bitwise:
+        failures.append("windowed MC draws not bitwise vs oracle")
+    return {"name": "window_assembly_and_draw_parity", "n": n, "k": k,
+            "assembly_rel_err": asm_err, "mc_draws_bitwise": bitwise}
+
+
+def _em_fit_row(n: int, k: int, failures: list) -> dict:
+    """Gate: EM whole-fit parity <= 1e-4 — a hand-rolled fit whose
+    Sigma is assembled from 2 windowed blocks per iteration (the
+    single-process image of the 2-D mesh statistic) vs PEMSVM."""
+    rng = np.random.default_rng(4)
+    X = rng.normal(size=(n, k)).astype(np.float32)
+    y = np.where(X @ rng.normal(size=k) > 0, 1.0, -1.0).astype(np.float32)
+    iters = 20
+    model = PEMSVM(SVMConfig(eps=1e-2, max_iters=iters, min_iters=iters,
+                             add_bias=False))
+    ref_w = model.fit(X, y).weights
+
+    Xd, yd = jnp.asarray(X), jnp.asarray(y)
+    blk = k // 2
+    w = jnp.zeros((k,), jnp.float32)
+    for _ in range(iters):
+        parts = [ops.fused_stats(Xd, yd, yd, w, None, None,
+                                 epilogue="em_hinge", eps=1e-2,
+                                 col_window=(jnp.int32(p * blk), blk),
+                                 backend="ref")
+                 for p in range(2)]
+        S = jnp.concatenate([p[-1] for p in parts], axis=1)
+        b = parts[0][-2]
+        _, w = stats.posterior_params(S, b, 1.0, jitter=1e-7)
+    rel = float(np.abs(np.asarray(w) - ref_w).max() / np.abs(ref_w).max())
+    if rel > 1e-4:
+        failures.append(f"EM windowed-assembly fit rel {rel:.2e} > 1e-4")
+    return {"name": "em_windowed_fit_parity", "n": n, "k": k,
+            "iters": iters, "rel_err_vs_pemsvm": rel}
+
+
+def run(full: bool = False, backend: str | None = None):
+    # Statistic-level comparison runs the REAL kernel body (interpret
+    # off TPU); the draw/fit gates use the dispatch default (ref).
+    kernel_backend = backend or (
+        "pallas" if jax.default_backend() == "tpu" else "interpret")
+    n = 16384 if full else 2048
+    failures: list[str] = []
+    rows = _statistic_rows(n, (256, 512), kernel_backend, failures)
+    rows.append(_window_assembly_row(1024, 32, failures))
+    rows.append(_em_fit_row(1024 if not full else 8192, 16, failures))
+    emit(rows, "kshard_fused")
+    append_json(rows, BENCH_JSON)
+    assert not failures, "; ".join(failures)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -13,11 +13,15 @@ Padding convention: invalid rows have X-row == 0 and target == 0, which
 makes their statistics contributions exactly zero; ``mask`` only enters the
 objective.
 
-``k_shard``: beyond-paper optimization (DESIGN.md §Perf) — additionally
-split the Sigma^p *column blocks* over the mesh's model axis, turning the
-paper's 1-D data-parallel statistic into a 2-D (data x model) one. Each
-model shard computes X^T diag(w) X[:, cols]; the blocks are psum'd over
-data axes only and all-gathered over the model axis.
+``k_shard``: beyond-paper optimization (DESIGN.md §Perf/k-shard) —
+additionally split the Sigma^p *column blocks* over the mesh's model
+axis, turning the paper's 1-D data-parallel statistic into a 2-D
+(data x model) one. Each model shard computes X^T diag(w) X[:, cols]
+INSIDE the single-stream fused kernel (the ``col_window`` parameter of
+``ops.fused_stats`` / ``ops.nystrom_fused_stats``, so EM, MC and the
+Nystrom phi path all stay one X stream on the 2-D layout); the blocks
+ride one packed psum over the data axes with b and are all-gathered
+over the model axis (``stats.reduce_kshard``).
 """
 from __future__ import annotations
 
@@ -66,7 +70,8 @@ def accumulate_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
                      eps: float, backend: str | None,
                      row0: jnp.ndarray | int = 0,
                      phi=None, phi_spec: PhiSpec | None = None,
-                     mask: jnp.ndarray | None = None):
+                     mask: jnp.ndarray | None = None,
+                     col_window: tuple | None = None):
     """(margin, gamma, Sigma^p, mu^p) for the generic hinge over one row
     block — THE chunk-callable statistic every driver shares: the
     in-memory drivers call it on the whole (padded) set, the mesh SPMD
@@ -97,6 +102,13 @@ def accumulate_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
     — the (N, m) phi matrix never exists, for EM *and* MC). ``mask``
     is required in phi-space — a zero X row is NOT a zero phi row, so
     padding must be masked rather than relying on the zero-row layout.
+
+    ``col_window = (start, blk)`` narrows Sigma to its column block —
+    the 2-D (data x model) ``k_shard_axis`` statistic (DESIGN.md
+    §Perf/k-shard). The window composes with BOTH modes and with the
+    phi path (where it selects PHI columns), so the single-X-stream
+    property carries to the 2-D layout unchanged; margin/gamma/b stay
+    full width.
     """
     if mode == "EM":
         epilogue, noise = "em_hinge", None
@@ -111,11 +123,11 @@ def accumulate_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
             X, landmarks, proj, rho, beta, w, mask, noise,
             sigma=phi_spec.sigma, kind=phi_spec.kind,
             add_bias=phi_spec.add_bias, epilogue=epilogue, eps=eps,
-            backend=backend)
+            col_window=col_window, backend=backend)
     else:
         margin, gamma, b, S = ops.fused_stats(
             X, rho, beta, w, None, noise, epilogue=epilogue, eps=eps,
-            backend=backend)
+            col_window=col_window, backend=backend)
     return margin, gamma, S, b
 
 
@@ -123,23 +135,28 @@ def accumulate_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
 local_stats = accumulate_stats
 
 
-def _k_block(S_or_X, axis_name):
-    """Column block bounds of a K-dim array for this model-axis shard.
+def _k_block(width: int, axis_name: str):
+    """(start, blk) Sigma column window of the width-K statistic for
+    this model-axis shard — ``blk`` is static, ``start`` traced
+    (``axis_index * blk``); the pair feeds ``accumulate_stats``'s
+    ``col_window`` directly. ``width`` is the STATISTIC dimension:
+    X columns for LIN, the phi width (``w.shape[0]``) in phi-space.
 
-    K must divide the model-axis size: a truncating ``K // n`` here would
-    silently drop the trailing ``K % n`` columns of Sigma (the all-gather
-    below would rebuild a (K, n*(K//n)) matrix) and corrupt the posterior.
+    The model-axis size must divide K: a truncating ``K // n`` here
+    would silently drop the trailing ``K % n`` columns of Sigma (the
+    all-gather would rebuild a (K, n*(K//n)) matrix) and corrupt the
+    posterior.
     """
-    K = S_or_X.shape[-1]
-    p = jax.lax.axis_index(axis_name)
     n = compat.axis_size(axis_name)
-    if K % n != 0:
+    if width % n != 0:
         raise ValueError(
             f"k_shard_axis {axis_name!r} of size {n} does not divide "
-            f"K={K}; pad the feature dimension to a multiple of {n} "
-            f"(e.g. with zero columns) or drop k_shard_axis.")
-    blk = K // n
-    return p * blk, blk
+            f"K={width}; pad the feature dimension to a multiple of "
+            f"{n} with explicit zero columns "
+            f"(data.pipeline.pad_features_to / SVMConfig.pad_features) "
+            f"or drop k_shard_axis.")
+    blk = width // n
+    return jax.lax.axis_index(axis_name) * blk, blk
 
 
 @partial(jax.jit, static_argnames=("mode", "lam", "eps", "jitter", "axes",
@@ -159,38 +176,22 @@ def cls_step(data: SVMData, w: jnp.ndarray, key: jax.Array, *,
     # the chain identical to the single-device and streaming drivers.
     row0 = stats.shard_row_offset(X.shape[0], axes)
 
-    if phi_spec is not None and k_shard_axis is not None:
-        raise NotImplementedError(
-            "k_shard_axis does not compose with the Nystrom phi path "
-            "yet: the 2-D Sigma column split would need a column-tiled "
-            "featurize kernel")
+    # 2-D (data x model) statistic: this model-shard computes only its
+    # Sigma column block — INSIDE the same single-stream fused kernel
+    # (col_window), for EM and MC, X- and phi-space alike; the packed
+    # psum + block all-gather rebuild the full Sigma (stats.reduce_kshard).
+    col_window = (_k_block(w.shape[0], k_shard_axis)
+                  if k_shard_axis is not None else None)
+    margin, gamma, S, b = accumulate_stats(
+        X, y, y, w, mode=mode, key=key, eps=eps, backend=backend,
+        row0=row0, phi=phi, phi_spec=phi_spec, mask=mask,
+        col_window=col_window)
     if k_shard_axis is None:
-        margin, gamma, S, b = accumulate_stats(
-            X, y, y, w, mode=mode, key=key, eps=eps, backend=backend,
-            row0=row0, phi=phi, phi_spec=phi_spec, mask=mask)
         S, b = stats.reduce_stats(S, b, axes, triangle=triangle,
                                   reduce_dtype=reduce_dtype)
     else:
-        # 2-D statistic: this model-shard computes only a column block of
-        # Sigma^p, psums it over data axes, then all-gathers blocks.
-        if mode == "EM":
-            margin, gamma, b = ops.fused_estep(X, y, y, w, eps=eps,
-                                               backend=backend)
-        else:
-            margin = X.astype(jnp.float32) @ w.astype(jnp.float32)
-            gamma = augment.gamma_mc_rowwise(key, y - margin, eps, row0)
-            # Cast BEFORE the arithmetic, matching accumulate_stats'
-            # rho/beta handling: a wider target dtype (f64 under x64)
-            # would otherwise silently upcast b and the whole posterior
-            # solve (regression: tests/test_mc_fused.py).
-            yf = y.astype(jnp.float32)
-            b = X.astype(jnp.float32).T @ (yf / gamma + yf)
-        start, blk = _k_block(X, k_shard_axis)
-        Xcols = jax.lax.dynamic_slice_in_dim(X, start, blk, axis=1)
-        S_blk = (X.astype(jnp.float32) * (1.0 / gamma)[:, None]).T @ Xcols
-        S_blk = stats.preduce(S_blk, axes)          # (K, K/n) over data axes
-        b = stats.preduce(b, axes)
-        S = jax.lax.all_gather(S_blk, k_shard_axis, axis=1, tiled=True)
+        S, b = stats.reduce_kshard(S, b, axes, k_shard_axis,
+                                   reduce_dtype=reduce_dtype)
 
     L, mu = stats.posterior_params(S, b, lam, jitter=jitter)
     w_new = mu if mode == "EM" else stats.draw_weight(key, L, mu)

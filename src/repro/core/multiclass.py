@@ -41,7 +41,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ops
 from . import objective, stats
-from .linear import PhiSpec, SVMData, accumulate_stats
+from .linear import PhiSpec, SVMData, _k_block, accumulate_stats
 
 _NEG = -1e30
 
@@ -124,23 +124,30 @@ def mlt_chunk_obj(chunk: SVMData, W: jnp.ndarray, phi=None,
 
 @partial(jax.jit, static_argnames=("num_classes", "mode", "lam", "eps",
                                    "jitter", "axes", "triangle", "backend",
-                                   "reduce_dtype", "phi_spec"))
+                                   "k_shard_axis", "reduce_dtype",
+                                   "phi_spec"))
 def mlt_step(data: SVMData, W: jnp.ndarray, key: jax.Array, *,
              num_classes: int, mode: str = "EM", lam: float = 1.0,
              eps: float = 1e-6, jitter: float = 1e-6,
              axes: Sequence[str] = (), triangle: bool = True,
              backend: str | None = None,
+             k_shard_axis: str | None = None,
              reduce_dtype: str | None = None,
              phi=None, phi_spec: PhiSpec | None = None):
     """One outer MLT iteration = one block sweep over all M classes.
 
-    W: (M, K). Returns (W_new, aux dict).
+    W: (M, K). Returns (W_new, aux dict). ``k_shard_axis`` switches
+    every class conditional to the 2-D (data x model) column-windowed
+    statistic (one window per shard, shared by all M passes — the
+    class sweep stays M single-stream fused passes).
     """
     X, labels, mask = data
     X = _maybe_featurize(X, mask, phi, phi_spec, backend)
     M = num_classes
     Xf = X.astype(jnp.float32)
     row0 = stats.shard_row_offset(X.shape[0], axes)
+    col_window = (_k_block(W.shape[1], k_shard_axis)
+                  if k_shard_axis is not None else None)
 
     F0 = Xf @ W.T.astype(jnp.float32)                    # (N, M)
 
@@ -151,9 +158,13 @@ def mlt_step(data: SVMData, W: jnp.ndarray, key: jax.Array, *,
         _, gamma, S, b = accumulate_stats(
             X, rho, beta, W[y], mode=mode,
             key=jax.random.fold_in(key, y), eps=eps, backend=backend,
-            row0=row0)
-        S, b = stats.reduce_stats(S, b, axes, triangle=triangle,
-                                  reduce_dtype=reduce_dtype)
+            row0=row0, col_window=col_window)
+        if k_shard_axis is None:
+            S, b = stats.reduce_stats(S, b, axes, triangle=triangle,
+                                      reduce_dtype=reduce_dtype)
+        else:
+            S, b = stats.reduce_kshard(S, b, axes, k_shard_axis,
+                                       reduce_dtype=reduce_dtype)
         L, mu = stats.posterior_params(S, b, lam, jitter=jitter)
         if mode == "EM":
             w_new = mu

@@ -67,6 +67,7 @@ class SVMConfig:
     add_bias: bool = True
     seed: int = 0
     k_shard_axis: str | None = None  # beyond-paper 2-D Sigma statistic
+    pad_features: int | None = None  # zero-pad LIN width to a multiple
     phi_spec: PhiSpec | None = None  # Nystrom phi-space mode (NystromSVM)
 
     def __post_init__(self):
@@ -75,6 +76,12 @@ class SVMConfig:
         assert self.task in TASKS, self.task
         assert self.driver in ("scan", "loop", "stream"), self.driver
         assert self.scan_chunk >= 1, self.scan_chunk
+        # pad_features targets the LIN X-space statistic width (the
+        # k_shard divisibility helper); phi-space width is the landmark
+        # count + bias, which the user picks directly.
+        assert self.pad_features is None or (
+            self.pad_features >= 1 and self.phi_spec is None
+            and self.formulation == "LIN"), self.pad_features
         assert self.chunk_rows >= 1, self.chunk_rows
         assert self.prefetch >= 1, self.prefetch  # residency = prefetch+2
         # KRN x {SVR, MLT, stream} is valid CONFIGURATION now: NystromSVM
@@ -146,11 +153,13 @@ def _build_step_fn(cfg: SVMConfig, mesh: Mesh | None,
             def step(data, prior, state, key):
                 return svr.svr_step(data, state, key,
                                     eps_ins=cfg.eps_ins, phi=prior,
+                                    k_shard_axis=cfg.k_shard_axis,
                                     phi_spec=cfg.phi_spec, **common)
         else:
             def step(data, prior, state, key):
                 return multiclass.mlt_step(data, state, key,
                                            num_classes=cfg.num_classes,
+                                           k_shard_axis=cfg.k_shard_axis,
                                            phi=prior,
                                            phi_spec=cfg.phi_spec,
                                            **common)
@@ -162,10 +171,12 @@ def _build_step_fn(cfg: SVMConfig, mesh: Mesh | None,
     elif cfg.task == "SVR":
         def step(data, state, key):
             return svr.svr_step(data, state, key,
+                                k_shard_axis=cfg.k_shard_axis,
                                 eps_ins=cfg.eps_ins, **common)
     else:
         def step(data, state, key):
             return multiclass.mlt_step(data, state, key,
+                                       k_shard_axis=cfg.k_shard_axis,
                                        num_classes=cfg.num_classes,
                                        **common)
 
@@ -342,6 +353,13 @@ class PEMSVM:
         y = np.asarray(y)
         if cfg.add_bias and cfg.formulation == "LIN":
             X = np.concatenate([X, np.ones((X.shape[0], 1), np.float32)], 1)
+        if cfg.pad_features:
+            # Explicit zero-column padding of the (post-bias) statistic
+            # width — the supported route to a k_shard-divisible K
+            # (padded columns carry zero statistics; the ridge pins
+            # their weights to 0, so predictions are unchanged).
+            from repro.data.pipeline import pad_features_to
+            X = pad_features_to(X, cfg.pad_features)
         N = X.shape[0]
 
         if cfg.driver == "stream":
@@ -389,6 +407,9 @@ class PEMSVM:
                 "file (world=1) or use a resident driver on a mesh")
         K = (self._phi_width() if cfg.phi_spec is not None
              else n_features + (1 if cfg.add_bias else 0))
+        if cfg.pad_features:
+            from repro.data.pipeline import pad_features_to
+            K = K + (-K) % cfg.pad_features
 
         def make_chunks():
             for Xc, yc, mc in iter_libsvm(path, cfg.chunk_rows,
@@ -397,6 +418,8 @@ class PEMSVM:
                 if cfg.add_bias:
                     # bias column = mask: padded rows keep all-zero X.
                     Xc = np.concatenate([Xc, mc[:, None]], axis=1)
+                if cfg.pad_features:
+                    Xc = pad_features_to(Xc, cfg.pad_features)
                 yield SVMData(Xc, self._stream_target(yc, mc), mc)
 
         return self._fit_stream(make_chunks, K)
@@ -765,6 +788,9 @@ class PEMSVM:
                 add_bias=cfg.phi_spec.add_bias, backend=cfg.backend)
         elif cfg.add_bias:
             X = np.concatenate([X, np.ones((X.shape[0], 1), np.float32)], 1)
+        if cfg.pad_features:
+            from repro.data.pipeline import pad_features_to
+            X = pad_features_to(np.asarray(X), cfg.pad_features)
         if cfg.task == "MLT":
             return np.asarray(jnp.asarray(X) @ w.T)
         return np.asarray(linear.decision_function(w, jnp.asarray(X)))

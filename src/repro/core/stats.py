@@ -107,6 +107,42 @@ def reduce_stats(S: jnp.ndarray, b: jnp.ndarray,
     return triangle_unpack(fused[: K * (K + 1) // 2], K), fused[K * (K + 1) // 2:]
 
 
+def reduce_kshard(S_blk: jnp.ndarray, b: jnp.ndarray,
+                  axes: Sequence[str] | None, k_shard_axis: str,
+                  reduce_dtype: str | None = None
+                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Reduce the 2-D (data x model) statistic: ONE packed psum of this
+    model-shard's (K, K/n) Sigma column block concatenated with b over
+    the data axes (mirroring ``reduce_stats``'s triangle+mu packing —
+    one collective launch instead of the former separate S_blk and b
+    psums), then an all-gather of the column blocks over the model axis
+    rebuilding the full (K, K) Sigma.
+
+    The block is an off-diagonal rectangle, so there is no triangle to
+    pack — the payload per device is already K*K/n + K, a factor n
+    below the 1-D dense reduce (and 2/n below the triangle-packed one
+    for n >= 2: the 2-D layout's collective win, DESIGN.md
+    §Perf/k-shard). ``reduce_dtype`` compresses the psum payload like
+    ``reduce_stats`` (same bf16 clamp caveat); the all-gather stays
+    fp32 — it is 1/n of the psum bytes and rebuilds the matrix the
+    replicated solve factorizes.
+    """
+    K, blk = S_blk.shape
+
+    def maybe_cast(x):
+        return x.astype(reduce_dtype) if reduce_dtype else x
+
+    def uncast(x):
+        return x.astype(jnp.float32) if reduce_dtype else x
+
+    fused = jnp.concatenate([S_blk.reshape(-1), b])
+    fused = uncast(preduce(maybe_cast(fused), axes))
+    S_blk = fused[: K * blk].reshape(K, blk)
+    b = fused[K * blk:]
+    S = jax.lax.all_gather(S_blk, k_shard_axis, axis=1, tiled=True)
+    return S, b
+
+
 def posterior_params(S: jnp.ndarray, b: jnp.ndarray, lam: float,
                      prior_precision: jnp.ndarray | None = None,
                      jitter: float = 0.0):

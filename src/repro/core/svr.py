@@ -28,7 +28,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ops
 from . import augment, objective, stats
-from .linear import PhiSpec, SVMData
+from .linear import PhiSpec, SVMData, _k_block
 
 
 def svr_local_stats(X: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray, *,
@@ -36,7 +36,8 @@ def svr_local_stats(X: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray, *,
                     eps_ins: float, backend: str | None,
                     row0: jnp.ndarray | int = 0,
                     phi=None, phi_spec: PhiSpec | None = None,
-                    mask: jnp.ndarray | None = None):
+                    mask: jnp.ndarray | None = None,
+                    col_window: tuple | None = None):
     """(pred, gamma, omega, Sigma^p, mu^p) over one row block.
 
     BOTH mixtures now run as a ``fused_stats`` epilogue (``em_svr`` /
@@ -55,7 +56,11 @@ def svr_local_stats(X: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray, *,
     ``ops.nystrom_fused_stats`` under the same SVR epilogues: the block
     featurizes in VMEM and no phi block is materialized, for EM and MC
     alike; ``mask`` zeroes phi rows (a zero X row is not a zero phi
-    row) and scales the Sigma weights."""
+    row) and scales the Sigma weights.
+
+    ``col_window`` narrows Sigma to this model-shard's column block
+    (the 2-D ``k_shard_axis`` statistic), composing with both modes
+    and the phi path — see ``linear.accumulate_stats``."""
     epilogue = "em_svr" if mode == "EM" else "mc_svr"
     noise = None
     if mode == "MC":
@@ -72,11 +77,11 @@ def svr_local_stats(X: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray, *,
             X, landmarks, proj, y, beta0, w, mask, noise,
             sigma=phi_spec.sigma, kind=phi_spec.kind,
             add_bias=phi_spec.add_bias, epilogue=epilogue, eps=eps,
-            eps_ins=eps_ins, backend=backend)
+            eps_ins=eps_ins, col_window=col_window, backend=backend)
     else:
         pred, gamma, omega, b, S = ops.fused_stats(
             X, y, beta0, w, None, noise, epilogue=epilogue, eps=eps,
-            eps_ins=eps_ins, backend=backend)
+            eps_ins=eps_ins, col_window=col_window, backend=backend)
     return pred, gamma, omega, S, b
 
 
@@ -102,23 +107,32 @@ def svr_chunk_stats(chunk: SVMData, w: jnp.ndarray, key: jax.Array,
 
 @partial(jax.jit, static_argnames=("mode", "lam", "eps", "eps_ins", "jitter",
                                    "axes", "triangle", "backend",
-                                   "reduce_dtype", "phi_spec"))
+                                   "k_shard_axis", "reduce_dtype",
+                                   "phi_spec"))
 def svr_step(data: SVMData, w: jnp.ndarray, key: jax.Array, *,
              mode: str = "EM", lam: float = 1.0, eps: float = 1e-6,
              eps_ins: float = 1e-3, jitter: float = 1e-6,
              axes: Sequence[str] = (), triangle: bool = True,
              backend: str | None = None,
+             k_shard_axis: str | None = None,
              reduce_dtype: str | None = None,
              phi=None, phi_spec: PhiSpec | None = None):
     """One LIN-*-SVR iteration. Returns (w_new, aux dict)."""
     X, y, mask = data
     row0 = stats.shard_row_offset(X.shape[0], axes)
 
+    col_window = (_k_block(w.shape[0], k_shard_axis)
+                  if k_shard_axis is not None else None)
     pred, gamma, omega, S, b = svr_local_stats(
         X, y, w, mode=mode, key=key, eps=eps, eps_ins=eps_ins,
-        backend=backend, row0=row0, phi=phi, phi_spec=phi_spec, mask=mask)
-    S, b = stats.reduce_stats(S, b, axes, triangle=triangle,
-                              reduce_dtype=reduce_dtype)
+        backend=backend, row0=row0, phi=phi, phi_spec=phi_spec, mask=mask,
+        col_window=col_window)
+    if k_shard_axis is None:
+        S, b = stats.reduce_stats(S, b, axes, triangle=triangle,
+                                  reduce_dtype=reduce_dtype)
+    else:
+        S, b = stats.reduce_kshard(S, b, axes, k_shard_axis,
+                                   reduce_dtype=reduce_dtype)
 
     L, mu = stats.posterior_params(S, b, lam, jitter=jitter)
     w_new = mu if mode == "EM" else stats.draw_weight(key, L, mu)

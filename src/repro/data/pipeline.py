@@ -25,6 +25,32 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
+def pad_features_to(X: np.ndarray, multiple: int) -> np.ndarray:
+    """Zero-pad the FEATURE (last) dimension of a row block so its
+    width divides ``multiple`` — the explicit route to a k_shard-
+    divisible statistic width (``core/linear._k_block`` refuses
+    indivisible K rather than silently truncating Sigma columns;
+    ``SVMConfig.pad_features`` plumbs this per-fit so callers need not
+    pre-pad datasets by hand).
+
+    Zero columns are exact no-ops for every statistic in this package:
+    their Sigma rows/columns and b entries are zero, the ridge pins
+    their weights to 0, and predictions are unchanged. Accepts numpy or
+    jax arrays (returns the matching kind); width already divisible is
+    an identity.
+    """
+    if multiple is None or multiple <= 1:
+        return X
+    K = X.shape[-1]
+    pad = (-K) % multiple
+    if pad == 0:
+        return X
+    widths = [(0, 0)] * (X.ndim - 1) + [(0, pad)]
+    if isinstance(X, np.ndarray):
+        return np.pad(X, widths)
+    return jnp.pad(X, widths)
+
+
 def reservoir_rows(chunks: Iterable, m: int, seed: int = 0
                    ) -> tuple[np.ndarray, int]:
     """Uniform sample of ``m`` valid rows from an iterator of

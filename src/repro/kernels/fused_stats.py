@@ -30,6 +30,20 @@ with bn=512 (K*K*4B + 2*bn*K*4B; the per-row noise/aug vectors add
 tiled K). The SVM regime of the paper (K = 54..800 after bias) sits
 comfortably inside.
 
+``col_start``/``col_blk`` switch Sigma to a COLUMN-WINDOWED output
+S_blk = X^T diag(m*w) X[:, start:start+blk] — the 2-D (data x model)
+``k_shard_axis`` statistic (DESIGN.md §Perf/k-shard): each model shard
+accumulates only its (K, K/n) column block, margin/aug/b unchanged, so
+the 2-D layout keeps the one-X-stream property. ``col_blk`` is static
+(it shapes the accumulator); ``col_start`` is a TRACED scalar — inside
+``shard_map`` it is ``axis_index * blk``, which no static argument can
+express. The kernel therefore loads the window with an in-VMEM dynamic
+slice of the X tile at a 128-ALIGNED traced base (the scalar rides in
+SMEM), over-fetching up to one lane-tile on each side; the wrapper
+slices the exact [start, start+blk) columns out of the aligned result.
+The narrowed (K, Cw) accumulator is what lets K beyond the full-width
+cap still fuse (``ops.fused_stats_fits``).
+
 Unlike ``syrk_tri`` the Sigma accumulation here is a dense rank-bn
 update: the triangle trick does not compose with single-pass streaming
 (a triangle block grid must revisit X tiles per (i, j) pair, which is
@@ -45,13 +59,16 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from . import epilogues
 
 
 def _make_kernel(epilogue: str, eps: float, eps_ins: float,
-                 n_noise: int, n_aug: int):
+                 n_noise: int, n_aug: int, windowed: bool = False):
     def _kernel(*refs):
+        if windowed:
+            c0_ref, refs = refs[0], refs[1:]
         x_ref, rho_ref, beta_ref, wmask_ref, w_ref = refs[:5]
         noise_refs = refs[5:5 + n_noise]
         outs = refs[5 + n_noise:]
@@ -83,23 +100,49 @@ def _make_kernel(epilogue: str, eps: float, eps_ins: float,
             x, coef, dimension_numbers=(((0,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
         xw = x * (wmask * weight)                    # (bn, K) weighted rows
-        s_ref[...] += jax.lax.dot_general(           # x^T diag(m*w) x
-            xw, x, dimension_numbers=(((0,), (0,)), ((), ())),
+        if windowed:                                 # aligned column window
+            xc = jax.lax.dynamic_slice(
+                x, (0, c0_ref[0]), (x.shape[0], s_ref.shape[1]))
+        else:
+            xc = x
+        s_ref[...] += jax.lax.dot_general(           # x^T diag(m*w) x[:, w]
+            xw, xc, dimension_numbers=(((0,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
     return _kernel
 
 
+def col_window_geometry(Kp: int, col_blk: int) -> int:
+    """Width of the ALIGNED in-kernel column window: the requested blk
+    rounded to lanes plus one extra lane-tile of slack so any unaligned
+    traced start lands inside a 128-aligned slice, capped at the padded
+    width (then the 'window' is just the full accumulator)."""
+    return min(Kp, _round_up(col_blk, 128) + 128)
+
+
+def aligned_window_base(col_start, Kp: int, Cw: int):
+    """(a0, off): 128-aligned traced base covering [start, start+blk)
+    within [0, Kp - Cw], and the offset of ``col_start`` inside it."""
+    c0 = jnp.asarray(col_start, jnp.int32)
+    a0 = jnp.clip((c0 // 128) * 128, 0, Kp - Cw)
+    return a0, c0 - a0
+
+
 @functools.partial(jax.jit,
                    static_argnames=("epilogue", "eps", "eps_ins",
-                                    "block_n", "interpret"))
+                                    "block_n", "col_blk", "interpret"))
 def fused_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
                 wvec: jnp.ndarray, wmask: jnp.ndarray | None = None,
-                noise: tuple | None = None, *,
+                noise: tuple | None = None,
+                col_start: jnp.ndarray | int | None = None, *,
                 epilogue: str = "em_hinge", eps: float = 1e-6,
                 eps_ins: float = 0.0, block_n: int = 512,
+                col_blk: int | None = None,
                 interpret: bool = False):
-    """Returns (margin (N,), *aug (N,) each, b (K,), S (K, K)), all f32
-    — aug is (gamma,) for the hinge epilogues, (gamma, omega) for SVR.
+    """Returns (margin (N,), *aug (N,) each, b (K,), S), all f32 — aug
+    is (gamma,) for the hinge epilogues, (gamma, omega) for SVR. S is
+    (K, K), or the (K, col_blk) column block S[:, start:start+blk]
+    when a ``(col_start, col_blk)`` window is given (module docstring:
+    static blk shapes the accumulator, traced start rides in SMEM).
 
     X: (N, K); rho/beta/wmask: (N,); wvec: (K,); noise: ``noise_arity``
     pre-drawn (N,) arrays for the MC epilogues (see ``epilogues.py``).
@@ -109,6 +152,9 @@ def fused_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
     — the zero X-row alone makes it a no-op).
     """
     N, K = X.shape
+    windowed = col_blk is not None
+    assert windowed == (col_start is not None), (
+        "col_start and col_blk must be given together")
     n_noise = epilogues.noise_arity(epilogue)
     n_aug = epilogues.aug_arity(epilogue)
     noise = tuple(noise) if noise is not None else ()
@@ -128,13 +174,22 @@ def fused_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
         wvec = jnp.pad(wvec, (0, Kp - K))
         noise = tuple(jnp.pad(z, (0, Np - N)) for z in noise)
 
+    if windowed:
+        Sw = col_window_geometry(Kp, col_blk)
+        a0, off = aligned_window_base(col_start, Kp, Sw)
+        extra_specs = [pl.BlockSpec(memory_space=pltpu.SMEM)]
+        extra_ops = (a0.reshape(1),)
+    else:
+        Sw = Kp
+        extra_specs, extra_ops = [], ()
+
     grid = (Np // bn,)
     row_spec = pl.BlockSpec((bn, 1), lambda n: (n, 0))
     outs = pl.pallas_call(
         _make_kernel(epilogue, float(eps), float(eps_ins), n_noise,
-                     n_aug),
+                     n_aug, windowed),
         grid=grid,
-        in_specs=[
+        in_specs=extra_specs + [                        # [aligned base]
             pl.BlockSpec((bn, Kp), lambda n: (n, 0)),   # X rows
             row_spec,                                   # rho
             row_spec,                                   # beta
@@ -145,19 +200,25 @@ def fused_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
         + [row_spec] * n_aug                            # gamma (, omega)
         + [
             pl.BlockSpec((Kp, 1), lambda n: (0, 0)),    # b (revisited)
-            pl.BlockSpec((Kp, Kp), lambda n: (0, 0)),   # S (revisited)
+            pl.BlockSpec((Kp, Sw), lambda n: (0, 0)),   # S (revisited)
         ],
         out_shape=[jax.ShapeDtypeStruct((Np, 1), jnp.float32)]
         * (1 + n_aug)
         + [
             jax.ShapeDtypeStruct((Kp, 1), jnp.float32),
-            jax.ShapeDtypeStruct((Kp, Kp), jnp.float32),
+            jax.ShapeDtypeStruct((Kp, Sw), jnp.float32),
         ],
         interpret=interpret,
-    )(X, rho.reshape(Np, 1), beta.reshape(Np, 1), wmask.reshape(Np, 1),
-      wvec.reshape(Kp, 1), *(z.reshape(Np, 1) for z in noise))
+    )(*extra_ops, X, rho.reshape(Np, 1), beta.reshape(Np, 1),
+      wmask.reshape(Np, 1), wvec.reshape(Kp, 1),
+      *(z.reshape(Np, 1) for z in noise))
     per_row, (b, S) = outs[:1 + n_aug], outs[-2:]
-    return (*(v[:N, 0] for v in per_row), b[:K, 0], S[:K, :K])
+    if windowed:
+        S = jax.lax.dynamic_slice(S[:K], (jnp.int32(0), off),
+                                  (K, col_blk))
+    else:
+        S = S[:K, :K]
+    return (*(v[:N, 0] for v in per_row), b[:K, 0], S)
 
 
 def _round_up(x: int, m: int) -> int:

@@ -47,8 +47,10 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from . import epilogues
+from .fused_stats import aligned_window_base, col_window_geometry
 from .rbf_gram import rbf_tile
 
 
@@ -93,8 +95,11 @@ def _make_phi_kernel(kind: str, inv_two_sigma_sq: float,
 
 def _make_fused_kernel(kind: str, inv_two_sigma_sq: float,
                        bias_col: int | None, epilogue: str, eps: float,
-                       eps_ins: float, n_noise: int, n_aug: int):
+                       eps_ins: float, n_noise: int, n_aug: int,
+                       windowed: bool = False):
     def _kernel(*refs):
+        if windowed:
+            c0_ref, refs = refs[0], refs[1:]
         x_ref, lm_ref, pj_ref, mask_ref, rho_ref, beta_ref, w_ref = refs[:7]
         noise_refs = refs[7:7 + n_noise]
         outs = refs[7 + n_noise:]
@@ -132,8 +137,13 @@ def _make_fused_kernel(kind: str, inv_two_sigma_sq: float,
             phi, coef, dimension_numbers=(((0,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
         pw = phi * (maskv * weight)                          # weighted rows
-        s_ref[...] += jax.lax.dot_general(                   # phi^T D phi
-            pw, phi, dimension_numbers=(((0,), (0,)), ((), ())),
+        if windowed:                    # aligned phi-column window, VMEM
+            pc = jax.lax.dynamic_slice(
+                phi, (0, c0_ref[0]), (phi.shape[0], s_ref.shape[1]))
+        else:
+            pc = phi
+        s_ref[...] += jax.lax.dot_general(                   # phi^T D phi_w
+            pw, pc, dimension_numbers=(((0,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
     return _kernel
 
@@ -192,28 +202,41 @@ def nystrom_phi(X: jnp.ndarray, landmarks: jnp.ndarray, proj: jnp.ndarray,
 
 @functools.partial(jax.jit, static_argnames=("sigma", "kind", "add_bias",
                                              "epilogue", "eps", "eps_ins",
-                                             "block_n", "interpret"))
+                                             "block_n", "col_blk",
+                                             "interpret"))
 def nystrom_fused_stats(X: jnp.ndarray, landmarks: jnp.ndarray,
                         proj: jnp.ndarray, rho: jnp.ndarray,
                         beta: jnp.ndarray, wvec: jnp.ndarray,
                         mask: jnp.ndarray | None = None,
-                        noise: tuple | None = None, *,
+                        noise: tuple | None = None,
+                        col_start: jnp.ndarray | int | None = None, *,
                         sigma: float = 1.0, kind: str = "rbf",
                         add_bias: bool = False,
                         epilogue: str = "em_hinge", eps: float = 1e-6,
                         eps_ins: float = 0.0,
-                        block_n: int = 256, interpret: bool = False):
+                        block_n: int = 256, col_blk: int | None = None,
+                        interpret: bool = False):
     """The whole phi-space iteration statistic in ONE X pass.
 
-    Returns (margin (N,), *aug (N,) each, b (M,), S (M, M)), all f32 —
+    Returns (margin (N,), *aug (N,) each, b (M,), S), all f32 —
     exactly ``fused_stats`` (same epilogue family: EM/MC hinge, SVR's
     double mixture) evaluated on phi = nystrom_phi(X, ...), except phi
-    never leaves VMEM. MC epilogues consume pre-drawn per-row ``noise``
-    operands like ``fused_stats`` does. Padded/masked rows contribute
-    zero to b and S (phi row zeroed, and the Sigma weight is
-    mask-scaled; the hinge coef is additionally zero at rho = beta = 0).
+    never leaves VMEM. S is (M, M), or the (M, col_blk) PHI-column
+    block S[:, start:start+blk] under a ``(col_start, col_blk)`` window
+    — the ``k_shard_axis`` x Nystrom composition: the phi tile is
+    computed in-kernel against the full landmark strip and only the
+    windowed phi columns feed the Sigma accumulator (static blk shapes
+    the accumulator; the traced 128-aligned base rides in SMEM, exactly
+    ``fused_stats``'s windowing). MC epilogues consume pre-drawn
+    per-row ``noise`` operands like ``fused_stats`` does. Padded/masked
+    rows contribute zero to b and S (phi row zeroed, and the Sigma
+    weight is mask-scaled; the hinge coef is additionally zero at
+    rho = beta = 0).
     """
     N, D = X.shape
+    windowed = col_blk is not None
+    assert windowed == (col_start is not None), (
+        "col_start and col_blk must be given together")
     n_noise = epilogues.noise_arity(epilogue)
     n_aug = epilogues.aug_arity(epilogue)
     noise = tuple(noise) if noise is not None else ()
@@ -229,13 +252,23 @@ def nystrom_fused_stats(X: jnp.ndarray, landmarks: jnp.ndarray,
     noise = tuple(jnp.pad(z.astype(jnp.float32), (0, Np - N))
                   for z in noise)
 
+    if windowed:
+        Sw = col_window_geometry(Wp, col_blk)
+        a0, off = aligned_window_base(col_start, Wp, Sw)
+        extra_specs = [pl.BlockSpec(memory_space=pltpu.SMEM)]
+        extra_ops = (a0.reshape(1),)
+    else:
+        Sw = Wp
+        extra_specs, extra_ops = [], ()
+
     row_spec = pl.BlockSpec((bn, 1), lambda n: (n, 0))
     outs = pl.pallas_call(
         _make_fused_kernel(kind, 1.0 / (2.0 * float(sigma) ** 2),
                            M - 1 if add_bias else None, epilogue,
-                           float(eps), float(eps_ins), n_noise, n_aug),
+                           float(eps), float(eps_ins), n_noise, n_aug,
+                           windowed),
         grid=(Np // bn,),
-        in_specs=[
+        in_specs=extra_specs + [                            # [aligned base]
             pl.BlockSpec((bn, X.shape[1]), lambda n: (n, 0)),   # X rows
             pl.BlockSpec(landmarks.shape, lambda n: (0, 0)),    # strip
             pl.BlockSpec(proj.shape, lambda n: (0, 0)),         # K_mm^-1/2
@@ -248,20 +281,25 @@ def nystrom_fused_stats(X: jnp.ndarray, landmarks: jnp.ndarray,
         + [row_spec] * n_aug                                    # gamma(,omega)
         + [
             pl.BlockSpec((Wp, 1), lambda n: (0, 0)),            # b (revisit)
-            pl.BlockSpec((Wp, Wp), lambda n: (0, 0)),           # S (revisit)
+            pl.BlockSpec((Wp, Sw), lambda n: (0, 0)),           # S (revisit)
         ],
         out_shape=[jax.ShapeDtypeStruct((Np, 1), jnp.float32)]
         * (1 + n_aug)
         + [
             jax.ShapeDtypeStruct((Wp, 1), jnp.float32),
-            jax.ShapeDtypeStruct((Wp, Wp), jnp.float32),
+            jax.ShapeDtypeStruct((Wp, Sw), jnp.float32),
         ],
         interpret=interpret,
-    )(X, landmarks, proj, mask.reshape(Np, 1), rho.reshape(Np, 1),
-      beta.reshape(Np, 1), wvec.reshape(Wp, 1),
+    )(*extra_ops, X, landmarks, proj, mask.reshape(Np, 1),
+      rho.reshape(Np, 1), beta.reshape(Np, 1), wvec.reshape(Wp, 1),
       *(z.reshape(Np, 1) for z in noise))
     per_row, (b, S) = outs[:1 + n_aug], outs[-2:]
-    return (*(v[:N, 0] for v in per_row), b[:M, 0], S[:M, :M])
+    if windowed:
+        S = jax.lax.dynamic_slice(S[:M], (jnp.int32(0), off),
+                                  (M, col_blk))
+    else:
+        S = S[:M, :M]
+    return (*(v[:N, 0] for v in per_row), b[:M, 0], S)
 
 
 def _round_up(x: int, m: int) -> int:

@@ -78,13 +78,41 @@ def syrk_tri(X: jnp.ndarray, w: jnp.ndarray, *,
 # gamma/omega) — <= 6 * bn * 4 B, noise next to the K^2 accumulator —
 # so one cap serves every epilogue.
 FUSED_STATS_MAX_K = 1536
+_FUSED_STATS_VMEM_BUDGET = 14 * 2 ** 20
+
+
+def _fused_stats_vmem_words(n_features: int, col_blk: int,
+                            block_n: int, epilogue: str) -> int:
+    """fp32 words resident per grid step of the COLUMN-WINDOWED fused
+    statistic (DESIGN.md §Perf/k-shard): the X tile, w/b, the narrowed
+    (Kp, Cw) Sigma accumulator, and the epilogue's per-row vectors
+    (rho/beta/wmask/margin + noise + aug)."""
+    Kp = _ru(n_features, 128)
+    Cw = min(Kp, _ru(col_blk, 128) + 128)
+    per_row = (4 + epilogues.noise_arity(epilogue)
+               + epilogues.aug_arity(epilogue))
+    return block_n * Kp + 2 * Kp + Kp * Cw + per_row * block_n
+
+
+def fused_stats_fits(n_features: int, col_blk: int | None = None,
+                     block_n: int = 512,
+                     epilogue: str = "em_hinge") -> bool:
+    """Whether the one-pass fused-statistic kernel's working set fits
+    VMEM. Full-width Sigma keeps the documented FUSED_STATS_MAX_K cap;
+    a column window narrows the accumulator to (K, Cw), so K beyond the
+    full cap can still fuse as long as the byte budget holds."""
+    if col_blk is None:
+        return n_features <= FUSED_STATS_MAX_K
+    return 4 * _fused_stats_vmem_words(
+        n_features, col_blk, block_n, epilogue) <= _FUSED_STATS_VMEM_BUDGET
 
 
 def fused_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
                 wvec: jnp.ndarray, wmask: jnp.ndarray | None = None,
                 noise: tuple | None = None, *,
                 epilogue: str = "em_hinge", eps: float = 1e-6,
-                eps_ins: float = 0.0, backend: str | None = None, **kw):
+                eps_ins: float = 0.0, col_window: tuple | None = None,
+                backend: str | None = None, **kw):
     """(margin, *aug, b, S): the whole iteration statistic in one X
     pass (single HBM stream instead of the split margin/b/Sigma
     passes), under any augmentation ``epilogue`` (``epilogues.py``):
@@ -92,15 +120,39 @@ def fused_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
     mixture returns (margin, gamma, omega, b, S). MC flavors consume
     pre-drawn per-row ``noise`` arrays (``augment.draw_ig_noise``).
 
-    For K > FUSED_STATS_MAX_K the Pallas flavors fall back to the
-    K-tiled split pair (E-step + syrk_tri) rather than blow the VMEM
-    budget — callers get the same outputs either way."""
+    ``col_window = (start, blk)`` narrows Sigma to its column block
+    X^T diag(w) X[:, start:start+blk] — the 2-D (data x model)
+    ``k_shard_axis`` statistic stays single-stream: ``blk`` is static,
+    ``start`` may be traced (``axis_index * blk`` inside shard_map).
+
+    For K > FUSED_STATS_MAX_K (full width) or past the windowed byte
+    budget (``fused_stats_fits``) the Pallas flavors fall back to the
+    K-tiled split pair (E-step + syrk_tri; windowed: plain-XLA column
+    block) rather than blow VMEM — callers get the same outputs either
+    way."""
     backend = _resolve(backend)
     _check_noise(epilogue, noise)
     if backend == "ref":
         return ref.fused_stats(X, rho, beta, wvec, wmask, eps,
                                epilogue=epilogue, noise=noise,
-                               eps_ins=eps_ins)
+                               eps_ins=eps_ins, col_window=col_window)
+    if col_window is not None:
+        start, blk = col_window
+        if not fused_stats_fits(X.shape[1], blk,
+                                kw.get("block_n", 512), epilogue):
+            # Windowed split fallback: the narrowed Sigma block is a
+            # plain (weighted X)^T Xcols matmul XLA tiles itself —
+            # the compute-bound regime where stream count stops being
+            # the bound (the triangle SYRK does not apply to an
+            # off-diagonal rectangular block).
+            return ref.fused_stats(X, rho, beta, wvec, wmask, eps,
+                                   epilogue=epilogue, noise=noise,
+                                   eps_ins=eps_ins,
+                                   col_window=col_window)
+        return _fused_stats.fused_stats(
+            X, rho, beta, wvec, wmask, noise, start, epilogue=epilogue,
+            eps=eps, eps_ins=eps_ins, col_blk=blk,
+            interpret=(backend == "interpret"), **kw)
     if X.shape[1] > FUSED_STATS_MAX_K:
         kw.pop("block_n", None)
         if epilogue == "em_hinge":
@@ -163,12 +215,15 @@ def _ru(x: int, m: int) -> int:
 
 def _nystrom_vmem_words(n_landmarks: int, n_features: int, add_bias: bool,
                         block_n: int, with_stats: bool,
-                        epilogue: str = "em_hinge") -> int:
+                        epilogue: str = "em_hinge",
+                        col_blk: int | None = None) -> int:
     """fp32 words resident per grid step of the Nystrom kernels
     (DESIGN.md §Perf/Nystrom accounting). ``with_stats`` adds the
     Sigma/b accumulators only the fused flavor allocates; the epilogue
     adds its pre-drawn noise operands and extra aug outputs (per-row
-    vectors — noise next to the phi tile, but accounted)."""
+    vectors — noise next to the phi tile, but accounted). ``col_blk``
+    narrows the Sigma accumulator to its aligned (Wp, Cw) k-shard
+    column window."""
     Lp = _ru(n_landmarks, 128)
     Dp = _ru(n_features, 128)
     Wp = _ru(n_landmarks + int(add_bias), 128)
@@ -181,22 +236,25 @@ def _nystrom_vmem_words(n_landmarks: int, n_features: int, add_bias: bool,
         per_row = (4                               # mask/rho/beta/margin
                    + epilogues.noise_arity(epilogue)
                    + epilogues.aug_arity(epilogue))
-        words += (Wp * Wp        # Sigma accumulator
+        Cw = Wp if col_blk is None else min(Wp, _ru(col_blk, 128) + 128)
+        words += (Wp * Cw        # Sigma accumulator (windowed: narrowed)
                   + Wp + per_row * block_n)  # w/b + per-row vectors
     return words
 
 
 def nystrom_fused_fits(n_landmarks: int, n_features: int,
                        add_bias: bool = True, block_n: int = 256,
-                       epilogue: str = "em_hinge") -> bool:
+                       epilogue: str = "em_hinge",
+                       col_blk: int | None = None) -> bool:
     """Whether the one-pass featurize-and-accumulate kernel's working
     set fits the VMEM budget (epilogue-aware: MC/SVR flavors carry up
-    to 6 extra per-row vectors)."""
+    to 6 extra per-row vectors; a k-shard column window narrows the
+    Sigma accumulator)."""
     if n_landmarks > NYSTROM_FUSED_MAX_M:
         return False
     return 4 * _nystrom_vmem_words(n_landmarks, n_features, add_bias,
-                                   block_n, True,
-                                   epilogue) <= _NYSTROM_VMEM_BUDGET
+                                   block_n, True, epilogue,
+                                   col_blk) <= _NYSTROM_VMEM_BUDGET
 
 
 def _nystrom_phi_fits(n_landmarks: int, n_features: int,
@@ -240,32 +298,46 @@ def nystrom_fused_stats(X: jnp.ndarray, landmarks: jnp.ndarray,
                         add_bias: bool = False,
                         epilogue: str = "em_hinge", eps: float = 1e-6,
                         eps_ins: float = 0.0,
+                        col_window: tuple | None = None,
                         backend: str | None = None, **kw):
     """(margin, *aug, b, S): the whole phi-space iteration statistic in
     one X pass — ``fused_stats`` (any augmentation epilogue: EM/MC
     hinge, SVR's double mixture) on nystrom_phi(X) with phi never
     leaving VMEM (so the (N, m) feature matrix never exists in HBM).
+    ``col_window = (start, blk)`` narrows Sigma to a PHI-column block —
+    the ``k_shard_axis`` x Nystrom composition, still one X stream (the
+    phi tile is featurized in-kernel and only its windowed columns feed
+    the accumulator).
 
     When the landmark strip + projection + Sigma accumulator (+ the
     epilogue's per-row noise/aug vectors) exceed the VMEM budget
     (``nystrom_fused_fits``), falls back to featurize-then-accumulate:
     nystrom_phi materializes phi for this row block and fused_stats
-    (K-tiled past its own cap) consumes it under the same epilogue —
-    callers get the same outputs either way."""
+    (K-tiled past its own cap, window passed through) consumes it under
+    the same epilogue — callers get the same outputs either way."""
     backend = _resolve(backend)
     _check_noise(epilogue, noise)
     if backend == "ref":
         return ref.nystrom_fused_stats(X, landmarks, proj, rho, beta,
                                        wvec, mask, float(sigma), kind,
                                        add_bias, eps, epilogue=epilogue,
-                                       noise=noise, eps_ins=eps_ins)
+                                       noise=noise, eps_ins=eps_ins,
+                                       col_window=col_window)
     if not nystrom_fused_fits(landmarks.shape[0], X.shape[1], add_bias,
-                              kw.get("block_n", 256), epilogue):
+                              kw.get("block_n", 256), epilogue,
+                              col_window[1] if col_window else None):
         phi = nystrom_phi(X, landmarks, proj, mask, sigma=sigma, kind=kind,
                           add_bias=add_bias, backend=backend)
         return fused_stats(phi, rho, beta, wvec, mask, noise,
                            epilogue=epilogue, eps=eps, eps_ins=eps_ins,
-                           backend=backend)
+                           col_window=col_window, backend=backend)
+    if col_window is not None:
+        start, blk = col_window
+        return _nystrom_phi.nystrom_fused_stats(
+            X, landmarks, proj, rho, beta, wvec, mask, noise, start,
+            sigma=float(sigma), kind=kind, add_bias=add_bias,
+            epilogue=epilogue, eps=eps, eps_ins=eps_ins, col_blk=blk,
+            interpret=(backend == "interpret"), **kw)
     return _nystrom_phi.nystrom_fused_stats(
         X, landmarks, proj, rho, beta, wvec, mask, noise,
         sigma=float(sigma), kind=kind, add_bias=add_bias,

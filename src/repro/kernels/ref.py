@@ -5,6 +5,7 @@ Pallas) and the default CPU execution path of ``ops.py``.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from . import epilogues
@@ -62,7 +63,8 @@ def syrk_tri(X: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
 def fused_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
                 wvec: jnp.ndarray, wmask: jnp.ndarray | None,
                 eps: float, epilogue: str = "em_hinge",
-                noise: tuple | None = None, eps_ins: float = 0.0):
+                noise: tuple | None = None, eps_ins: float = 0.0,
+                col_window: tuple | None = None):
     """One-sweep iteration statistic under any augmentation epilogue:
     margin -> (aug, sigma_weight, coef) -> (b, Sigma) in one logical
     pass (``kernels/epilogues.py`` holds the epilogue family; MC
@@ -72,9 +74,15 @@ def fused_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
     sweep's epilogue; wmask defaults to ones (the KRN path passes its
     row mask, the phi-space paths their row-validity mask).
 
+    ``col_window = (start, blk)`` narrows Sigma to its column block
+    X^T diag(w) X[:, start:start+blk] — the 2-D (data x model)
+    ``k_shard_axis`` statistic. ``start`` may be TRACED (it is
+    ``axis_index * blk`` inside shard_map); ``blk`` is static.
+
     Returns:
-      (margin (N,), *aug (N,) each, b (K,), S (K, K)), all float32 —
-      aug = (gamma,) for the hinge epilogues, (gamma, omega) for SVR.
+      (margin (N,), *aug (N,) each, b (K,), S), all float32 — aug =
+      (gamma,) for the hinge epilogues, (gamma, omega) for SVR; S is
+      (K, K) full or (K, blk) windowed.
     """
     Xf = X.astype(jnp.float32)
     margin = Xf @ wvec.astype(jnp.float32)
@@ -83,7 +91,12 @@ def fused_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
         beta.astype(jnp.float32), noise, eps, eps_ins)
     w = weight if wmask is None else wmask.astype(jnp.float32) * weight
     b = Xf.T @ coef
-    return (margin, *aug, b, weighted_gram(X, w))
+    if col_window is None:
+        return (margin, *aug, b, weighted_gram(X, w))
+    start, blk = col_window
+    Xc = jax.lax.dynamic_slice_in_dim(Xf, jnp.asarray(start, jnp.int32),
+                                      blk, axis=1)
+    return (margin, *aug, b, (Xf * w[:, None]).T @ Xc)
 
 
 def nystrom_phi(X: jnp.ndarray, landmarks: jnp.ndarray, proj: jnp.ndarray,
@@ -117,16 +130,21 @@ def nystrom_fused_stats(X: jnp.ndarray, landmarks: jnp.ndarray,
                         mask: jnp.ndarray | None, sigma: float, kind: str,
                         add_bias: bool, eps: float,
                         epilogue: str = "em_hinge",
-                        noise: tuple | None = None, eps_ins: float = 0.0):
+                        noise: tuple | None = None, eps_ins: float = 0.0,
+                        col_window: tuple | None = None):
     """Oracle for the featurize-and-accumulate kernel: fused_stats on
     nystrom_phi, i.e. the whole phi-space iteration statistic under any
     augmentation epilogue (EM/MC hinge, SVR's double mixture).
+    ``col_window`` narrows Sigma to a PHI-column block (the
+    ``k_shard_axis`` composition; see ``fused_stats``).
 
-    Returns (margin (N,), *aug (N,) each, b (M,), S (M, M)), all f32.
+    Returns (margin (N,), *aug (N,) each, b (M,), S (M, M) or
+    (M, blk)), all f32.
     """
     phi = nystrom_phi(X, landmarks, proj, mask, sigma, kind, add_bias)
     return fused_stats(phi, rho, beta, wvec, mask, eps,
-                       epilogue=epilogue, noise=noise, eps_ins=eps_ins)
+                       epilogue=epilogue, noise=noise, eps_ins=eps_ins,
+                       col_window=col_window)
 
 
 def rbf_gram(X1: jnp.ndarray, X2: jnp.ndarray, sigma: float) -> jnp.ndarray:

@@ -46,6 +46,12 @@ def build_svm_cell(arch: str, shape_name: str, mesh, opts: dict):
     if k_shard:
         data_axes = tuple(a for a in mesh.axis_names if a != "model")
         k_shard_axis = "model"
+        # The 2-D statistic splits Sigma columns over 'model'; the
+        # windowed kernels need the statistic width divisible
+        # (pad_features_to is the user-facing fix — _k_block errors).
+        assert K % mesh.shape["model"] == 0, (
+            f"K={K} not divisible by model axis {mesh.shape['model']}; "
+            "pad with data.pipeline.pad_features_to")
     else:
         data_axes = tuple(mesh.axis_names)
         k_shard_axis = None
@@ -67,13 +73,15 @@ def build_svm_cell(arch: str, shape_name: str, mesh, opts: dict):
         tdtype = jnp.float32
     elif task == "SVR":
         def step(data, state, key):
-            return svr.svr_step(data, state, key, eps_ins=1e-3, **common)
+            return svr.svr_step(data, state, key, eps_ins=1e-3,
+                                k_shard_axis=k_shard_axis, **common)
         state_struct = sds((K,), jnp.float32)
         state_spec = P(None)
         tdtype = jnp.float32
     else:
         def step(data, state, key):
             return multiclass.mlt_step(data, state, key, num_classes=M,
+                                       k_shard_axis=k_shard_axis,
                                        **common)
         state_struct = sds((M, K), jnp.float32)
         state_spec = P(None, None)

@@ -151,7 +151,7 @@ def test_k_shard_indivisible_K_raises():
     mesh = make_mesh((1,), ("model",))
 
     def f(x):
-        return jnp.asarray(_k_block(x, "model")[0])
+        return jnp.asarray(_k_block(x.shape[-1], "model")[0])
 
     # K=7 divisible by axis size 1 -> fine
     g = shard_map(f, mesh=mesh, in_specs=(P(None, None),),
