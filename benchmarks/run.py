@@ -16,10 +16,11 @@ def main() -> None:
                     help="comma-separated benchmark names")
     args, _ = ap.parse_known_args()
 
-    from . import (fig2_cores, fig34_scaling, fig56_convergence,
-                   kshard_fused, mc_fused, nystrom_fused, roofline,
-                   stream_vs_resident, table5_dna, table6_svr, table7_krn,
-                   table8_mlt, table9_gram)
+    from . import (elastic_overhead, fig2_cores, fig34_scaling,
+                   fig56_convergence, kshard_fused, mc_fused,
+                   nystrom_fused, roofline, stream_vs_resident,
+                   table5_dna, table6_svr, table7_krn, table8_mlt,
+                   table9_gram)
     benches = {
         "table5_dna": table5_dna.run,
         "table6_svr": table6_svr.run,
@@ -34,6 +35,7 @@ def main() -> None:
         "nystrom_fused": nystrom_fused.run,
         "mc_fused": mc_fused.run,
         "kshard_fused": kshard_fused.run,
+        "elastic_overhead": elastic_overhead.run,
     }
     only = [x for x in args.only.split(",") if x]
     failed = []

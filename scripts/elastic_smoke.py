@@ -1,0 +1,109 @@
+#!/usr/bin/env python
+"""CPU elasticity smoke for CI: kill a fit, resume it, demand the
+same bits (DESIGN.md §Reliability).
+
+Three gates, strongest first:
+
+  * kill/resume parity — an EM and an MC streaming fit are preempted
+    by the deterministic fault injectors (between iterations AND
+    mid-pass between chunks) and resumed from the last committed
+    snapshot; the resumed weights must equal the uninterrupted fit's
+    BITWISE (the snapshot carries the PRNG carry key and, mid-pass,
+    the iteration subkey);
+  * elastic restore — the stream-written checkpoint must resume into
+    ``driver="scan"`` within the whole-fit reassociation band (1e-3);
+  * budget extension — resuming a finished 5-iteration fit with
+    max_iters=10 must land bitwise on the one-shot 10-iteration fit.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> int:
+    import numpy as np
+
+    from repro.core import PEMSVM, SVMConfig
+    from repro.runtime import faults
+    from repro.runtime.policy import FaultPolicy
+
+    rng = np.random.default_rng(0)
+    N, K = 400, 12
+    X = rng.normal(size=(N, K)).astype(np.float32)
+    y = np.where(X @ rng.normal(size=K) + 0.2 * rng.normal(size=N) > 0,
+                 1.0, -1.0)
+    ok = True
+
+    # --- 1. kill between iterations / mid-pass between chunks -> bitwise
+    for algo, cadence in (("EM", dict(ckpt_every=2)),
+                          ("MC", dict(ckpt_every=100, ckpt_chunks=3))):
+        kw = dict(algorithm=algo, driver="stream", chunk_rows=64,
+                  max_iters=10, min_iters=10, burnin=3)
+        ref = PEMSVM(SVMConfig(**kw)).fit(X, y)
+        with tempfile.TemporaryDirectory() as d:
+            cfg = SVMConfig(**kw, fault=FaultPolicy(ckpt_dir=d, **cadence))
+            try:
+                if algo == "EM":
+                    PEMSVM(cfg).fit(X, y,
+                                    fault_hook=faults.kill_at_iteration(6))
+                else:
+                    # 7 chunks/pass after padding; die inside pass 3
+                    PEMSVM(cfg).fit(X, y,
+                                    fault_hook=faults.kill_at_iteration(4))
+                print(f"{algo}: kill did not fire")
+                return 1
+            except faults.SimulatedPreemption:
+                pass
+            res = PEMSVM(cfg).fit(X, y, resume_from=d)
+        bitwise = np.array_equal(ref.weights, res.weights)
+        print(f"{algo} stream kill/resume: bitwise={bitwise} "
+              f"resumed_at={res.resumed_at} ckpts={res.n_checkpoints}")
+        ok &= bitwise
+
+    # --- 2. stream-written checkpoint restores into the scan driver
+    # eps=1e-2 keeps the iteration map out of the 1/gamma^2
+    # noise-amplifying regime so the band is gateable on CI
+    # (same rationale as stream_smoke).
+    kw = dict(algorithm="EM", max_iters=10, min_iters=10, eps=1e-2)
+    ref = PEMSVM(SVMConfig(**kw, driver="scan", scan_chunk=4)).fit(X, y)
+    with tempfile.TemporaryDirectory() as d:
+        pol = FaultPolicy(ckpt_dir=d, ckpt_every=3)
+        try:
+            PEMSVM(SVMConfig(**kw, driver="stream", chunk_rows=64,
+                             fault=pol)).fit(
+                X, y, fault_hook=faults.kill_at_iteration(6))
+        except faults.SimulatedPreemption:
+            pass
+        res = PEMSVM(SVMConfig(**kw, driver="scan", scan_chunk=4,
+                               fault=pol)).fit(X, y, resume_from=d)
+    rel = (np.abs(ref.weights - res.weights).max()
+           / np.abs(ref.weights).max())
+    print(f"stream->scan elastic resume: rel={rel:.3e}")
+    ok &= rel < 1e-3
+
+    # --- 3. budget extension is bitwise vs the one-shot fit
+    kw = dict(algorithm="EM", driver="loop", min_iters=1, tol=1e-12)
+    with tempfile.TemporaryDirectory() as d:
+        pol = FaultPolicy(ckpt_dir=d, ckpt_every=5)
+        PEMSVM(SVMConfig(**kw, max_iters=5, fault=pol)).fit(X, y)
+        r2 = PEMSVM(SVMConfig(**kw, max_iters=10, fault=pol)).fit(
+            X, y, resume_from=d)
+    ref = PEMSVM(SVMConfig(**kw, max_iters=10)).fit(X, y)
+    extend_ok = (r2.resumed_at == 5
+                 and np.array_equal(ref.weights, r2.weights))
+    print(f"extend budget 5->10: bitwise={extend_ok}")
+    ok &= extend_ok
+
+    if not ok:
+        print("ELASTIC SMOKE FAIL")
+        return 1
+    print("elastic smoke complete")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -46,12 +46,29 @@ class Checkpointer:
         self.dir = directory
         self.keep_k = keep_k
         os.makedirs(directory, exist_ok=True)
+        self._sweep_stale_tmp()
         self._thread: threading.Thread | None = None
         self._error: Exception | None = None
 
+    def _sweep_stale_tmp(self) -> None:
+        """Remove ``.tmp_step_*`` work directories left by a crash
+        mid-save. They are never restore candidates (no COMMIT marker),
+        but without this sweep they accumulate forever on a preemption-
+        heavy deployment; construction is the natural restart point."""
+        for f in os.listdir(self.dir):
+            if f.startswith(".tmp_step_"):
+                shutil.rmtree(os.path.join(self.dir, f),
+                              ignore_errors=True)
+
     # ------------------------------------------------------------- saving
-    def save(self, step: int, tree: Any, *, blocking: bool = False) -> None:
-        """Snapshot to host, then write in the background."""
+    def save(self, step: int, tree: Any, *, blocking: bool = False,
+             meta: dict | None = None) -> None:
+        """Snapshot to host, then write in the background.
+
+        ``meta`` is an optional JSON-able dict stored in the manifest —
+        the solver keeps its scalar resume state (iteration, histories,
+        config fingerprint) there so the array leaves stay pure tensors.
+        """
         self.wait()  # at most one outstanding save
         names, leaves, _ = _tree_flatten_with_names(tree)
         host = [np.asarray(x) for x in leaves]   # device->host snapshot
@@ -62,7 +79,8 @@ class Checkpointer:
                 final = os.path.join(self.dir, f"step_{step:09d}")
                 shutil.rmtree(tmp, ignore_errors=True)
                 os.makedirs(os.path.join(tmp, "arrays"))
-                manifest = {"step": step, "time": time.time(), "leaves": []}
+                manifest = {"step": step, "time": time.time(),
+                            "meta": meta or {}, "leaves": []}
                 for i, (n, a) in enumerate(zip(names, host)):
                     np.save(os.path.join(tmp, "arrays", f"{i}.npy"), a)
                     manifest["leaves"].append(
@@ -112,12 +130,7 @@ class Checkpointer:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, tree_like: Any, step: int | None = None,
-                shardings: Any = None) -> Any:
-        """Restore into the structure of ``tree_like``; with ``shardings``
-        given (a matching tree of NamedSharding / None), each leaf is
-        device_put with its target sharding — this is the elastic-remesh
-        path (checkpoint mesh need not equal restore mesh)."""
+    def _load_manifest(self, step: int | None):
         if step is None:
             step = self.latest_step()
         if step is None:
@@ -125,12 +138,28 @@ class Checkpointer:
         final = os.path.join(self.dir, f"step_{step:09d}")
         with open(os.path.join(final, "manifest.json")) as f:
             manifest = json.load(f)
+        return step, final, manifest
+
+    def restore(self, tree_like: Any, step: int | None = None,
+                shardings: Any = None) -> Any:
+        """Restore into the structure of ``tree_like``; with ``shardings``
+        given (a matching tree of NamedSharding / None), each leaf is
+        device_put with its target sharding — this is the elastic-remesh
+        path (checkpoint mesh need not equal restore mesh)."""
+        step, final, manifest = self._load_manifest(step)
         names, leaves, treedef = _tree_flatten_with_names(tree_like)
         by_name = {e["name"]: e for e in manifest["leaves"]}
         sh_leaves = (jax.tree.leaves(shardings, is_leaf=lambda x: x is None)
                      if shardings is not None else [None] * len(leaves))
         out = []
         for n, leaf, sh in zip(names, leaves, sh_leaves):
+            if n not in by_name:
+                raise ValueError(
+                    f"checkpoint step_{step:09d} in {self.dir} has no "
+                    f"leaf named {n!r}; it holds "
+                    f"{sorted(e['name'] for e in manifest['leaves'])} — "
+                    "the restore tree's structure does not match what "
+                    "was saved (config/model mismatch?)")
             e = by_name[n]
             a = np.load(os.path.join(final, "arrays", f"{e['idx']}.npy"))
             want = tuple(getattr(leaf, "shape", a.shape))
@@ -138,3 +167,17 @@ class Checkpointer:
             out.append(jax.device_put(a, sh) if sh is not None
                        else jax.device_put(a))
         return jax.tree.unflatten(treedef, out)
+
+    def restore_named(self, step: int | None = None
+                      ) -> tuple[dict, dict]:
+        """Restore as a flat ``{leaf_name: np.ndarray}`` dict plus the
+        manifest (which carries ``meta``). Structure-free counterpart of
+        ``restore`` for callers whose payload shape is data-dependent —
+        the solver's resume path, where history lengths and the presence
+        of mid-pass accumulators vary per checkpoint."""
+        step, final, manifest = self._load_manifest(step)
+        arrays = {
+            e["name"]: np.load(os.path.join(final, "arrays",
+                                            f"{e['idx']}.npy"))
+            for e in manifest["leaves"]}
+        return arrays, manifest

@@ -32,7 +32,6 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro import compat
 from repro.compat import shard_map
 
 from .linear import SVMData
@@ -85,19 +84,30 @@ def shard_rows(mesh: Mesh, axes: Sequence[str], X: np.ndarray,
 def shard_wrap(mesh: Mesh, axes: Sequence[str],
                step_fn: Callable, *, state_spec=P(None),
                has_prior: bool = False,
-               prior_spec=P(None, None)) -> Callable:
-    """shard_map a step(data, [prior,] state, key) -> (state, aux) function.
+               prior_spec=P(None, None),
+               has_live: bool = False) -> Callable:
+    """shard_map a step(data, [prior,] state, key[, live]) -> (state, aux)
+    function.
 
     data is row-sharded over ``axes``; state/key/prior replicated; outputs
     replicated (the psum/replicated-solve structure guarantees it).
     ``prior_spec`` is the (pytree of) replicated spec(s) for the prior
     slot — a single (N, N) Gram for exact KRN, or the Nystrom
     (landmarks, projection) pair.
+
+    ``has_live`` appends a liveness-vector slot: a (num_shards,) fp32
+    array sharded over the data axes like the rows, so each shard
+    receives its own scalar weight and the step's reductions renormalize
+    around dropped replicas (``stats.preduce``). An all-ones vector is
+    bitwise the plain psum, so the solver passes it unconditionally on
+    the mesh path.
     """
     dspec = P(tuple(axes))
     data_specs = SVMData(X=P(tuple(axes), None), target=dspec, mask=dspec)
     in_specs = ((data_specs, prior_spec, state_spec, P(None)) if has_prior
                 else (data_specs, state_spec, P(None)))
+    if has_live:
+        in_specs = in_specs + (dspec,)
     out_specs = (state_spec, P())  # P() = replicated scalars in the aux dict
 
     wrapped = shard_map(step_fn, mesh=mesh, in_specs=in_specs,
@@ -110,8 +120,8 @@ def live_weighted_psum(x: jnp.ndarray, live: jnp.ndarray,
     """Failure-tolerant mean-preserving reduction: sum_p live_p x_p scaled
     by P / sum_p live_p. A dead replica (live=0) drops out and the
     statistic renormalizes — the SVM's sums are over data, so this is the
-    unbiased estimate the paper's stopping rule keeps working with."""
-    num = jax.lax.psum(live * x, tuple(axes))
-    den = jax.lax.psum(live, tuple(axes))
-    total = np.prod([compat.axis_size(a) for a in axes])
-    return num * (total / jnp.maximum(den, 1.0))
+    unbiased estimate the paper's stopping rule keeps working with.
+    (Thin alias of ``stats.preduce(..., live=...)``, which the step
+    functions call directly so the fused collectives stay fused.)"""
+    from . import stats as _stats
+    return _stats.preduce(x, tuple(axes), live)

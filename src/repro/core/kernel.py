@@ -56,7 +56,8 @@ def krn_step(data: SVMData, K_prior: jnp.ndarray, omega: jnp.ndarray,
              eps: float = 1e-6, jitter: float = 1e-6,
              axes: Sequence[str] = (), triangle: bool = True,
              backend: str | None = None,
-             reduce_dtype: str | None = None):
+             reduce_dtype: str | None = None,
+             live: jnp.ndarray | None = None):
     """One KRN-*-CLS iteration.
 
     data.X holds this shard's *rows of the padded Gram matrix* (N_loc, N);
@@ -84,7 +85,7 @@ def krn_step(data: SVMData, K_prior: jnp.ndarray, omega: jnp.ndarray,
                                           noise, epilogue=epilogue,
                                           eps=eps, backend=backend)
     S, b = stats.reduce_stats(S, b, axes, triangle=triangle,
-                              reduce_dtype=reduce_dtype)
+                              reduce_dtype=reduce_dtype, live=live)
 
     L, mu = stats.posterior_params(S, b, lam, prior_precision=K_prior,
                                    jitter=jitter)
@@ -92,9 +93,9 @@ def krn_step(data: SVMData, K_prior: jnp.ndarray, omega: jnp.ndarray,
 
     K_omega = K_prior @ omega_new
     obj = objective.kernel_reg(omega_new, K_omega, lam) + stats.preduce(
-        objective.hinge_obj_terms(margin, y, mask), axes)
+        objective.hinge_obj_terms(margin, y, mask), axes, live)
     return omega_new, {"objective": obj,
-                       "gamma_mean": stats.masked_mean(gamma, mask, axes)}
+                       "gamma_mean": stats.masked_mean(gamma, mask, axes, live)}
 
 
 def decision_function(omega: jnp.ndarray, X_train: jnp.ndarray,

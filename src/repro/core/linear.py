@@ -168,8 +168,13 @@ def cls_step(data: SVMData, w: jnp.ndarray, key: jax.Array, *,
              triangle: bool = True, backend: str | None = None,
              k_shard_axis: str | None = None,
              reduce_dtype: str | None = None,
-             phi=None, phi_spec: PhiSpec | None = None):
-    """One LIN-*-CLS iteration. Returns (w_new, aux dict)."""
+             phi=None, phi_spec: PhiSpec | None = None,
+             live: jnp.ndarray | None = None):
+    """One LIN-*-CLS iteration. Returns (w_new, aux dict).
+
+    ``live`` (this shard's liveness weight) renormalizes every reduction
+    around dropped replicas — see ``stats.preduce``; all-ones is bitwise
+    the plain psum."""
     X, y, mask = data
     # Rowwise MC draws are keyed by global row index, so shards need no
     # per-shard key folds — the row offset decorrelates them and keeps
@@ -188,19 +193,19 @@ def cls_step(data: SVMData, w: jnp.ndarray, key: jax.Array, *,
         col_window=col_window)
     if k_shard_axis is None:
         S, b = stats.reduce_stats(S, b, axes, triangle=triangle,
-                                  reduce_dtype=reduce_dtype)
+                                  reduce_dtype=reduce_dtype, live=live)
     else:
         S, b = stats.reduce_kshard(S, b, axes, k_shard_axis,
-                                   reduce_dtype=reduce_dtype)
+                                   reduce_dtype=reduce_dtype, live=live)
 
     L, mu = stats.posterior_params(S, b, lam, jitter=jitter)
     w_new = mu if mode == "EM" else stats.draw_weight(key, L, mu)
 
     obj = objective.l2_reg(w_new, lam) + stats.preduce(
-        objective.hinge_obj_terms(margin, y, mask), axes)
-    n_sv = stats.preduce(jnp.sum(mask * (gamma <= 2.0 * eps)), axes)
+        objective.hinge_obj_terms(margin, y, mask), axes, live)
+    n_sv = stats.preduce(jnp.sum(mask * (gamma <= 2.0 * eps)), axes, live)
     return w_new, {"objective": obj,
-                   "gamma_mean": stats.masked_mean(gamma, mask, axes),
+                   "gamma_mean": stats.masked_mean(gamma, mask, axes, live),
                    "n_sv": n_sv}
 
 

@@ -133,7 +133,8 @@ def mlt_step(data: SVMData, W: jnp.ndarray, key: jax.Array, *,
              backend: str | None = None,
              k_shard_axis: str | None = None,
              reduce_dtype: str | None = None,
-             phi=None, phi_spec: PhiSpec | None = None):
+             phi=None, phi_spec: PhiSpec | None = None,
+             live: jnp.ndarray | None = None):
     """One outer MLT iteration = one block sweep over all M classes.
 
     W: (M, K). Returns (W_new, aux dict). ``k_shard_axis`` switches
@@ -161,10 +162,10 @@ def mlt_step(data: SVMData, W: jnp.ndarray, key: jax.Array, *,
             row0=row0, col_window=col_window)
         if k_shard_axis is None:
             S, b = stats.reduce_stats(S, b, axes, triangle=triangle,
-                                      reduce_dtype=reduce_dtype)
+                                      reduce_dtype=reduce_dtype, live=live)
         else:
             S, b = stats.reduce_kshard(S, b, axes, k_shard_axis,
-                                       reduce_dtype=reduce_dtype)
+                                       reduce_dtype=reduce_dtype, live=live)
         L, mu = stats.posterior_params(S, b, lam, jitter=jitter)
         if mode == "EM":
             w_new = mu
@@ -177,7 +178,7 @@ def mlt_step(data: SVMData, W: jnp.ndarray, key: jax.Array, *,
     W_new, F = jax.lax.fori_loop(0, M, body, (W.astype(jnp.float32), F0))
 
     obj = objective.l2_reg(W_new, lam) + stats.preduce(
-        objective.cs_obj_terms(F, labels, mask), axes)
+        objective.cs_obj_terms(F, labels, mask), axes, live)
     return W_new, {"objective": obj}
 
 

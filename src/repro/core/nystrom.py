@@ -139,41 +139,58 @@ class NystromSVM:
             backend=self.svm.config.backend).astype(np.float32)
         self.svm._phi_arrays = (self._landmarks, self._proj)
 
-    def fit(self, X: np.ndarray, y: np.ndarray) -> FitResult:
-        X = np.asarray(X, np.float32)
-        N = X.shape[0]
-        m = self.n_landmarks or int(np.ceil(np.sqrt(N)))
-        rng = np.random.default_rng(self.seed)
-        self._install_featurizer(
-            X[rng.choice(N, size=min(m, N), replace=False)])
-        return self.svm.fit(X, y)
+    @staticmethod
+    def _continuing(fit_kw: dict) -> bool:
+        """A resumed/warm-started fit must REUSE the featurizer that
+        produced the checkpointed phi-space weights — re-drawing
+        landmarks would silently change the feature map under them."""
+        return (fit_kw.get("resume_from") is not None
+                or fit_kw.get("warm_start") is not None)
 
-    def fit_libsvm(self, path: str, n_features: int) -> FitResult:
+    def fit(self, X: np.ndarray, y: np.ndarray, **fit_kw) -> FitResult:
+        """``fit_kw`` forwards the elastic surface (resume_from /
+        warm_start / fault_hook / ...) — see ``PEMSVM.fit``. Landmark
+        selection is seed-deterministic, and is skipped entirely when
+        continuing a fit whose featurizer is already installed."""
+        X = np.asarray(X, np.float32)
+        if not (self._continuing(fit_kw) and self._landmarks is not None):
+            N = X.shape[0]
+            m = self.n_landmarks or int(np.ceil(np.sqrt(N)))
+            rng = np.random.default_rng(self.seed)
+            self._install_featurizer(
+                X[rng.choice(N, size=min(m, N), replace=False)])
+        return self.svm.fit(X, y, **fit_kw)
+
+    def fit_libsvm(self, path: str, n_features: int,
+                   **fit_kw) -> FitResult:
         """Out-of-core nonlinear fit from a libsvm file.
 
         One reservoir-sampling pass picks the landmarks (O(m D) host
         memory), then the delegate streams RAW rows chunk by chunk —
         featurize-and-accumulate on device, so peak device input
         residency is (prefetch + 2) D-wide chunks and the dataset is
-        never resident on host or device."""
+        never resident on host or device. ``fit_kw`` forwards the
+        elastic surface; continuing a fit (resume/warm start) reuses
+        the installed featurizer and skips the sampling pass."""
         from repro.data import iter_libsvm, reservoir_rows
 
         cfg = self.svm.config
-        chunks = iter_libsvm(path, cfg.chunk_rows, n_features)
-        if self.n_landmarks:
-            landmarks, _ = reservoir_rows(chunks, self.n_landmarks,
-                                          seed=self.seed)
-        else:
-            # m = ceil(sqrt(N)) needs N first: count on a cheap extra
-            # pass (the file is re-read every iteration anyway).
-            n_valid = sum(int(np.sum(np.asarray(mc) > 0))
-                          for _, _, mc in chunks)
-            m = int(np.ceil(np.sqrt(n_valid)))
-            landmarks, _ = reservoir_rows(
-                iter_libsvm(path, cfg.chunk_rows, n_features), m,
-                seed=self.seed)
-        self._install_featurizer(landmarks)
-        return self.svm.fit_libsvm(path, n_features)
+        if not (self._continuing(fit_kw) and self._landmarks is not None):
+            chunks = iter_libsvm(path, cfg.chunk_rows, n_features)
+            if self.n_landmarks:
+                landmarks, _ = reservoir_rows(chunks, self.n_landmarks,
+                                              seed=self.seed)
+            else:
+                # m = ceil(sqrt(N)) needs N first: count on a cheap extra
+                # pass (the file is re-read every iteration anyway).
+                n_valid = sum(int(np.sum(np.asarray(mc) > 0))
+                              for _, _, mc in chunks)
+                m = int(np.ceil(np.sqrt(n_valid)))
+                landmarks, _ = reservoir_rows(
+                    iter_libsvm(path, cfg.chunk_rows, n_features), m,
+                    seed=self.seed)
+            self._install_featurizer(landmarks)
+        return self.svm.fit_libsvm(path, n_features, **fit_kw)
 
     # ---------------------------------------------------------- inference
     def _phi(self, X: np.ndarray) -> np.ndarray:

@@ -1,0 +1,151 @@
+"""Checkpoint payload for preemption-safe fits (DESIGN.md §Reliability).
+
+The E-step statistics are exact sums over rows and the MC chain is keyed
+per global row, so a fit's whole resumable state is tiny — O(K^2), never
+O(N):
+
+  arrays   state (K,)/(M,K) f32, the PRNG carry key, the f64 MC sample
+           sum (= mean * n_avg, driver-independent), and for a MID-PASS
+           stream snapshot the iteration subkey plus the partial chunk
+           totals (tot_*); with decayed warm-start stats, the frozen
+           previous-fit (S, b) ride along (prev_*).
+  meta     scalar loop state: completed iteration count, histories,
+           stopping-rule counters, the chunk cursor, and the config
+           FINGERPRINT (the semantic fields that must match for the
+           resumed trajectory to be the uninterrupted one).
+
+Driver/layout fields (driver, scan_chunk, chunk_rows, prefetch, backend,
+mesh axes, reduce dtype/packing, fault policy) are deliberately OUTSIDE
+the fingerprint: a checkpoint written by ``driver="stream"`` on one mesh
+restores into ``driver="scan"`` on another — that cross-layout freedom
+is the elastic-fit contract, and it is sound because every excluded
+field only re-associates the same exact sums. The one exception is a
+mid-pass snapshot, whose chunk cursor is meaningful only for a stream
+fit with the SAME chunk_rows (checked at restore).
+
+Step numbering: ``step = it * 1_000_000 + chunk_idx`` — boundary saves
+(chunk_idx = 0) and mid-pass saves share one monotonic axis, so
+``Checkpointer.latest_step()`` is always the most recent commit.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any
+
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+
+_MIDPASS_STRIDE = 1_000_000
+
+# Fields whose values change the fit trajectory itself (as opposed to
+# its schedule or layout). max_iters is excluded on purpose: resuming
+# with a larger budget is how a preempted fit is EXTENDED.
+_SEMANTIC_FIELDS = (
+    "formulation", "algorithm", "task", "lam", "eps", "eps_ins",
+    "num_classes", "kernel", "sigma", "min_iters", "patience", "tol",
+    "burnin", "jitter", "add_bias", "seed", "pad_features", "decay",
+)
+
+
+def config_fingerprint(cfg) -> str:
+    vals = {f: getattr(cfg, f) for f in _SEMANTIC_FIELDS}
+    vals["phi_spec"] = repr(cfg.phi_spec) if cfg.phi_spec else None
+    return json.dumps(vals, sort_keys=True)
+
+
+def step_id(it: int, chunk_idx: int = 0) -> int:
+    assert 0 <= chunk_idx < _MIDPASS_STRIDE, chunk_idx
+    return it * _MIDPASS_STRIDE + chunk_idx
+
+
+def save_snapshot(ckpt: Checkpointer, cfg, *, it: int, state, key,
+                  samp_sum, n_avg: int, n_small: int, objs: list,
+                  aux_hist: dict, n_syncs: int, converged: bool = False,
+                  prev_stats: dict | None = None,
+                  sub=None, totals: dict | None = None,
+                  chunk_idx: int = 0, row0: int = 0,
+                  blocking: bool = False) -> int:
+    """Commit one resume point; returns its step id.
+
+    ``it`` is the number of COMPLETED iterations; ``sub``/``totals``
+    present make this a mid-pass stream snapshot of iteration it + 1,
+    with ``chunk_idx`` chunks already folded into ``totals``.
+    """
+    in_pass = totals is not None
+    arrays: dict[str, Any] = {
+        "state": np.asarray(state, np.float32),
+        "key": np.asarray(key),
+        "samp_sum": np.asarray(samp_sum, np.float64),
+    }
+    if in_pass:
+        arrays["sub"] = np.asarray(sub)
+        for k, v in totals.items():
+            arrays[f"tot_{k}"] = np.asarray(v)
+    if prev_stats is not None:
+        for k, v in prev_stats.items():
+            arrays[f"prev_{k}"] = np.asarray(v)
+    meta = {
+        "fingerprint": config_fingerprint(cfg),
+        "it": int(it),
+        "n_avg": int(n_avg),
+        "n_small": int(n_small),
+        "objs": [float(v) for v in objs],
+        "aux": {k: [float(x) for x in v] for k, v in aux_hist.items()},
+        "n_syncs": int(n_syncs),
+        "converged": bool(converged),
+        "in_pass": bool(in_pass),
+        "chunk_idx": int(chunk_idx),
+        "row0": int(row0),
+        "chunk_rows": int(cfg.chunk_rows),
+    }
+    step = step_id(it + 1 if in_pass else it, chunk_idx if in_pass else 0)
+    ckpt.save(step, arrays, meta=meta, blocking=blocking)
+    return step
+
+
+def load_snapshot(ckpt: Checkpointer, step: int | None = None) -> dict:
+    """Flat payload dict: meta scalars + 'state'/'key'/'samp_sum' host
+    arrays, plus 'sub'/'totals'/'prev_stats' when present."""
+    arrays, manifest = ckpt.restore_named(step)
+    meta = manifest["meta"]
+    payload = dict(meta)
+    payload["step"] = manifest["step"]
+    payload["state"] = arrays["state"]
+    payload["key"] = arrays["key"]
+    payload["samp_sum"] = arrays["samp_sum"]
+    payload["sub"] = arrays.get("sub")
+    totals = {k[len("tot_"):]: v for k, v in arrays.items()
+              if k.startswith("tot_")}
+    payload["totals"] = totals or None
+    prev = {k[len("prev_"):]: v for k, v in arrays.items()
+            if k.startswith("prev_")}
+    payload["prev_stats"] = prev or None
+    return payload
+
+
+def check_compatible(payload: dict, cfg) -> None:
+    fp = config_fingerprint(cfg)
+    if payload["fingerprint"] != fp:
+        theirs = json.loads(payload["fingerprint"])
+        ours = json.loads(fp)
+        diff = sorted(k for k in ours
+                      if ours[k] != theirs.get(k, object()))
+        raise ValueError(
+            "checkpoint was written by a semantically different config; "
+            f"mismatched fields: {diff} — resume requires the same "
+            "problem (driver/mesh/chunking MAY differ, these may not)")
+    if payload["in_pass"]:
+        if cfg.driver != "stream":
+            raise ValueError(
+                "mid-pass checkpoint (partial chunk totals) can only "
+                f"resume into driver='stream', not {cfg.driver!r}; pick "
+                "an iteration-boundary step (Checkpointer.all_steps) "
+                "for cross-driver resume")
+        if payload["chunk_rows"] != cfg.chunk_rows:
+            raise ValueError(
+                "mid-pass checkpoint's chunk cursor was written at "
+                f"chunk_rows={payload['chunk_rows']}, current config "
+                f"has {cfg.chunk_rows}; the skip count would land "
+                "mid-chunk — match chunk_rows or resume from a "
+                "boundary step")

@@ -19,15 +19,21 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Sequence
+import itertools
+import time
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.checkpoint import Checkpointer
+from repro.runtime.policy import FaultPolicy, StragglerError
+from repro.runtime.straggler import StepTimeMonitor
+
 from . import (distributed, kernel as krn, linear, multiclass, objective,
-               stats, svr)
+               resume as resume_mod, stats, svr)
 from .linear import PhiSpec, SVMData
 
 FORMULATIONS = ("LIN", "KRN")
@@ -69,6 +75,8 @@ class SVMConfig:
     k_shard_axis: str | None = None  # beyond-paper 2-D Sigma statistic
     pad_features: int | None = None  # zero-pad LIN width to a multiple
     phi_spec: PhiSpec | None = None  # Nystrom phi-space mode (NystromSVM)
+    fault: FaultPolicy | None = None  # checkpoint/retry/straggler policy
+    decay: float = 0.0           # warm-start statistic decay (stream only)
 
     def __post_init__(self):
         assert self.formulation in FORMULATIONS, self.formulation
@@ -84,6 +92,13 @@ class SVMConfig:
             and self.formulation == "LIN"), self.pad_features
         assert self.chunk_rows >= 1, self.chunk_rows
         assert self.prefetch >= 1, self.prefetch  # residency = prefetch+2
+        # decay re-weights ACCUMULATED statistics between fits — only the
+        # stream driver keeps the summed (S, b) on the host-visible path
+        # where the frozen previous-fit statistic can be folded in.
+        assert 0.0 <= self.decay < 1.0, self.decay
+        assert self.decay == 0.0 or self.driver == "stream", (
+            "decay (online warm-start statistics) requires "
+            "driver='stream'")
         # KRN x {SVR, MLT, stream} is valid CONFIGURATION now: NystromSVM
         # serves all of it through the phi-space route. Only the exact
         # N x N-Gram solver (PEMSVM) rejects those combinations, at fit
@@ -121,64 +136,84 @@ class FitResult:
     converged: bool
     n_host_syncs: int = 0           # device->host objective transfers
     peak_input_bytes: int = 0       # stream driver: max device-resident input
+    stats: dict | None = None       # effective (S, b) at the final M-step
+    #                                 (stream driver with decay > 0) — feed
+    #                                 back via fit(warm_start=result)
+    straggler_events: list = dataclasses.field(default_factory=list)
+    resumed_at: int | None = None   # completed iterations restored from
+    #                                 checkpoint (None = fresh fit)
+    n_checkpoints: int = 0          # snapshots committed during this fit
 
 
 @functools.lru_cache(maxsize=256)
 def _build_step_fn(cfg: SVMConfig, mesh: Mesh | None,
-                   data_axes: tuple, has_prior: bool):
+                   data_axes: tuple, has_prior: bool,
+                   has_live: bool = False):
     """One-iteration step function for (config, mesh). Module-level and
     lru-cached so the jit/scan caches are shared across PEMSVM instances
-    with identical configuration (SVMConfig is frozen, hence hashable)."""
+    with identical configuration (SVMConfig is frozen, hence hashable).
+
+    ``has_live`` appends a trailing liveness-vector operand (mesh path
+    only): each data shard's 0/1 weight, renormalizing the reductions
+    around dropped replicas (``stats.preduce``); all-ones is bitwise the
+    plain psum, so the mesh drivers thread it unconditionally.
+    """
     axes = data_axes if mesh is not None else ()
     common = dict(mode=cfg.algorithm, lam=cfg.lam, eps=cfg.eps,
                   jitter=cfg.jitter, axes=tuple(axes),
                   triangle=cfg.triangle_reduce, backend=cfg.backend,
                   reduce_dtype=cfg.reduce_dtype)
 
+    def _live(rest):
+        return rest[0] if rest else None
+
     if cfg.formulation == "KRN":
-        def step(data, prior, state, key):
-            return krn.krn_step(data, prior, state, key, **common)
+        def step(data, prior, state, key, *rest):
+            return krn.krn_step(data, prior, state, key,
+                                live=_live(rest), **common)
     elif cfg.phi_spec is not None:
         # Nystrom phi-space steps: the featurizer arrays (landmarks,
         # K_mm^{-1/2}) ride the replicated ``prior`` slot — the same
         # plumbing the exact-KRN Gram prior uses — so the scan driver
         # and shard_wrap carry them without a second mechanism.
         if cfg.task == "CLS":
-            def step(data, prior, state, key):
+            def step(data, prior, state, key, *rest):
                 return linear.cls_step(data, state, key,
                                        k_shard_axis=cfg.k_shard_axis,
                                        phi=prior, phi_spec=cfg.phi_spec,
-                                       **common)
+                                       live=_live(rest), **common)
         elif cfg.task == "SVR":
-            def step(data, prior, state, key):
+            def step(data, prior, state, key, *rest):
                 return svr.svr_step(data, state, key,
                                     eps_ins=cfg.eps_ins, phi=prior,
                                     k_shard_axis=cfg.k_shard_axis,
-                                    phi_spec=cfg.phi_spec, **common)
+                                    phi_spec=cfg.phi_spec,
+                                    live=_live(rest), **common)
         else:
-            def step(data, prior, state, key):
+            def step(data, prior, state, key, *rest):
                 return multiclass.mlt_step(data, state, key,
                                            num_classes=cfg.num_classes,
                                            k_shard_axis=cfg.k_shard_axis,
                                            phi=prior,
                                            phi_spec=cfg.phi_spec,
-                                           **common)
+                                           live=_live(rest), **common)
     elif cfg.task == "CLS":
-        def step(data, state, key):
+        def step(data, state, key, *rest):
             return linear.cls_step(data, state, key,
                                    k_shard_axis=cfg.k_shard_axis,
-                                   **common)
+                                   live=_live(rest), **common)
     elif cfg.task == "SVR":
-        def step(data, state, key):
+        def step(data, state, key, *rest):
             return svr.svr_step(data, state, key,
                                 k_shard_axis=cfg.k_shard_axis,
-                                eps_ins=cfg.eps_ins, **common)
+                                eps_ins=cfg.eps_ins,
+                                live=_live(rest), **common)
     else:
-        def step(data, state, key):
+        def step(data, state, key, *rest):
             return multiclass.mlt_step(data, state, key,
                                        k_shard_axis=cfg.k_shard_axis,
                                        num_classes=cfg.num_classes,
-                                       **common)
+                                       live=_live(rest), **common)
 
     if mesh is None:
         return step
@@ -188,12 +223,13 @@ def _build_step_fn(cfg: SVMConfig, mesh: Mesh | None,
     return distributed.shard_wrap(mesh, data_axes, step,
                                   state_spec=state_spec,
                                   has_prior=has_prior,
-                                  prior_spec=prior_spec)
+                                  prior_spec=prior_spec,
+                                  has_live=has_live)
 
 
 @functools.lru_cache(maxsize=256)
 def _chunk_runner(cfg: SVMConfig, mesh: Mesh | None, data_axes: tuple,
-                  has_prior: bool):
+                  has_prior: bool, has_live: bool = False):
     """Jitted scan-of-steps chunk runner for the scan driver.
 
     Runs len(its) iterations fully on device, carrying the MC sample
@@ -202,16 +238,18 @@ def _chunk_runner(cfg: SVMConfig, mesh: Mesh | None, data_axes: tuple,
     lru-cached (jit caches key on function identity) so same-config
     fits never retrace.
     """
-    step = _build_step_fn(cfg, mesh, data_axes, has_prior)
+    step = _build_step_fn(cfg, mesh, data_axes, has_prior, has_live)
     is_mc = cfg.algorithm == "MC"
 
     def body(operands, carry, it):
-        data, prior, tol_n = operands
+        data, prior, tol_n, live = operands
         (state, samp_sum, n_avg, key, prev_obj, n_small, done,
          it_done) = carry
         key, sub = jax.random.split(key)
         args = (data, prior, state, sub) if has_prior else (
             data, state, sub)
+        if has_live:
+            args = args + (live,)
         new_state, aux = step(*args)
         obj = aux["objective"]
         # Freeze every statistic once converged; the loop driver would
@@ -239,9 +277,10 @@ def _chunk_runner(cfg: SVMConfig, mesh: Mesh | None, data_axes: tuple,
                  done | conv_now, it_done)
         return carry, aux
 
-    def runner(data, prior, carry, its, tol_n):
+    def runner(data, prior, carry, its, tol_n, live=None):
         return jax.lax.scan(
-            functools.partial(body, (data, prior, tol_n)), carry, its)
+            functools.partial(body, (data, prior, tol_n, live)), carry,
+            its)
 
     return jax.jit(runner)
 
@@ -320,6 +359,228 @@ def _stream_fns(cfg: SVMConfig):
     return dict(chunk=chunk, add=add, mstep=mstep)
 
 
+class _FitRuntime:
+    """Per-fit reliability state (DESIGN.md §Reliability): fault policy,
+    checkpointer, straggler monitor, the restored resume payload, the
+    per-shard liveness vector, and the host loop's scalar state — owned
+    HERE (not in loop locals) so the stream driver's mid-pass saver sees
+    a consistent snapshot of iteration counters and histories.
+    """
+
+    def __init__(self, svm: "PEMSVM", resume_from, resume_step,
+                 warm_start, live, fault_hook):
+        cfg = svm.config
+        self.svm = svm
+        self.policy = cfg.fault or FaultPolicy()
+        self.monitor = StepTimeMonitor.from_policy(self.policy)
+        self.hook = fault_hook
+        self.events: list = []
+        self.n_checkpoints = 0
+        self.last_saved_it = 0
+        self.resumed_at: int | None = None
+        self.midpass: dict | None = None
+        self.pending_sub = None
+        self.cur_it = 0
+
+        if resume_from is not None and warm_start is not None:
+            raise ValueError(
+                "resume_from (continue THIS fit from its checkpoint) and "
+                "warm_start (start a NEW fit from a finished model) are "
+                "mutually exclusive")
+        if resume_step is not None and resume_from is None:
+            raise ValueError("resume_step without resume_from")
+
+        self.ckpt = (Checkpointer(self.policy.ckpt_dir,
+                                  keep_k=self.policy.keep_k)
+                     if self.policy.checkpoints_enabled else None)
+
+        self.payload: dict | None = None
+        if resume_from is not None:
+            src = (resume_from if isinstance(resume_from, Checkpointer)
+                   else Checkpointer(str(resume_from),
+                                     keep_k=self.policy.keep_k))
+            self.payload = resume_mod.load_snapshot(src, resume_step)
+            resume_mod.check_compatible(self.payload, cfg)
+            self.resumed_at = int(self.payload["it"])
+            if self.ckpt is None:
+                # keep committing to the directory we resumed from, so
+                # a chain of preemptions never loses progress
+                self.ckpt = src
+
+        self.warm_state = None
+        self.prev_stats: dict | None = None
+        if warm_start is not None:
+            self.warm_state = np.asarray(warm_start.last_sample,
+                                         np.float32)
+            if cfg.decay > 0.0:
+                if warm_start.stats is None:
+                    raise ValueError(
+                        "decay > 0 folds the previous fit's statistics "
+                        "into the new one, but warm_start.stats is None "
+                        "— the donor fit must itself run driver='stream' "
+                        "with decay > 0 (which populates FitResult.stats)")
+                self.prev_stats = {k: np.asarray(v)
+                                   for k, v in warm_start.stats.items()}
+        if self.payload is not None and self.payload.get("prev_stats"):
+            self.prev_stats = self.payload["prev_stats"]
+
+        self.live_dev = None
+        self._live_host: np.ndarray | None = None
+        if svm.mesh is not None:
+            n = distributed.num_shards(svm.mesh, svm.data_axes)
+            vec = np.ones((n,), np.float32)
+            if live is not None:
+                live = np.asarray(live, np.float32)
+                if live.shape != (n,):
+                    raise ValueError(
+                        f"live must be one weight per data shard, shape "
+                        f"({n},); got {live.shape}")
+                vec = live.copy()
+            self._live_host = vec
+            self._place_live()
+        elif live is not None:
+            raise ValueError("live (per-shard liveness weights) needs a "
+                             "mesh — single-device fits have no shards "
+                             "to drop")
+
+    def _place_live(self) -> None:
+        svm = self.svm
+        sh = NamedSharding(svm.mesh, P(tuple(svm.data_axes)))
+        self.live_dev = jax.device_put(self._live_host, sh)
+
+    def drop_shards(self, idxs) -> None:
+        """Zero the liveness weight of the given data shards — their
+        statistics contributions drop and the psums renormalize
+        (``stats.preduce``), the unbiased sum-statistic estimate."""
+        if self._live_host is None or not idxs:
+            return
+        for i in idxs:
+            self._live_host[int(i)] = 0.0
+        self._place_live()
+
+    # ---------------------------------------------------- host loop state
+    def init_loop(self, state0):
+        """Restore-or-init the loop scalar state; returns the initial
+        device state (restored arrays are placed through
+        ``runtime.elastic.remesh``, so a checkpoint written on one mesh
+        layout resumes onto whatever mesh this PEMSVM holds)."""
+        cfg = self.svm.config
+        p = self.payload
+        if p is not None:
+            restored = np.asarray(p["state"], np.float32)
+            if restored.shape != tuple(np.shape(state0)):
+                raise ValueError(
+                    f"checkpoint state has shape {restored.shape}, this "
+                    f"fit expects {tuple(np.shape(state0))} — same "
+                    "dataset/featurization required to resume")
+            self.key = jnp.asarray(p["key"])
+            self.it0 = int(p["it"])
+            self.objs = [float(v) for v in p["objs"]]
+            self.aux_hist = {k: list(v) for k, v in p["aux"].items()}
+            self.n_avg = int(p["n_avg"])
+            self.n_small = int(p["n_small"])
+            self.mean_w = (np.asarray(p["samp_sum"], np.float64)
+                           / self.n_avg if self.n_avg > 0 else None)
+            state = self._place_state(restored, state0)
+            if p["in_pass"]:
+                self.pending_sub = jnp.asarray(p["sub"])
+                self.midpass = {
+                    "totals": {k: jnp.asarray(v)
+                               for k, v in p["totals"].items()},
+                    "skip": int(p["chunk_idx"]),
+                    "row0": int(p["row0"]),
+                }
+        else:
+            self.key = jax.random.PRNGKey(cfg.seed)
+            self.it0 = 0
+            self.objs = []
+            self.aux_hist = {}
+            self.n_avg = 0
+            self.n_small = 0
+            self.mean_w = None
+            state = state0
+            if self.warm_state is not None:
+                if self.warm_state.shape != tuple(np.shape(state0)):
+                    raise ValueError(
+                        f"warm_start weights have shape "
+                        f"{self.warm_state.shape}, this fit expects "
+                        f"{tuple(np.shape(state0))}")
+                state = self._place_state(self.warm_state, state0)
+        self.last_saved_it = self.it0
+        return state
+
+    def _place_state(self, host_state: np.ndarray, like):
+        svm = self.svm
+        if svm.mesh is None:
+            return jnp.asarray(host_state)
+        from repro.runtime.elastic import remesh
+        spec = P(*(None,) * np.ndim(host_state))
+        return remesh(host_state, NamedSharding(svm.mesh, spec))
+
+    # -------------------------------------------------------- checkpoints
+    def samp_sum_of(self, state) -> np.ndarray:
+        if self.mean_w is not None:
+            return np.asarray(self.mean_w, np.float64) * self.n_avg
+        return np.zeros(np.shape(state), np.float64)
+
+    def boundary_due(self, it: int) -> bool:
+        return (self.ckpt is not None and self.policy.ckpt_every > 0
+                and it - self.last_saved_it >= self.policy.ckpt_every)
+
+    def save_snapshot(self, it: int, state, *, converged: bool = False,
+                      samp_sum=None, n_syncs: int | None = None,
+                      sub=None, totals: dict | None = None,
+                      chunk_idx: int = 0, row0: int = 0,
+                      blocking: bool = False) -> None:
+        if self.ckpt is None:
+            return
+        resume_mod.save_snapshot(
+            self.ckpt, self.svm.config, it=it, state=state, key=self.key,
+            samp_sum=(self.samp_sum_of(state) if samp_sum is None
+                      else samp_sum),
+            n_avg=self.n_avg, n_small=self.n_small, objs=self.objs,
+            aux_hist=self.aux_hist,
+            n_syncs=len(self.objs) if n_syncs is None else n_syncs,
+            converged=converged, prev_stats=self.prev_stats, sub=sub,
+            totals=totals, chunk_idx=chunk_idx, row0=row0,
+            blocking=blocking)
+        self.n_checkpoints += 1
+        if totals is None:
+            self.last_saved_it = it
+
+    def flush(self) -> None:
+        """Drain the async checkpoint writer at fit exit — normal OR
+        unwinding (preemption/straggler): once fit returns or raises,
+        every enqueued snapshot is committed, so the caller can resume
+        from the directory immediately without racing the writer. A
+        background write failure is recorded as an event rather than
+        raised (it must not mask the exception being unwound; the
+        on-disk state simply stays at the previous commit)."""
+        if self.ckpt is None:
+            return
+        try:
+            self.ckpt.wait()
+        except Exception as e:  # noqa: BLE001
+            self.events.append({"checkpoint_error": repr(e)})
+
+    # ---------------------------------------------------------- straggler
+    def observe(self, it: int, seconds: float) -> None:
+        if not self.monitor.observe(it, seconds):
+            return
+        self.events.append(
+            {"it": it, "seconds": float(seconds),
+             "ema": float(self.monitor.ema)})
+        pol = self.policy
+        if pol.on_straggler == "raise":
+            raise StragglerError(
+                f"iteration {it} took {seconds:.4f}s > "
+                f"{pol.straggler_threshold} x EMA "
+                f"{self.monitor.ema:.4f}s")
+        if pol.on_straggler == "drop":
+            self.drop_shards(self.svm._suspect_shards)
+            self.svm._suspect_shards.clear()
+
+
 class PEMSVM:
     """Parallel EM/MCMC SVM (paper's PEMSVM)."""
 
@@ -335,6 +596,19 @@ class PEMSVM:
         # Nystrom phi-space featurizer arrays (landmarks, K_mm^{-1/2});
         # set by NystromSVM before fit when config.phi_spec is present.
         self._phi_arrays: tuple | None = None
+        # data-shard indices a health probe has flagged; consumed by the
+        # fault policy's on_straggler='drop' reaction.
+        self._suspect_shards: set[int] = set()
+
+    def report_slow_shard(self, *shard_idx: int) -> None:
+        """Designate data-shard indices as straggler suspects. With
+        ``FaultPolicy(on_straggler='drop')``, the next straggler event
+        zeroes their liveness weight: their statistics contributions
+        drop out and every reduction renormalizes (unbiased for the
+        SVM's sum-statistics; see ``stats.preduce``). On a real
+        multi-host deployment the per-host health probe feeds this; in
+        tests the fault harness does."""
+        self._suspect_shards.update(int(i) for i in shard_idx)
 
     # ------------------------------------------------------------- fitting
     def _phi_width(self) -> int:
@@ -347,7 +621,27 @@ class PEMSVM:
         return (self._phi_arrays[1].shape[1]
                 + int(self.config.phi_spec.add_bias))
 
-    def fit(self, X: np.ndarray, y: np.ndarray) -> FitResult:
+    def fit(self, X: np.ndarray, y: np.ndarray, *,
+            resume_from=None, resume_step: int | None = None,
+            warm_start: FitResult | None = None,
+            live=None, fault_hook: Callable | None = None) -> FitResult:
+        """Fit. The keyword group is the elastic/preemption-safe surface:
+
+        ``resume_from`` (dir path or ``Checkpointer``) continues a
+        preempted fit from its last committed snapshot (``resume_step``
+        pins a specific one) — onto whatever driver/mesh THIS solver
+        holds, since checkpoints store logical host tensors
+        (``core.resume``). ``warm_start`` (a previous ``FitResult``)
+        starts a NEW fit from the donor's last sample; with
+        ``config.decay > 0`` (stream driver) the donor's statistics are
+        folded in at weight ``decay`` so fresh chunks update an existing
+        model instead of refitting from scratch. ``live`` is an initial
+        per-data-shard liveness vector (mesh only). ``fault_hook(it)``
+        is called once per completed iteration — the deterministic
+        fault-injection seam (``repro.runtime.faults``).
+        """
+        rt = _FitRuntime(self, resume_from, resume_step, warm_start,
+                         live, fault_hook)
         cfg = self.config
         X = np.asarray(X, np.float32)
         y = np.asarray(y)
@@ -362,22 +656,27 @@ class PEMSVM:
             X = pad_features_to(X, cfg.pad_features)
         N = X.shape[0]
 
-        if cfg.driver == "stream":
-            if cfg.formulation == "KRN":
-                raise NotImplementedError(
-                    "driver='stream' cannot use the exact N x N Gram "
-                    "statistic (not row-chunk-additive); use NystromSVM, "
-                    "whose phi-space route streams raw rows")
-            return self._fit_stream_arrays(X, y)
+        try:
+            if cfg.driver == "stream":
+                if cfg.formulation == "KRN":
+                    raise NotImplementedError(
+                        "driver='stream' cannot use the exact N x N Gram "
+                        "statistic (not row-chunk-additive); use "
+                        "NystromSVM, whose phi-space route streams raw "
+                        "rows")
+                return self._fit_stream_arrays(X, y, rt)
 
-        data, prior, state = self._prepare(X, y)
-        if cfg.driver == "loop":
-            step = self._build_step(prior is not None)
-            return self._fit_loop(data, prior, state, step, N)
-        return self._fit_scan(data, prior, state, N)
+            data, prior, state = self._prepare(X, y)
+            if cfg.driver == "loop":
+                step = self._build_step(prior is not None,
+                                        self.mesh is not None)
+                return self._fit_loop(data, prior, state, step, N, rt)
+            return self._fit_scan(data, prior, state, N, rt)
+        finally:
+            rt.flush()
 
     def fit_libsvm(self, path: str, n_features: int, rank: int = 0,
-                   world: int = 1) -> FitResult:
+                   world: int = 1, **fit_kw) -> FitResult:
         """Fit directly from a libsvm file.
 
         With ``driver="stream"`` the file is re-read chunk by chunk every
@@ -385,17 +684,15 @@ class PEMSVM:
         never materialized — host AND device residency are bounded by
         ``chunk_rows``. Other drivers load it resident and defer to
         ``fit``. ``rank``/``world`` stripe lines per host (paper Sec 5.6).
+        ``fit_kw`` forwards the elastic surface (resume_from /
+        warm_start / fault_hook / ...) — see ``fit``.
         """
         from repro.data import iter_libsvm, load_libsvm
 
         cfg = self.config
         if cfg.driver != "stream":
             X, y = load_libsvm(path, n_features, rank=rank, world=world)
-            return self.fit(X, y)
-        if cfg.formulation == "KRN":
-            raise NotImplementedError(
-                "driver='stream' cannot use the exact N x N Gram "
-                "statistic; use NystromSVM.fit_libsvm")
+            return self.fit(X, y, **fit_kw)
         if world > 1:
             # A rank stripe is a PARTIAL dataset; stream has no
             # cross-rank reduction (it rejects meshes), so fitting a
@@ -405,10 +702,11 @@ class PEMSVM:
                 "driver='stream' with world > 1 needs a cross-host "
                 "reduction that does not exist yet; stream the full "
                 "file (world=1) or use a resident driver on a mesh")
+        if cfg.pad_features:
+            from repro.data.pipeline import pad_features_to
         K = (self._phi_width() if cfg.phi_spec is not None
              else n_features + (1 if cfg.add_bias else 0))
         if cfg.pad_features:
-            from repro.data.pipeline import pad_features_to
             K = K + (-K) % cfg.pad_features
 
         def make_chunks():
@@ -422,7 +720,38 @@ class PEMSVM:
                     Xc = pad_features_to(Xc, cfg.pad_features)
                 yield SVMData(Xc, self._stream_target(yc, mc), mc)
 
-        return self._fit_stream(make_chunks, K)
+        return self.fit_chunks(make_chunks, K, **fit_kw)
+
+    def fit_chunks(self, make_chunks: Callable, K: int, *,
+                   resume_from=None, resume_step: int | None = None,
+                   warm_start: FitResult | None = None,
+                   fault_hook: Callable | None = None) -> FitResult:
+        """Out-of-core fit over an arbitrary restartable chunk source.
+
+        ``make_chunks()`` returns a fresh iterator of host
+        ``(X, target, mask)`` blocks with the statistic width already
+        final (bias column appended, features padded); ``K`` is that
+        width. This is the seam the fault-injection harness wraps
+        (``runtime.faults.kill_after_chunks`` etc.) and the entry point
+        ``fit_libsvm`` builds on. Loader retries, mid-pass checkpoints
+        and resume skipping compose around the factory per
+        ``config.fault``; see ``fit`` for the keyword group.
+        """
+        cfg = self.config
+        if cfg.driver != "stream":
+            raise ValueError(
+                f"fit_chunks is the stream driver's entry point; "
+                f"config.driver is {cfg.driver!r}")
+        if cfg.formulation == "KRN":
+            raise NotImplementedError(
+                "driver='stream' cannot use the exact N x N Gram "
+                "statistic; use NystromSVM (phi-space streams raw rows)")
+        rt = _FitRuntime(self, resume_from, resume_step, warm_start,
+                         None, fault_hook)
+        try:
+            return self._fit_stream(make_chunks, K, rt)
+        finally:
+            rt.flush()
 
     def _stream_target(self, y: np.ndarray, mask: np.ndarray) -> np.ndarray:
         """Validate + cast one chunk's labels (the _prepare checks,
@@ -437,7 +766,8 @@ class PEMSVM:
             assert not bad, f"CLS labels must be +-1, got extras {bad}"
         return y
 
-    def _fit_stream_arrays(self, X: np.ndarray, y: np.ndarray) -> FitResult:
+    def _fit_stream_arrays(self, X: np.ndarray, y: np.ndarray,
+                           rt: "_FitRuntime") -> FitResult:
         """driver='stream' on in-memory arrays: chunk views, zero-copy
         per pass (the out-of-core entry point is ``fit_libsvm``)."""
         cfg = self.config
@@ -453,9 +783,10 @@ class PEMSVM:
 
         K = (self._phi_width() if cfg.phi_spec is not None
              else X.shape[1])
-        return self._fit_stream(make_chunks, K)
+        return self._fit_stream(make_chunks, K, rt)
 
-    def _fit_scan(self, data, prior, state, N: int) -> FitResult:
+    def _fit_scan(self, data, prior, state, N: int,
+                  rt: "_FitRuntime") -> FitResult:
         """Chunked on-device driver (DESIGN.md §Perf).
 
         The per-iteration loop driver blocks on a device->host transfer
@@ -478,32 +809,44 @@ class PEMSVM:
         masked out, so results match the loop driver exactly: the same
         per-iteration key splits, the same update-then-check ordering,
         and the trace truncated at the converged iteration.
+
+        Reliability: resume restores the whole carry from a boundary
+        snapshot (state, key chain, f64 sample sum, stopping counters)
+        and checkpoints/straggler-observes once per host sync — the
+        chunk boundary is the natural commit point, since the carry is
+        only consistent on host there.
         """
         cfg = self.config
+        has_live = self.mesh is not None
         runner = _chunk_runner(cfg, self.mesh, tuple(self.data_axes),
-                               prior is not None)
+                               prior is not None, has_live)
         tol_n = jnp.float32(cfg.tol * N)
+        state = rt.init_loop(state)
+        objs = rt.objs
+        aux_hist = rt.aux_hist
+        # f64 host accumulator of the MC sample sum (driver-independent:
+        # the checkpoint stores mean * n_avg, which is exactly this).
+        samp_sum = rt.samp_sum_of(state)
+        n_syncs = int(rt.payload["n_syncs"]) if rt.payload else 0
         carry = (
             state,                          # current weight / sample
             jnp.zeros_like(state),          # this chunk's MC sample sum
-            jnp.int32(0),                   # total samples accumulated
-            jax.random.PRNGKey(cfg.seed),   # iteration key chain
-            jnp.float32(jnp.inf),           # previous objective
-            jnp.int32(0),                   # consecutive small-change count
+            jnp.int32(rt.n_avg),            # total samples accumulated
+            rt.key,                         # iteration key chain
+            jnp.float32(objs[-1] if objs else np.inf),  # previous objective
+            jnp.int32(rt.n_small),          # consecutive small-change count
             jnp.asarray(False),             # converged flag
             jnp.int32(0),                   # iteration convergence hit
         )
-        objs: list[float] = []
-        aux_hist: dict[str, list] = {}
-        samp_sum = np.zeros(np.shape(state), np.float64)
-        n_syncs = 0
-        it0 = 0
+        it0 = rt.it0
         converged = False
         it_done = 0
         while it0 < cfg.max_iters:
+            t0 = time.perf_counter()
             chunk = min(cfg.scan_chunk, cfg.max_iters - it0)
             its = jnp.arange(it0 + 1, it0 + chunk + 1, dtype=jnp.int32)
-            carry, aux_stack = runner(data, prior, carry, its, tol_n)
+            carry, aux_stack = runner(data, prior, carry, its, tol_n,
+                                      rt.live_dev)
             # The single per-chunk host sync: flags, the chunk's sample
             # sum, and the stacked aux trace in one transfer.
             aux_np, chunk_sum, done_np, it_done_np = jax.device_get(
@@ -519,6 +862,21 @@ class PEMSVM:
                 aux_hist.setdefault(k, []).extend(
                     float(x) for x in v[:valid])
             it0 += chunk
+            done_its = it_done if converged else it0
+            # Mirror the carry scalars into rt so snapshots see the same
+            # loop state the host-loop drivers would.
+            rt.key = carry[3]
+            rt.n_avg = int(carry[2])
+            rt.n_small = int(carry[5])
+            rt.cur_it = done_its
+            if rt.n_avg > 0:
+                rt.mean_w = samp_sum / rt.n_avg
+            if not converged and rt.boundary_due(done_its):
+                rt.save_snapshot(done_its, carry[0], samp_sum=samp_sum,
+                                 n_syncs=n_syncs)
+            if rt.hook is not None:
+                rt.hook(done_its)
+            rt.observe(done_its, time.perf_counter() - t0)
             if converged:
                 break
 
@@ -528,79 +886,115 @@ class PEMSVM:
         weights = ((samp_sum / n_avg).astype(np.float32)
                    if n_avg > 0 else last)
         self._weights = weights
+        if rt.ckpt is not None and n_iters > rt.last_saved_it:
+            rt.save_snapshot(n_iters, carry[0], converged=converged,
+                             samp_sum=samp_sum, n_syncs=n_syncs,
+                             blocking=True)
         return FitResult(weights=weights, last_sample=last, objective=objs,
                          aux_history=aux_hist, n_iters=n_iters,
-                         converged=converged, n_host_syncs=n_syncs)
+                         converged=converged, n_host_syncs=n_syncs,
+                         straggler_events=rt.events,
+                         resumed_at=rt.resumed_at,
+                         n_checkpoints=rt.n_checkpoints)
 
-    def _fit_host_loop(self, iterate) -> FitResult:
+    def _fit_host_loop(self, iterate, state0,
+                       rt: "_FitRuntime") -> FitResult:
         """Shared host-loop tail for the loop and stream drivers: key
         chain, trace bookkeeping, MC posterior averaging (f64 running
         mean) and the paper's Sec 5.5 stopping rule, in ONE place so the
         drivers cannot drift apart semantically.
 
-        ``iterate(sub_key) -> (state, aux dict, n_valid)`` runs one full
-        iteration (n_valid = valid-row count for the tol*N stopping
-        threshold; the stream driver only knows it after its first
-        pass, hence per-iteration).
+        ``iterate(sub_key, state) -> (state, aux dict, n_valid)`` runs
+        one full iteration (n_valid = valid-row count for the tol*N
+        stopping threshold; the stream driver only knows it after its
+        first pass, hence per-iteration).
+
+        Reliability (DESIGN.md §Reliability): the loop scalars live on
+        ``rt``, which restores them from a checkpoint (``init_loop``)
+        and snapshots them at the ``ckpt_every`` cadence. Per-iteration
+        order — subkey (a mid-pass resume consumes the SAVED subkey
+        instead of splitting, so the chain is exactly the uninterrupted
+        one) -> iterate -> histories/averages/stopping counters ->
+        boundary snapshot -> fault hook -> straggler observe ->
+        convergence. The snapshot precedes the hook so a simulated kill
+        at iteration k resumes from k's own commit; snapshots are async
+        (a kill racing an in-flight commit just resumes from the
+        previous boundary, which replays identical subkeys to the same
+        result).
         """
         cfg = self.config
-        key = jax.random.PRNGKey(cfg.seed)
-        objs: list[float] = []
-        aux_hist: dict[str, list] = {}
-        state = None
-        mean_w = None
-        n_avg = 0
-        n_small = 0
+        state = rt.init_loop(state0)
+        objs = rt.objs
+        aux_hist = rt.aux_hist
         converged = False
-        it = 0
-        for it in range(1, cfg.max_iters + 1):
-            key, sub = jax.random.split(key)
-            state, aux, n_valid = iterate(sub)
+        it = rt.it0
+        for it in range(rt.it0 + 1, cfg.max_iters + 1):
+            t0 = time.perf_counter()
+            if rt.pending_sub is not None:
+                sub, rt.pending_sub = rt.pending_sub, None
+            else:
+                rt.key, sub = jax.random.split(rt.key)
+            rt.cur_it = it
+            state, aux, n_valid = iterate(sub, state)
             objs.append(float(aux["objective"]))
             for k, v in aux.items():
                 aux_hist.setdefault(k, []).append(float(v))
             if cfg.algorithm == "MC" and it > cfg.burnin:
                 w_np = np.asarray(state, np.float64)
-                mean_w = w_np if mean_w is None else (
-                    mean_w * n_avg + w_np) / (n_avg + 1)
-                n_avg += 1
+                rt.mean_w = w_np if rt.mean_w is None else (
+                    rt.mean_w * rt.n_avg + w_np) / (rt.n_avg + 1)
+                rt.n_avg += 1
             # Paper Sec 5.5 stopping rule on the objective change.
             if (len(objs) >= 2
                     and abs(objs[-1] - objs[-2]) <= cfg.tol * n_valid):
-                n_small += 1
+                rt.n_small += 1
             else:
-                n_small = 0
-            if it >= cfg.min_iters and n_small >= cfg.patience:
-                if cfg.algorithm == "EM" or n_avg >= 1:
+                rt.n_small = 0
+            if rt.boundary_due(it):
+                rt.save_snapshot(it, state)
+            if rt.hook is not None:
+                rt.hook(it)
+            rt.observe(it, time.perf_counter() - t0)
+            if it >= cfg.min_iters and rt.n_small >= cfg.patience:
+                if cfg.algorithm == "EM" or rt.n_avg >= 1:
                     converged = True
                     break
 
+        if rt.ckpt is not None and it > rt.last_saved_it:
+            rt.save_snapshot(it, state, converged=converged,
+                             blocking=True)
         last = np.asarray(state, np.float32)
-        weights = (np.asarray(mean_w, np.float32)
-                   if mean_w is not None else last)
+        weights = (np.asarray(rt.mean_w, np.float32)
+                   if rt.mean_w is not None else last)
         self._weights = weights
         return FitResult(weights=weights, last_sample=last, objective=objs,
                          aux_history=aux_hist, n_iters=it,
-                         converged=converged, n_host_syncs=len(objs))
+                         converged=converged, n_host_syncs=len(objs),
+                         straggler_events=rt.events,
+                         resumed_at=rt.resumed_at,
+                         n_checkpoints=rt.n_checkpoints)
 
-    def _fit_loop(self, data, prior, state, step, N: int) -> FitResult:
+    def _fit_loop(self, data, prior, state, step, N: int,
+                  rt: "_FitRuntime") -> FitResult:
         """Per-iteration Python driver: one host sync per iteration.
 
         Kept as the semantic oracle for the scan driver (tests compare
         the two traces) and as an escape hatch for step functions whose
         aux is not scan-stackable."""
-        state_ref = state
+        has_live = self.mesh is not None
 
-        def iterate(sub):
-            nonlocal state_ref
-            args = ((data, prior, state_ref, sub) if prior is not None
-                    else (data, state_ref, sub))
-            state_ref, aux = step(*args)
-            return state_ref, aux, N
+        def iterate(sub, state):
+            args = ((data, prior, state, sub) if prior is not None
+                    else (data, state, sub))
+            if has_live:
+                args = args + (rt.live_dev,)
+            state, aux = step(*args)
+            return state, aux, N
 
-        return self._fit_host_loop(iterate)
+        return self._fit_host_loop(iterate, state, rt)
 
-    def _fit_stream(self, make_chunks, K: int) -> FitResult:
+    def _fit_stream(self, make_chunks, K: int,
+                    rt: "_FitRuntime") -> FitResult:
         """Out-of-core driver (DESIGN.md §Perf/Streaming).
 
         The paper's Fig. 1 iteration is a map-reduce over row shards:
@@ -619,6 +1013,19 @@ class PEMSVM:
         the resident drivers to fp32 reassociation tolerance for BOTH
         algorithms. One host sync per pass (the summed statistics),
         M + 1 passes per iteration for MLT.
+
+        Reliability (DESIGN.md §Reliability): the chunk source is
+        wrapped in ``retrying_chunks`` per the fault policy (flaky
+        loaders degrade to retries, restarting the source past the
+        chunks already folded); with ``ckpt_chunks > 0`` a MID-PASS
+        snapshot commits every n chunks — pre-iteration state, the
+        iteration subkey and the partial totals — and resume skips the
+        already-folded chunks and continues the same pass, bit-for-bit.
+        With ``config.decay > 0`` a warm-started fit folds the donor's
+        statistics in at weight decay each M-step (an exponentially
+        decayed window over fit generations); the loss/objective stays
+        fresh-data-only, and ``FitResult.stats`` carries the effective
+        statistics for the next generation.
         """
         cfg = self.config
         if self.mesh is not None:
@@ -626,56 +1033,121 @@ class PEMSVM:
                 "driver='stream' is single-process: on a mesh, stream "
                 "per-host shards via data_axes striping instead "
                 "(rank/world in fit_libsvm)")
-        from repro.data import ChunkPrefetcher
+        from repro.data import ChunkPrefetcher, retrying_chunks
 
         fns = _stream_fns(cfg)
         is_mlt = cfg.task == "MLT"
         if is_mlt:
-            state = jnp.zeros((cfg.num_classes, K), jnp.float32)
+            state0 = jnp.zeros((cfg.num_classes, K), jnp.float32)
         else:
-            state = jnp.zeros((K,), jnp.float32)
+            state0 = jnp.zeros((K,), jnp.float32)
         # Nystrom featurizer arrays ride along to every chunk call; the
         # raw D-wide rows are the only per-chunk host->device traffic.
         phi = (tuple(jnp.asarray(a) for a in self._phi_arrays)
                if cfg.phi_spec is not None else None)
+        pol = rt.policy
+        # Donor statistics (decay > 0 warm start): frozen for the whole
+        # fit — the window decays per fit GENERATION, not per iteration.
+        prev = (None if rt.prev_stats is None else
+                {k: jnp.asarray(v) for k, v in rt.prev_stats.items()})
+        eff_stats = None
         peak_bytes = 0
 
-        def sweep(fn):
+        def chunk_source(skip):
+            it = make_chunks()
+            return itertools.islice(it, skip, None) if skip else it
+
+        def stream(skip0):
+            """Prefetched chunk iterator starting at chunk index skip0,
+            with loader retries restarting past what already arrived."""
+            if pol.loader_retries > 0:
+                src = retrying_chunks(
+                    lambda done: chunk_source(skip0 + done),
+                    retries=pol.loader_retries,
+                    backoff=pol.loader_backoff)
+            else:
+                src = chunk_source(skip0)
+            return ChunkPrefetcher(src, depth=cfg.prefetch)
+
+        def sweep(fn, skip0=0, totals0=None, row00=0, saver=None):
             """One pass over the data: tree-sum fn(chunk, row0)
-            contributions on device (one host transfer per pass)."""
+            contributions on device (one host transfer per pass).
+            ``skip0``/``totals0``/``row00`` continue a partially-swept
+            pass (mid-pass resume); ``saver`` commits the partial totals
+            every ``ckpt_chunks`` chunks."""
             nonlocal peak_bytes
-            pf = ChunkPrefetcher(make_chunks(), depth=cfg.prefetch)
-            totals = None
-            row0 = 0
+            pf = stream(skip0)
+            totals = totals0
+            row0 = row00
+            consumed = skip0
             for chunk in pf:
                 data = SVMData(*chunk)
                 part = fn(data, jnp.int32(row0))
                 totals = part if totals is None else fns["add"](totals,
                                                                 part)
                 row0 += data.X.shape[0]
+                consumed += 1
+                if (saver is not None and pol.ckpt_chunks > 0
+                        and consumed % pol.ckpt_chunks == 0):
+                    saver(totals, consumed, row0)
             if totals is None:
                 raise ValueError("stream source yielded no chunks")
             peak_bytes = max(peak_bytes, pf.max_resident_bytes)
             return totals
 
-        def iterate(sub):
+        def iterate(sub, state):
             # One blocking device->host transfer per iteration: the
             # statistics stay on device through every sweep/solve and
             # the scalar trace comes down in a single device_get.
-            nonlocal state
+            nonlocal eff_stats
+            midpass, rt.midpass = rt.midpass, None
             if is_mlt:
+                # MLT snapshots at iteration boundaries only (a sweep
+                # is per class; a mid-sweep cursor would also need the
+                # class index — not worth the surface).
+                eff_S, eff_b = [], []
                 for y_cls in range(cfg.num_classes):
                     t = sweep(lambda d, r0, _y=jnp.int32(y_cls):
                               fns["chunk"](d, state, sub, r0, _y, phi))
-                    state = fns["mstep"](state, t["S"], t["b"], sub,
+                    S, b = t["S"], t["b"]
+                    if cfg.decay > 0.0 and prev is not None:
+                        S = S + cfg.decay * prev["S"][y_cls]
+                        b = b + cfg.decay * prev["b"][y_cls]
+                    if cfg.decay > 0.0:
+                        eff_S.append(S)
+                        eff_b.append(b)
+                    state = fns["mstep"](state, S, b, sub,
                                          jnp.int32(y_cls))
+                if cfg.decay > 0.0:
+                    eff_stats = {"S": jnp.stack(eff_S),
+                                 "b": jnp.stack(eff_b)}
                 t = sweep(lambda d, r0: fns["obj"](d, state, phi))
                 obj, mask_sum = jax.device_get(
                     (fns["obj_total"](state, t["loss"]), t["mask_sum"]))
                 aux = {"objective": float(obj)}
             else:
-                t = sweep(lambda d, r0: fns["chunk"](d, state, sub, r0,
-                                                     phi))
+                def saver(totals, consumed, row0):
+                    # Pre-iteration state + this iteration's subkey +
+                    # the partial totals: resume replays the remainder
+                    # of THIS pass on the identical chain.
+                    rt.save_snapshot(rt.cur_it - 1, state, sub=sub,
+                                     totals=totals, chunk_idx=consumed,
+                                     row0=row0)
+
+                sv = saver if rt.ckpt is not None else None
+                body = lambda d, r0: fns["chunk"](d, state, sub, r0, phi)
+                if midpass is not None:
+                    t = sweep(body, skip0=midpass["skip"],
+                              totals0=midpass["totals"],
+                              row00=midpass["row0"], saver=sv)
+                else:
+                    t = sweep(body, saver=sv)
+                if cfg.decay > 0.0:
+                    if prev is not None:
+                        t = dict(t)
+                        t["S"] = t["S"] + cfg.decay * prev["S"]
+                        t["b"] = t["b"] + cfg.decay * prev["b"]
+                    eff_stats = {"S": t["S"], "b": t["b"]}
                 state, obj_dev = fns["mstep"](t["S"], t["b"], t["loss"],
                                               sub)
                 obj, scalars = jax.device_get(
@@ -691,8 +1163,11 @@ class PEMSVM:
                     aux["n_sv"] = float(scalars["n_sv"])
             return state, aux, float(mask_sum)
 
-        result = self._fit_host_loop(iterate)
+        result = self._fit_host_loop(iterate, state0, rt)
         result.peak_input_bytes = int(peak_bytes)
+        if cfg.decay > 0.0 and eff_stats is not None:
+            result.stats = {k: np.asarray(v)
+                            for k, v in eff_stats.items()}
         return result
 
     # ------------------------------------------------------ setup helpers
@@ -764,9 +1239,9 @@ class PEMSVM:
                 self.mesh, P(*(None,) * state.ndim)))
         return data, prior, state
 
-    def _build_step(self, has_prior: bool):
+    def _build_step(self, has_prior: bool, has_live: bool = False):
         return _build_step_fn(self.config, self.mesh,
-                              tuple(self.data_axes), has_prior)
+                              tuple(self.data_axes), has_prior, has_live)
 
     # ---------------------------------------------------------- inference
     def decision_function(self, X: np.ndarray) -> np.ndarray:

@@ -17,6 +17,7 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import compat
 
@@ -53,25 +54,51 @@ def triangle_unpack(packed: jnp.ndarray, K: int) -> jnp.ndarray:
     return S + jnp.tril(S, -1).T
 
 
-def preduce(x: jnp.ndarray, axes: Sequence[str] | None) -> jnp.ndarray:
-    """psum over mesh axes when running inside shard_map; identity otherwise."""
-    if axes:
+def preduce(x: jnp.ndarray, axes: Sequence[str] | None,
+            live: jnp.ndarray | None = None) -> jnp.ndarray:
+    """psum over mesh axes when running inside shard_map; identity otherwise.
+
+    ``live`` (this shard's liveness weight, shape () or (1,)) switches to
+    the failure-tolerant renormalized reduction: sum_p live_p x_p scaled
+    by P / sum_p live_p. A dead replica (live = 0) drops out and the
+    statistic stays an unbiased estimate of the full-data sum — the SVM's
+    statistics are sums over rows, so dropping a shard and scaling is
+    exactly the bootstrap-style estimate DESIGN.md §Reliability argues
+    for. With live = 1 everywhere this is BITWISE the plain psum
+    (x * 1.0 and * (P/P) are exact), so the solver can thread it
+    unconditionally on the mesh path."""
+    if not axes:
+        return x
+    if live is None:
         return jax.lax.psum(x, tuple(axes))
-    return x
+    lv = jnp.reshape(live, ())
+    # Weight in x's dtype (liveness is 0/1 — exact even in bf16) so a
+    # reduce_dtype-compressed payload stays compressed on the wire; the
+    # den psum is one fp32 scalar.
+    num = jax.lax.psum(lv.astype(x.dtype) * x, tuple(axes))
+    den = jax.lax.psum(lv.astype(jnp.float32), tuple(axes))
+    total = float(np.prod([compat.axis_size(a) for a in axes]))
+    scale = total / jnp.maximum(den, 1.0)
+    return num * scale.astype(num.dtype)
 
 
 def masked_mean(x: jnp.ndarray, mask: jnp.ndarray,
-                axes: Sequence[str] | None) -> jnp.ndarray:
-    """Globally-reduced mean of x over valid rows (diagnostics)."""
-    num = preduce(jnp.sum(x * mask), axes)
-    den = preduce(jnp.sum(mask), axes)
+                axes: Sequence[str] | None,
+                live: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Globally-reduced mean of x over valid rows (diagnostics). The
+    ``live`` renormalization factors cancel between num and den, so the
+    dropped-shard mean is the mean over surviving rows — the right
+    diagnostic."""
+    num = preduce(jnp.sum(x * mask), axes, live)
+    den = preduce(jnp.sum(mask), axes, live)
     return num / jnp.maximum(den, 1.0)
 
 
 def reduce_stats(S: jnp.ndarray, b: jnp.ndarray,
                  axes: Sequence[str] | None,
                  triangle: bool = True,
-                 reduce_dtype: str | None = None
+                 reduce_dtype: str | None = None,
+                 live: jnp.ndarray | None = None
                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """All-reduce (Sigma^p, mu^p) across data-parallel workers.
 
@@ -88,7 +115,10 @@ def reduce_stats(S: jnp.ndarray, b: jnp.ndarray,
     reduce. CAUTION (measured, EXPERIMENTS.md §Perf A4): requires the
     gamma clamp eps >= 1e-3 — at the default 1e-6 clamp the 1/gamma
     dynamic range (1e6) exceeds bf16's 8-bit mantissa and the posterior
-    solve collapses to chance accuracy."""
+    solve collapses to chance accuracy.
+
+    ``live`` threads the failure-tolerant renormalized reduction (see
+    ``preduce``) through the fused collective."""
     if not axes:
         return S, b
 
@@ -99,17 +129,18 @@ def reduce_stats(S: jnp.ndarray, b: jnp.ndarray,
         return x.astype(jnp.float32) if reduce_dtype else x
 
     if not triangle:
-        return (uncast(preduce(maybe_cast(S), axes)),
-                uncast(preduce(maybe_cast(b), axes)))
+        return (uncast(preduce(maybe_cast(S), axes, live)),
+                uncast(preduce(maybe_cast(b), axes, live)))
     K = S.shape[0]
     fused = jnp.concatenate([triangle_pack(S), b])
-    fused = uncast(preduce(maybe_cast(fused), axes))
+    fused = uncast(preduce(maybe_cast(fused), axes, live))
     return triangle_unpack(fused[: K * (K + 1) // 2], K), fused[K * (K + 1) // 2:]
 
 
 def reduce_kshard(S_blk: jnp.ndarray, b: jnp.ndarray,
                   axes: Sequence[str] | None, k_shard_axis: str,
-                  reduce_dtype: str | None = None
+                  reduce_dtype: str | None = None,
+                  live: jnp.ndarray | None = None
                   ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Reduce the 2-D (data x model) statistic: ONE packed psum of this
     model-shard's (K, K/n) Sigma column block concatenated with b over
@@ -136,7 +167,10 @@ def reduce_kshard(S_blk: jnp.ndarray, b: jnp.ndarray,
         return x.astype(jnp.float32) if reduce_dtype else x
 
     fused = jnp.concatenate([S_blk.reshape(-1), b])
-    fused = uncast(preduce(maybe_cast(fused), axes))
+    # live is a DATA-axis weight, replicated over the model axis, so
+    # every model shard renormalizes by the same factor and the
+    # all-gathered Sigma stays consistent.
+    fused = uncast(preduce(maybe_cast(fused), axes, live))
     S_blk = fused[: K * blk].reshape(K, blk)
     b = fused[K * blk:]
     S = jax.lax.all_gather(S_blk, k_shard_axis, axis=1, tiled=True)

@@ -116,8 +116,10 @@ def svr_step(data: SVMData, w: jnp.ndarray, key: jax.Array, *,
              backend: str | None = None,
              k_shard_axis: str | None = None,
              reduce_dtype: str | None = None,
-             phi=None, phi_spec: PhiSpec | None = None):
-    """One LIN-*-SVR iteration. Returns (w_new, aux dict)."""
+             phi=None, phi_spec: PhiSpec | None = None,
+             live: jnp.ndarray | None = None):
+    """One LIN-*-SVR iteration. Returns (w_new, aux dict). ``live``
+    renormalizes the reductions around dropped replicas (stats.preduce)."""
     X, y, mask = data
     row0 = stats.shard_row_offset(X.shape[0], axes)
 
@@ -129,16 +131,16 @@ def svr_step(data: SVMData, w: jnp.ndarray, key: jax.Array, *,
         col_window=col_window)
     if k_shard_axis is None:
         S, b = stats.reduce_stats(S, b, axes, triangle=triangle,
-                                  reduce_dtype=reduce_dtype)
+                                  reduce_dtype=reduce_dtype, live=live)
     else:
         S, b = stats.reduce_kshard(S, b, axes, k_shard_axis,
-                                   reduce_dtype=reduce_dtype)
+                                   reduce_dtype=reduce_dtype, live=live)
 
     L, mu = stats.posterior_params(S, b, lam, jitter=jitter)
     w_new = mu if mode == "EM" else stats.draw_weight(key, L, mu)
 
     obj = objective.l2_reg(w_new, lam) + stats.preduce(
-        objective.svr_obj_terms(pred, y, eps_ins, mask), axes)
+        objective.svr_obj_terms(pred, y, eps_ins, mask), axes, live)
     return w_new, {"objective": obj,
-                   "gamma_mean": stats.masked_mean(gamma, mask, axes),
-                   "omega_mean": stats.masked_mean(omega, mask, axes)}
+                   "gamma_mean": stats.masked_mean(gamma, mask, axes, live),
+                   "omega_mean": stats.masked_mean(omega, mask, axes, live)}

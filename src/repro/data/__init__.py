@@ -6,4 +6,4 @@ from .synthetic import (  # noqa: F401
 from .libsvm import (iter_libsvm, load_libsvm, parse_libsvm_line,  # noqa: F401
                      save_libsvm)
 from .pipeline import (ChunkPrefetcher, ShardedBatcher,  # noqa: F401
-                       pad_features_to, reservoir_rows)
+                       pad_features_to, reservoir_rows, retrying_chunks)

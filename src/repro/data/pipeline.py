@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import Callable, Iterable, Iterator
 
 import jax
@@ -88,6 +89,50 @@ def reservoir_rows(chunks: Iterable, m: int, seed: int = 0
     return np.stack(reservoir), seen
 
 
+def retrying_chunks(factory: Callable[[int], Iterable], *,
+                    retries: int = 3, backoff: float = 0.05,
+                    retry_on: tuple = (IOError, OSError),
+                    sleep: Callable[[float], None] = time.sleep
+                    ) -> Iterator:
+    """Bounded retry + exponential backoff around a restartable chunk
+    source — how ``driver="stream"`` turns a flaky filesystem into
+    retries instead of a crash (DESIGN.md §Reliability).
+
+    ``factory(skip)`` must return a fresh iterator with the first
+    ``skip`` chunks already skipped (for a file-backed source this is a
+    re-open + fast-forward; ``itertools.islice`` over a fresh generator
+    works for any source). On a ``retry_on`` error the source is
+    re-created past the chunks already yielded, after sleeping
+    ``backoff * 2**(attempt-1)`` seconds; ``retries`` CONSECUTIVE
+    failures at the same position exhaust the budget and re-raise (a
+    success resets the count, so a loader failing every nth chunk once
+    is survivable indefinitely with retries >= 1). ``retries=0`` is
+    pass-through. Exceptions outside ``retry_on`` — including the fault
+    harness's ``SimulatedPreemption`` — propagate immediately: a
+    preemption is not a retryable IO blip.
+    """
+    yielded = 0
+    attempt = 0
+    it = None
+    while True:
+        try:
+            if it is None:     # (re)open inside the retry net: the
+                it = iter(factory(yielded))  # open itself can fail too
+            chunk = next(it)
+        except StopIteration:
+            return
+        except retry_on:
+            attempt += 1
+            if attempt > retries:
+                raise
+            sleep(backoff * (2 ** (attempt - 1)))
+            it = None
+            continue
+        attempt = 0
+        yielded += 1
+        yield chunk
+
+
 class ChunkPrefetcher:
     """Double-buffered host->device prefetch over an iterator of array
     tuples.
@@ -102,11 +147,14 @@ class ChunkPrefetcher:
     proportional to the chunk size, not the dataset
     (``max_resident_bytes`` reports the high-water mark).
 
-    Worker exceptions (e.g. a libsvm parse error mid-file) are re-raised
-    in the consumer, not swallowed in the thread.
+    Worker exceptions (e.g. a libsvm parse error mid-file) are forwarded
+    through the queue as a tagged item and re-raised at the consumer's
+    iteration site — never swallowed in the thread, and never able to
+    strand a consumer blocked on ``q.get()``.
     """
 
     _DONE = object()
+    _ERROR = object()
 
     def __init__(self, chunks: Iterable, depth: int = 2,
                  place: Callable | None = None):
@@ -132,42 +180,41 @@ class ChunkPrefetcher:
     def __iter__(self) -> Iterator:
         q: queue.Queue = queue.Queue(maxsize=self.depth)
         stop = threading.Event()
-        err: list[BaseException] = []
+
+        def put(item) -> bool:
+            # Stop-aware bounded put: never blocks forever against a
+            # consumer that stopped draining.
+            while not stop.is_set():
+                try:
+                    q.put(item, timeout=0.2)
+                    return True
+                except queue.Full:
+                    continue
+            return False
 
         def worker():
             try:
                 for arrs in self.chunks:
                     placed = self.place(arrs)
                     nbytes = self._nbytes(placed)
-                    while not stop.is_set():
-                        try:
-                            q.put((placed, nbytes), timeout=0.2)
-                            break
-                        except queue.Full:
-                            continue
-                    if stop.is_set():
+                    if not put((placed, nbytes)):
                         return
             except BaseException as e:  # noqa: BLE001 — forwarded below
-                err.append(e)
-            finally:
-                while not stop.is_set():
-                    try:
-                        q.put(self._DONE, timeout=0.2)
-                        break
-                    except queue.Full:
-                        continue
+                put((self._ERROR, e))
+            else:
+                put((self._DONE, None))
 
         t = threading.Thread(target=worker, daemon=True)
         t.start()
         resident = 0
         try:
             while True:
-                item = q.get()
+                item, payload = q.get()
                 if item is self._DONE:
-                    if err:
-                        raise err[0]
                     return
-                placed, nbytes = item
+                if item is self._ERROR:
+                    raise payload
+                placed, nbytes = item, payload
                 # The consumer holds this block while ``depth`` more sit
                 # transferred in the queue and the worker may hold one
                 # further block it placed before a full-queue put.

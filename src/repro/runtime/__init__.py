@@ -1,3 +1,9 @@
-"""Runtime control plane: straggler detection, elastic re-meshing."""
+"""Runtime control plane: fault policy, straggler detection, elastic
+re-meshing, and the deterministic fault-injection harness that proves
+the recovery paths work (DESIGN.md §Reliability)."""
 from .elastic import remesh, scale_batch_schedule  # noqa: F401
+from .faults import (SimulatedPreemption, compose_hooks,  # noqa: F401
+                     delay_chunks, delay_iterations, io_error_every_nth,
+                     kill_after_chunks, kill_at_iteration)
+from .policy import FaultPolicy, StragglerError  # noqa: F401
 from .straggler import StepTimeMonitor  # noqa: F401

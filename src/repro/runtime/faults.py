@@ -1,0 +1,128 @@
+"""Deterministic fault injection: prove resumability, don't assert it.
+
+Every reliability claim in DESIGN.md §Reliability is backed by a parity
+test that *actually kills* a fit and resumes it; this module supplies
+the deterministic killers so those tests (and ``scripts/elastic_smoke``)
+are reproducible bit-for-bit:
+
+  * ``kill_after_chunks`` — preempt the stream driver at an exact chunk
+    (the budget counts across iterations/passes, so the kill can land
+    mid-pass at any chosen chunk);
+  * ``kill_at_iteration`` / ``delay_iterations`` — ``fault_hook``
+    callables for the host-loop drivers: preempt at iteration k, or
+    inflate step k's wall time so ``StepTimeMonitor`` flags it;
+  * ``io_error_every_nth`` — a flaky loader that raises ``IOError`` a
+    fixed number of times per chunk position (bookkeeping persists
+    across re-created iterators, so bounded retry + backoff provably
+    drains past every transient failure);
+  * ``delay_chunks`` — per-chunk sleep injection, the stream driver's
+    straggler simulator.
+
+The injectors wrap *chunk factories* (zero-arg callables returning a
+fresh iterator — exactly what ``PEMSVM.fit_chunks`` consumes) or act as
+``fit(..., fault_hook=...)`` callables; they never reach into solver
+internals, so the code under test is the production path.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable, Iterator
+
+
+class SimulatedPreemption(RuntimeError):
+    """The injected stand-in for SIGKILL/eviction: raised at the exact
+    configured point; tests catch it and resume from the last committed
+    checkpoint like a restarted job would."""
+
+
+def kill_after_chunks(make_chunks: Callable[[], Iterable], n: int,
+                      exc: type = SimulatedPreemption
+                      ) -> Callable[[], Iterator]:
+    """Wrap a chunk factory with a whole-fit chunk budget: after ``n``
+    chunks have been yielded across ALL iterators the returned factory
+    ever produced, the next pull raises ``exc``. The cumulative count is
+    what lets a test kill at an arbitrary chunk of an arbitrary pass."""
+    count = [0]
+
+    def factory() -> Iterator:
+        for chunk in make_chunks():
+            if count[0] >= n:
+                raise exc(f"simulated preemption after {n} chunks")
+            count[0] += 1
+            yield chunk
+    return factory
+
+
+def kill_at_iteration(k: int, exc: type = SimulatedPreemption
+                      ) -> Callable[[int], None]:
+    """``fault_hook`` killing the fit right after iteration ``k``
+    completes (its checkpoint, if due, is already committed — matching
+    a preemption that lands between steps)."""
+    def hook(it: int) -> None:
+        if it >= k:
+            raise exc(f"simulated preemption at iteration {k}")
+    return hook
+
+
+def delay_iterations(iterations: Iterable[int], seconds: float,
+                     sleep: Callable[[float], None] = time.sleep
+                     ) -> Callable[[int], None]:
+    """``fault_hook`` inflating the wall time of the given iterations —
+    the host-loop drivers time the hook inside the step window, so
+    ``StepTimeMonitor`` sees these steps as stragglers."""
+    slow = frozenset(iterations)
+
+    def hook(it: int) -> None:
+        if it in slow:
+            sleep(seconds)
+    return hook
+
+
+def compose_hooks(*hooks: Callable[[int], None]) -> Callable[[int], None]:
+    """Run several fault hooks in order (e.g. delay then kill)."""
+    def hook(it: int) -> None:
+        for h in hooks:
+            h(it)
+    return hook
+
+
+def io_error_every_nth(make_chunks: Callable[[], Iterable], nth: int,
+                       times: int = 1) -> Callable[[], Iterator]:
+    """Flaky-loader factory: pulling chunk position ``nth-1, 2*nth-1,
+    ...`` raises ``IOError`` — ``times`` times per position, after which
+    that position succeeds forever. Failure bookkeeping is shared across
+    every iterator the factory creates, so a retrying consumer
+    (``data.pipeline.retrying_chunks``) provably drains the stream:
+    each retry replays the already-served prefix and gets one failure
+    closer to passing the flaky position."""
+    assert nth >= 1, nth
+    fails: dict[int, int] = {}
+
+    def factory() -> Iterator:
+        for i, chunk in enumerate(make_chunks()):
+            if (i + 1) % nth == 0 and fails.get(i, 0) < times:
+                fails[i] = fails.get(i, 0) + 1
+                raise IOError(
+                    f"injected loader failure at chunk {i} "
+                    f"({fails[i]}/{times})")
+            yield chunk
+    return factory
+
+
+def delay_chunks(make_chunks: Callable[[], Iterable],
+                 at_chunks: Iterable[int], seconds: float,
+                 sleep: Callable[[float], None] = time.sleep
+                 ) -> Callable[[], Iterator]:
+    """Straggler injection for the stream driver: sleeping before the
+    given cumulative chunk indices stretches the pass (and hence the
+    iteration) that consumes them."""
+    slow = frozenset(at_chunks)
+    count = [0]
+
+    def factory() -> Iterator:
+        for chunk in make_chunks():
+            if count[0] in slow:
+                sleep(seconds)
+            count[0] += 1
+            yield chunk
+    return factory

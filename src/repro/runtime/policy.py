@@ -1,0 +1,66 @@
+"""FaultPolicy: the reliability knobs a fit carries (DESIGN.md §Reliability).
+
+The paper's per-iteration sync is cheap *when all nodes are healthy*
+(Sec 4.1); at the 1000+-node scale the ROADMAP targets, preemptions,
+stragglers and flaky loaders dominate. This policy object rides on
+``SVMConfig`` (it must stay frozen/hashable — the solver lru-caches its
+jitted builders on the config) and tells the drivers how to react:
+
+  * checkpoint cadence (``ckpt_every`` iterations; the stream driver
+    additionally snapshots every ``ckpt_chunks`` chunks *inside* a pass,
+    so a multi-hour pass over a huge file is not itself the unit of
+    loss) through ``repro.checkpoint.Checkpointer`` — snapshots are
+    O(K^2/shards) statistics, never O(N) data;
+  * loader retry with exponential backoff
+    (``repro.data.pipeline.retrying_chunks``) so a flaky filesystem
+    degrades to retries instead of a crash;
+  * straggler detection thresholds feeding
+    ``repro.runtime.straggler.StepTimeMonitor`` and the reaction
+    (``on_straggler``): ``"record"`` events into the FitResult,
+    ``"drop"`` dead replicas out of the statistic via the live-weighted
+    reduction (``repro.core.distributed.live_weighted_psum`` — unbiased
+    for the SVM's sum-statistics), or ``"raise"`` a StragglerError so an
+    outer controller can re-mesh from the last checkpoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+ON_STRAGGLER = ("record", "drop", "raise")
+
+
+class StragglerError(RuntimeError):
+    """Raised by the drivers when ``on_straggler="raise"`` and a step
+    exceeds the monitor threshold — the signal for an outer controller
+    to kill the job and resume from the last committed checkpoint on a
+    healthy mesh (``PEMSVM.fit(..., resume_from=...)``)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPolicy:
+    """Reliability policy for a fit. All fields have safe defaults;
+    ``ckpt_dir=None`` disables checkpointing entirely."""
+
+    ckpt_dir: str | None = None     # directory for Checkpointer (None = off)
+    ckpt_every: int = 10            # iterations between boundary snapshots
+    ckpt_chunks: int = 0            # stream: also snapshot every n chunks
+                                    # mid-pass (0 = boundary-only)
+    keep_k: int = 3                 # committed checkpoints retained on disk
+    loader_retries: int = 3         # consecutive loader failures tolerated
+    loader_backoff: float = 0.05    # base seconds; doubles per retry
+    straggler_threshold: float = 2.5  # x EMA -> straggler event
+    straggler_warmup: int = 5       # steps ignored (compile noise)
+    on_straggler: str = "record"    # record | drop | raise
+
+    def __post_init__(self):
+        assert self.ckpt_every >= 1, self.ckpt_every
+        assert self.ckpt_chunks >= 0, self.ckpt_chunks
+        assert self.keep_k >= 1, self.keep_k
+        assert self.loader_retries >= 0, self.loader_retries
+        assert self.loader_backoff >= 0.0, self.loader_backoff
+        assert self.straggler_threshold > 1.0, self.straggler_threshold
+        assert self.on_straggler in ON_STRAGGLER, self.on_straggler
+
+    @property
+    def checkpoints_enabled(self) -> bool:
+        return self.ckpt_dir is not None

@@ -29,6 +29,13 @@ class StepTimeMonitor:
     n: int = 0
     events: list = dataclasses.field(default_factory=list)
 
+    @classmethod
+    def from_policy(cls, policy) -> "StepTimeMonitor":
+        """Build from a ``repro.runtime.policy.FaultPolicy`` — the
+        solver drivers' construction path."""
+        return cls(threshold=policy.straggler_threshold,
+                   warmup_steps=policy.straggler_warmup)
+
     def observe(self, step: int, seconds: float) -> bool:
         """Returns True if this step is a straggler event."""
         self.n += 1

@@ -57,3 +57,34 @@ def test_shape_mismatch_detected(tmp_path):
     bad = {"a": jnp.zeros((2, 2)), "b": {"c": jnp.arange(5)}}
     with pytest.raises(AssertionError):
         ck.restore(bad)
+
+
+def test_stale_tmp_swept_at_construction(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree(), blocking=True)
+    # simulate a crash mid-save: orphaned work dir, no COMMIT
+    os.makedirs(tmp_path / ".tmp_step_000000002" / "arrays")
+    ck2 = Checkpointer(str(tmp_path))
+    assert not (tmp_path / ".tmp_step_000000002").exists()
+    assert ck2.all_steps() == [1]  # committed steps untouched
+
+
+def test_restore_missing_leaf_names_it(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"a": jnp.zeros(3)}, blocking=True)
+    with pytest.raises(ValueError, match="no leaf named 'zzz'"):
+        ck.restore({"a": jnp.zeros(3), "zzz": jnp.zeros(2)})
+
+
+def test_meta_roundtrip_and_restore_named(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    meta = {"it": 7, "objs": [1.0, 0.5], "fingerprint": "xyz"}
+    ck.save(7, {"state": jnp.arange(4.0), "key": jnp.zeros(2)},
+            meta=meta, blocking=True)
+    arrays, manifest = ck.restore_named()
+    assert manifest["meta"] == meta
+    assert set(arrays) == {"state", "key"}
+    np.testing.assert_array_equal(arrays["state"], np.arange(4.0))
+    # pinned step works too
+    arrays2, m2 = ck.restore_named(step=7)
+    assert m2["step"] == 7

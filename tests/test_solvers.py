@@ -112,7 +112,9 @@ def test_linear_sanity_vs_kernel_linear(blobs):
                          max_iters=50))
     k.fit(X, y)
     agree = np.mean(lin.predict(X) == k.predict(X))
-    assert agree > 0.97, agree
+    # >=: the two formulations land exactly on 0.97 (388/400) on some
+    # BLAS/jax builds — a knife-edge strict inequality is not the claim.
+    assert agree >= 0.97, agree
 
 
 def test_stopping_rule_uses_tolN(blobs):
