@@ -18,9 +18,9 @@ def main() -> None:
 
     from . import (elastic_overhead, fig2_cores, fig34_scaling,
                    fig56_convergence, kshard_fused, mc_fused,
-                   nystrom_fused, roofline, stream_vs_resident,
-                   table5_dna, table6_svr, table7_krn, table8_mlt,
-                   table9_gram)
+                   nystrom_fused, roofline, serve_latency,
+                   stream_vs_resident, table5_dna, table6_svr,
+                   table7_krn, table8_mlt, table9_gram)
     benches = {
         "table5_dna": table5_dna.run,
         "table6_svr": table6_svr.run,
@@ -36,6 +36,7 @@ def main() -> None:
         "mc_fused": mc_fused.run,
         "kshard_fused": kshard_fused.run,
         "elastic_overhead": elastic_overhead.run,
+        "serve_latency": serve_latency.run,
     }
     only = [x for x in args.only.split(",") if x]
     failed = []

@@ -1,0 +1,172 @@
+"""Serving benchmark -> BENCH_serve.json: p50/p99 request latency and
+row throughput of the continuous-batching SVM serve loop, per model
+family, plus the acceptance gates:
+
+  * bitwise parity — bucketed served scores == the decision_function
+    oracle, bit for bit, for {CLS, SVR, MLT} x {linear, Nystrom}
+    (the fixed-tile score cell's bucket-invariance contract);
+  * phi residency — the fused score path never materializes the
+    full-batch phi / cross-Gram matrix (jaxpr walk,
+    ``serving.phi_never_materialized``);
+  * uncertainty calibration — served std matches the host
+    Sigma-quadratic-form oracle on the MC-posterior head;
+  * multi-tenant paging — N tenants over a 4-slot pager keep serving
+    bit-identically while evicting.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import PEMSVM, SVMConfig
+from repro.core.nystrom import NystromSVM
+from repro.serving import (ServeLoop, SVMScorer, WeightPager,
+                           phi_never_materialized)
+
+from .common import append_json, emit
+
+COMBOS = [("CLS", "linear"), ("SVR", "linear"), ("MLT", "linear"),
+          ("CLS", "nystrom"), ("SVR", "nystrom"), ("MLT", "nystrom")]
+
+
+def _problem(task: str, n: int, d: int, m: int = 3, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    w = rng.normal(size=d)
+    if task == "SVR":
+        y = (X @ w).astype(np.float32)
+    elif task == "MLT":
+        y = np.argmax(X @ rng.normal(size=(m, d)).T, 1).astype(np.int32)
+    else:
+        y = np.where(X @ w > 0, 1.0, -1.0).astype(np.float32)
+    return X, y
+
+
+def _fit(task: str, family: str, n: int, d: int):
+    X, y = _problem(task, n, d)
+    if family == "linear":
+        model = PEMSVM(SVMConfig(task=task, num_classes=3, max_iters=20,
+                                 min_iters=5))
+    else:
+        model = NystromSVM(
+            SVMConfig(formulation="KRN", task=task, num_classes=3,
+                      sigma=3.0, lam=0.1, max_iters=20, min_iters=5),
+            n_landmarks=48)
+    model.fit(X, y)
+    return model, X, y
+
+
+def _drive(loop: ServeLoop, name: str, X: np.ndarray, n_requests: int,
+           rows_per_req: int, seed: int = 1) -> float:
+    """Fire a ragged request stream through the synchronous drain the
+    way the threaded loop would coalesce it; returns wall seconds."""
+    rng = np.random.default_rng(seed)
+    t0 = time.perf_counter()
+    futs = []
+    for i in range(n_requests):
+        n = int(rng.integers(1, rows_per_req + 1))
+        j = int(rng.integers(0, X.shape[0] - n + 1))
+        futs.append(loop.submit(name, X[j:j + n]))
+        if (i + 1) % 8 == 0:        # continuous batching: drain every 8
+            loop.step()
+    loop.step()
+    for f in futs:
+        f.result(timeout=30)
+    return time.perf_counter() - t0
+
+
+def run(full: bool = False):
+    n, d = (20_000, 64) if full else (2_000, 24)
+    rows, failures = [], []
+
+    for task, family in COMBOS:
+        model, X, y = _fit(task, family, n, d)
+        servable = model.export_servable(name=f"{task}-{family}")
+        pager = WeightPager()
+        pager.register(servable)
+        loop = ServeLoop(pager)
+
+        # warm the bucket ladder out of the measurement
+        sc = pager.scorer(servable.name)
+        for b in (128, 256, 512, 1024):
+            sc.score(X[:b])
+
+        n_req = 200 if full else 60
+        secs = _drive(loop, servable.name, X, n_req, rows_per_req=96)
+        q = loop.latency_quantiles()
+        rows.append({"name": f"{task}-{family}", "seconds": secs,
+                     "p50_ms": round(q["p50_ms"], 3),
+                     "p99_ms": round(q["p99_ms"], 3),
+                     "rows_per_s": round(loop.n_rows / secs, 1),
+                     "n_requests": loop.n_requests,
+                     "n_batches": loop.n_batches,
+                     "traces": sc.traces})
+
+        # --- gate: bitwise parity vs the decision_function oracle ----
+        oracle = model.decision_function(X[:700])
+        served = sc.score(X[:700])
+        flat = served[:, 0] if task != "MLT" else served[:, :3]
+        bitwise = bool(np.array_equal(flat, oracle))
+        single = sc.score(X[41:42])   # 1-row request, same bits
+        one_ok = bool(np.array_equal(
+            single[:, :3] if task == "MLT" else single[:, 0],
+            oracle[41:42]))
+        if not (bitwise and one_ok):
+            failures.append(f"{task}-{family} served != oracle bitwise")
+
+        # --- gate: phi never materialized on the fused path ----------
+        resident = bool(phi_never_materialized(sc, 1024))
+        if not resident:
+            failures.append(f"{task}-{family} materializes phi")
+        rows.append({"name": f"{task}-{family}-gates", "seconds": 0.0,
+                     "bitwise_parity": bitwise and one_ok,
+                     "phi_resident_vmem_only": resident})
+
+    # --- gate: uncertainty head vs host Sigma oracle ------------------
+    model, X, y = _fit("CLS", "nystrom", n // 2, d)
+    sc = SVMScorer(model.export_servable(posterior_from=(X, y)))
+    margin, std = sc.score_with_std(X[:256])
+    phi = model._phi(X, add_bias=True).astype(np.float64)
+    w = np.asarray(model.svm._weights, np.float64)
+    cfg = model.svm.config
+    gamma = np.maximum(np.abs(1.0 - y.astype(np.float64) * (phi @ w)),
+                       cfg.eps)
+    S = (phi * (1.0 / gamma)[:, None]).T @ phi
+    P = S + cfg.lam * np.eye(S.shape[0])
+    P = 0.5 * (P + P.T) + cfg.jitter * (np.trace(P) / S.shape[0]) \
+        * np.eye(S.shape[0])
+    sol = np.linalg.solve(P, phi[:256].T)
+    std_oracle = np.sqrt(np.sum(phi[:256].T * sol, axis=0))
+    rel = float(np.max(np.abs(std - std_oracle)
+                       / np.maximum(std_oracle, 1e-12)))
+    if rel > 5e-2:
+        failures.append(f"uncertainty vs Sigma oracle rel {rel:.2e}")
+    rows.append({"name": "uncertainty-gate", "seconds": 0.0,
+                 "std_rel_err": round(rel, 6),
+                 "margin_bitwise": bool(np.array_equal(
+                     margin, model.decision_function(X[:256])))})
+
+    # --- gate: multi-tenant paging stays bit-identical ----------------
+    base, X, y = _fit("CLS", "linear", n // 2, d)
+    pager = WeightPager(max_resident=4)
+    oracle = base.decision_function(X[:300])
+    for t in range(10):
+        pager.register(base.export_servable(name=f"tenant{t}"))
+    paging_ok = True
+    for t in list(range(10)) + [0, 7, 3]:   # re-touch evicted tenants
+        out = pager.scorer(f"tenant{t}").score(X[:300])[:, 0]
+        paging_ok &= bool(np.array_equal(out, oracle))
+    if not paging_ok:
+        failures.append("tenant paging changed served bits")
+    rows.append({"name": "paging-gate", "seconds": 0.0,
+                 "tenants": 10, "resident_slots": 4,
+                 "evictions": pager.evictions,
+                 "resident_bytes": pager.resident_bytes,
+                 "bitwise_across_paging": paging_ok})
+
+    emit(rows, "serve_latency")
+    append_json(rows, "BENCH_serve.json")
+    if failures:
+        raise AssertionError(f"serve gates failed: {failures}")
+    return rows

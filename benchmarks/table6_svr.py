@@ -24,7 +24,7 @@ def run(n: int = 50_000, k: int = 90, full: bool = False):
         "LIN-EM-SVR", lam=lam_from_C(0.01), eps_ins=0.3, max_iters=100))
     res, secs = time_fit(svm.fit, Xtr, ytr)
     rows.append({"name": "LIN-EM-SVR", "seconds": secs,
-                 "rmse": round(svm.score(Xte, yte), 4),
+                 "rmse": round(svm.rmse(Xte, yte), 4),
                  "iters": res.n_iters})
 
     t0 = __import__("time").time()

@@ -29,7 +29,7 @@ def main():
     svr = PEMSVM(SVMConfig.from_options(
         "LIN-EM-SVR", lam=lam_from_C(0.01), eps_ins=0.3, max_iters=60))
     svr.fit(Xr, yr)
-    print(f"LIN-EM-SVR  rmse={svr.score(Xr, yr):.4f} (paper: 0.90 on year)")
+    print(f"LIN-EM-SVR  rmse={svr.rmse(Xr, yr):.4f} (paper: 0.90 on year)")
 
     Xm, lm = make_mnist8m_like(10_000, 128, 10)
     mlt = PEMSVM(SVMConfig.from_options(

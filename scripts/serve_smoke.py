@@ -1,0 +1,108 @@
+#!/usr/bin/env python
+"""CPU serving smoke for CI: the fused featurize-and-score path must
+serve the same bits as ``decision_function``, compile once per bucket,
+and keep phi out of HBM (DESIGN.md §Serving).
+
+Gates:
+
+  * bitwise parity — continuous-batched, bucket-padded served scores
+    equal the decision_function oracle bit for bit, for a linear and a
+    Nystrom model, including 1-row requests coalesced with large ones;
+  * no-retrace — repeat requests at a seen bucket add ZERO compilations
+    (trace counter), and a second same-config tenant reuses the cell;
+  * phi residency — the traced jaxpr of the Nystrom score cell has no
+    full-batch (bucket, m) intermediate;
+  * uncertainty — MC-posterior serving returns margin bitwise plus a
+    positive finite std from the same single dispatch.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> int:
+    import numpy as np
+
+    from repro.core import PEMSVM, SVMConfig
+    from repro.core.nystrom import NystromSVM
+    from repro.serving import ServeLoop, WeightPager, phi_never_materialized
+
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(900, 16)).astype(np.float32)
+    w = rng.normal(size=16)
+    y = np.where(X @ w > 0, 1.0, -1.0).astype(np.float32)
+
+    lin = PEMSVM(SVMConfig(max_iters=20, min_iters=5))
+    lin.fit(X, y)
+    ny = NystromSVM(SVMConfig(formulation="KRN", sigma=3.0, lam=0.1,
+                              max_iters=20, min_iters=5), n_landmarks=32)
+    ny.fit(X, y)
+
+    failures = []
+    pager = WeightPager()
+    for name, model in (("lin", lin), ("ny", ny)):
+        pager.register(model.export_servable(name=name))
+    loop = ServeLoop(pager)
+
+    # --- gate: coalesced ragged requests == oracle, bitwise ----------
+    for name, model in (("lin", lin), ("ny", ny)):
+        futs = [loop.submit(name, X[j:j + n])
+                for j, n in ((0, 1), (1, 77), (78, 130), (208, 292))]
+        loop.step()
+        served = np.concatenate([f.result(timeout=30)[:, 0] for f in futs])
+        oracle = model.decision_function(X[:500])
+        if not np.array_equal(served, oracle):
+            failures.append(f"{name}: served bits != decision_function")
+        print(f"bitwise parity [{name}]: "
+              f"{np.array_equal(served, oracle)}")
+
+    # --- gate: zero retrace at seen buckets, cell shared -------------
+    sc = pager.scorer("ny")
+    sc.score(X[:90])                    # warm the 128 bucket
+    t0 = sc.traces
+    for n in (90, 17, 128, 1, 64):      # all land in the 128 bucket
+        sc.score(X[:n])
+    retraces = sc.traces - t0
+    ny2 = NystromSVM(SVMConfig(formulation="KRN", sigma=3.0, lam=0.1,
+                               max_iters=10, min_iters=5), n_landmarks=32)
+    ny2.fit(X, y)
+    shared = pager.scorer("ny").traces
+    pager.register(ny2.export_servable(name="ny2"))
+    pager.scorer("ny2").score(X[:50])
+    shared_ok = pager.scorer("ny2").traces == shared
+    print(f"no-retrace at seen bucket: {retraces == 0} "
+          f"(new traces={retraces}); second tenant reuses cell: "
+          f"{shared_ok}")
+    if retraces:
+        failures.append(f"{retraces} retraces at a seen bucket")
+    if not shared_ok:
+        failures.append("same-config tenant recompiled the cell")
+
+    # --- gate: phi stays in VMEM -------------------------------------
+    resident = phi_never_materialized(sc, 512)
+    print(f"phi never materialized at bucket 512: {resident}")
+    if not resident:
+        failures.append("full-batch phi found in the traced jaxpr")
+
+    # --- gate: posterior head serves margin bitwise + finite std -----
+    from repro.serving import SVMScorer
+    scp = SVMScorer(lin.export_servable(posterior_from=(X, y)))
+    margin, std = scp.score_with_std(X[:200])
+    m_ok = np.array_equal(margin, lin.decision_function(X[:200]))
+    s_ok = bool(np.all(np.isfinite(std)) and np.all(std > 0))
+    print(f"posterior margin bitwise: {m_ok}; std finite>0: {s_ok}")
+    if not (m_ok and s_ok):
+        failures.append("posterior serving head broken")
+
+    if failures:
+        print(f"FAILED: {failures}")
+        return 1
+    print("serve smoke OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -69,4 +69,9 @@ class MaxMarginHead:
         return self.svm.predict(self.extract(inputs))
 
     def score(self, inputs: np.ndarray, y: np.ndarray) -> float:
+        """Higher-is-better (accuracy, or negated RMSE for SVR) —
+        see ``PEMSVM.score``."""
         return self.svm.score(self.extract(inputs), y)
+
+    def rmse(self, inputs: np.ndarray, y: np.ndarray) -> float:
+        return self.svm.rmse(self.extract(inputs), y)

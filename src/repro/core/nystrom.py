@@ -193,21 +193,50 @@ class NystromSVM:
         return self.svm.fit_libsvm(path, n_features, **fit_kw)
 
     # ---------------------------------------------------------- inference
-    def _phi(self, X: np.ndarray) -> np.ndarray:
-        """(N, m) Nyström features from the CACHED projection (no
-        eigendecomposition; host-precision oracle path)."""
+    def _phi(self, X: np.ndarray, add_bias: bool = False) -> np.ndarray:
+        """(N, m [+1]) Nyström features from the CACHED projection (no
+        eigendecomposition; host-precision oracle path).
+
+        Feature order is PINNED to the device path
+        (``kernels.ref.nystrom_phi`` / the fused kernels): the
+        phi-space bias column, when requested, is appended LAST — after
+        the projected features — and any zero-column padding would come
+        after that (the delegate config forbids ``pad_features`` with
+        ``phi_spec``, so phi width is landmark count + bias, exactly).
+        ``tests/test_svm_serving.py`` holds the parity test."""
         assert self._proj is not None, "fit first"
         K_nm = np.asarray(krn.gram_matrix(
             jnp.asarray(np.asarray(X, np.float32)),
             jnp.asarray(self._landmarks), kind=self.kernel_kind,
             sigma=self.sigma, backend=self.svm.config.backend), np.float64)
-        return (K_nm @ self._proj.astype(np.float64)).astype(np.float32)
+        phi = (K_nm @ self._proj.astype(np.float64)).astype(np.float32)
+        if add_bias:
+            phi = np.concatenate(
+                [phi, np.ones((phi.shape[0], 1), np.float32)], axis=1)
+        return phi
+
+    def export_servable(self, *, name: str = "svm",
+                        posterior_from: tuple | None = None):
+        """Freeze into a ``serving.ServableModel`` (fused Nystrom score
+        cell; ``posterior_from=(X, y)`` adds the phi-space posterior
+        uncertainty columns — exact here, since the phi-space prior is
+        lam^{-1} I). See ``PEMSVM.export_servable``."""
+        return self.svm.export_servable(name=name,
+                                        posterior_from=posterior_from)
+
+    def scorer(self):
+        """Cached device-resident ``serving.SVMScorer`` (see
+        ``PEMSVM.scorer``)."""
+        return self.svm.scorer()
 
     def predict(self, X: np.ndarray) -> np.ndarray:
         return self.svm.predict(np.asarray(X, np.float32))
 
     def decision_function(self, X: np.ndarray) -> np.ndarray:
         return self.svm.decision_function(np.asarray(X, np.float32))
+
+    def rmse(self, X: np.ndarray, y: np.ndarray) -> float:
+        return self.svm.rmse(np.asarray(X, np.float32), y)
 
     def score(self, X: np.ndarray, y: np.ndarray) -> float:
         return self.svm.score(np.asarray(X, np.float32), y)

@@ -596,6 +596,14 @@ class PEMSVM:
         # Nystrom phi-space featurizer arrays (landmarks, K_mm^{-1/2});
         # set by NystromSVM before fit when config.phi_spec is present.
         self._phi_arrays: tuple | None = None
+        # Raw request width D (pre-bias, pre-pad) — recorded at fit so
+        # the serving export can validate request shapes.
+        self._n_features: int | None = None
+        # (source arrays, SVMScorer) — the device-resident scorer is
+        # built once per fitted model; identity of the source arrays is
+        # the invalidation key (a refit assigns new objects, and the
+        # cache holds the old ones alive so ids cannot be recycled).
+        self._scorer_cache: tuple | None = None
         # data-shard indices a health probe has flagged; consumed by the
         # fault policy's on_straggler='drop' reaction.
         self._suspect_shards: set[int] = set()
@@ -645,6 +653,7 @@ class PEMSVM:
         cfg = self.config
         X = np.asarray(X, np.float32)
         y = np.asarray(y)
+        self._n_features = X.shape[1]
         if cfg.add_bias and cfg.formulation == "LIN":
             X = np.concatenate([X, np.ones((X.shape[0], 1), np.float32)], 1)
         if cfg.pad_features:
@@ -704,6 +713,7 @@ class PEMSVM:
                 "file (world=1) or use a resident driver on a mesh")
         if cfg.pad_features:
             from repro.data.pipeline import pad_features_to
+        self._n_features = n_features
         K = (self._phi_width() if cfg.phi_spec is not None
              else n_features + (1 if cfg.add_bias else 0))
         if cfg.pad_features:
@@ -1244,31 +1254,143 @@ class PEMSVM:
                               tuple(self.data_axes), has_prior, has_live)
 
     # ---------------------------------------------------------- inference
-    def decision_function(self, X: np.ndarray) -> np.ndarray:
+    def export_servable(self, *, name: str = "svm",
+                        posterior_from: tuple | None = None):
+        """Freeze this fitted model into a ``serving.ServableModel`` —
+        the serving path's whole view of it (no reaching back into
+        ``_weights``/``_train_X``/``_phi_arrays``).
+
+        The exact-KRN model rides the SAME fused Nystrom score cell:
+        landmarks are the train rows, the projection is the dual weight
+        column omega[:, None], and the score weight is [[1.]] — so
+        score = k(X, X_train) @ omega with the cross-Gram tile never
+        leaving VMEM.
+
+        ``posterior_from=(X, y)`` appends the MC-posterior uncertainty
+        directions U = L^{-T} as extra weight columns (one E-step at
+        the fitted weights rebuilds (S, b); L = chol(lam I + S)), so a
+        scorer serves margin +- calibrated std in one dispatch
+        (``SVMScorer.score_with_std``).
+        """
+        from repro.serving.svm_serve import ServableModel
+
         cfg = self.config
-        w = jnp.asarray(self._weights)
-        X = np.asarray(X, np.float32)
+        assert self._weights is not None, "fit first"
+        w = np.asarray(self._weights, np.float32)
+        task = cfg.task.lower()
         if cfg.formulation == "KRN":
-            f = krn.decision_function(
-                w[: self._train_X.shape[0]], jnp.asarray(self._train_X),
-                jnp.asarray(X), kind=cfg.kernel, sigma=cfg.sigma,
-                backend=cfg.backend)
-            return np.asarray(f)
-        if cfg.phi_spec is not None:
-            from repro.kernels import ops
-            landmarks, proj = (jnp.asarray(a) for a in self._phi_arrays)
-            X = ops.nystrom_phi(
-                jnp.asarray(X), landmarks, proj, None,
-                sigma=cfg.phi_spec.sigma, kind=cfg.phi_spec.kind,
-                add_bias=cfg.phi_spec.add_bias, backend=cfg.backend)
-        elif cfg.add_bias:
-            X = np.concatenate([X, np.ones((X.shape[0], 1), np.float32)], 1)
-        if cfg.pad_features:
-            from repro.data.pipeline import pad_features_to
-            X = pad_features_to(np.asarray(X), cfg.pad_features)
+            if posterior_from is not None:
+                raise NotImplementedError(
+                    "posterior serving for the exact-Gram model needs "
+                    "the kernel prior precision; fit NystromSVM, whose "
+                    "phi-space posterior is lam^{-1} I exactly")
+            ntrain = self._train_X.shape[0]
+            return ServableModel(
+                task=task, weights=np.ones((1, 1), np.float32),
+                n_outputs=1, n_features=self._train_X.shape[1],
+                landmarks=self._train_X, proj=w[:ntrain, None],
+                phi_kind=cfg.kernel, phi_sigma=cfg.sigma,
+                phi_add_bias=False, backend=cfg.backend, name=name)
         if cfg.task == "MLT":
-            return np.asarray(jnp.asarray(X) @ w.T)
-        return np.asarray(linear.decision_function(w, jnp.asarray(X)))
+            W, n_out = np.ascontiguousarray(w.T), cfg.num_classes
+        else:
+            W, n_out = w[:, None], 1
+        if posterior_from is not None:
+            U = self._posterior_columns(*posterior_from)
+            W = np.concatenate([W, U], axis=1)
+        if cfg.phi_spec is not None:
+            lm, pj = self._phi_arrays
+            return ServableModel(
+                task=task, weights=W, n_outputs=n_out,
+                n_features=lm.shape[1], landmarks=lm, proj=pj,
+                phi_kind=cfg.phi_spec.kind, phi_sigma=cfg.phi_spec.sigma,
+                phi_add_bias=cfg.phi_spec.add_bias, backend=cfg.backend,
+                name=name)
+        D = self._n_features
+        if D is None:
+            if cfg.pad_features:
+                raise ValueError(
+                    "raw feature width unknown (fit_chunks with "
+                    "pad_features); set svm._n_features or fit via "
+                    "fit/fit_libsvm")
+            D = W.shape[0] - int(cfg.add_bias)
+        expect = D + int(cfg.add_bias)
+        if cfg.pad_features:
+            expect += (-expect) % cfg.pad_features
+        assert expect == W.shape[0], (
+            f"recorded request width {D} preps to {expect} columns but "
+            f"the fitted weights have {W.shape[0]}")
+        return ServableModel(task=task, weights=W, n_outputs=n_out,
+                             n_features=D, add_bias=cfg.add_bias,
+                             backend=cfg.backend, name=name)
+
+    def _posterior_columns(self, X: np.ndarray, y: np.ndarray
+                           ) -> np.ndarray:
+        """U = L^{-T} (Kfit, Kfit) f32: the uncertainty directions of
+        the weight posterior N(mu, P^{-1}) at the FITTED weights — one
+        E-step over (X, y) rebuilds the sufficient statistic S, then
+        P = lam I + S (+ the config's relative jitter, mirroring
+        ``stats.posterior_params``) and L = chol(P). Served std is
+        ||phi U|| = sqrt(phi^T P^{-1} phi)."""
+        from repro.kernels import ops
+
+        cfg = self.config
+        if cfg.task == "MLT":
+            raise NotImplementedError(
+                "MLT posterior columns need per-class statistics; "
+                "export per-class binary models instead")
+        X = np.asarray(X, np.float32)
+        if cfg.phi_spec is not None:
+            lm, pj = (jnp.asarray(a, jnp.float32)
+                      for a in self._phi_arrays)
+            Xp = ops.nystrom_phi(
+                jnp.asarray(X), lm, pj, None, sigma=cfg.phi_spec.sigma,
+                kind=cfg.phi_spec.kind, add_bias=cfg.phi_spec.add_bias,
+                backend=cfg.backend)
+        else:
+            if cfg.add_bias:
+                X = np.concatenate(
+                    [X, np.ones((X.shape[0], 1), np.float32)], 1)
+            if cfg.pad_features:
+                from repro.data.pipeline import pad_features_to
+                X = pad_features_to(X, cfg.pad_features)
+            Xp = jnp.asarray(X)
+        yf = jnp.asarray(np.asarray(y, np.float32))
+        beta = yf if cfg.task == "CLS" else jnp.zeros_like(yf)
+        epi = "em_hinge" if cfg.task == "CLS" else "em_svr"
+        out = ops.fused_stats(Xp, yf, beta, jnp.asarray(self._weights),
+                              None, None, epilogue=epi, eps=cfg.eps,
+                              eps_ins=cfg.eps_ins, backend=cfg.backend)
+        S = np.asarray(out[-1], np.float64)
+        K = S.shape[0]
+        P = S + cfg.lam * np.eye(K)
+        P = 0.5 * (P + P.T)
+        P += (cfg.jitter * np.trace(P) / K) * np.eye(K)
+        L = np.linalg.cholesky(P)
+        return np.linalg.solve(L, np.eye(K)).T.astype(np.float32)
+
+    def scorer(self):
+        """The device-resident ``serving.SVMScorer`` for this fitted
+        model, built ONCE per fit: weights/featurizer arrays are
+        device-put at construction and every ``decision_function`` /
+        ``predict`` call reuses them (no per-call host->device
+        re-upload, no re-jit — the no-retrace regression tests gate
+        this). A refit assigns new source arrays, which invalidates
+        the cache by identity."""
+        from repro.serving.svm_serve import SVMScorer
+
+        src = (self._weights, self._train_X, self._phi_arrays)
+        if (self._scorer_cache is None
+                or any(a is not b
+                       for a, b in zip(self._scorer_cache[0], src))):
+            self._scorer_cache = (src, SVMScorer(self.export_servable()))
+        return self._scorer_cache[1]
+
+    def decision_function(self, X: np.ndarray) -> np.ndarray:
+        X = np.asarray(X, np.float32)
+        if self._n_features is None:  # fit_chunks-direct fits
+            self._n_features = X.shape[1]
+        return self.scorer().margins(X)
 
     def predict(self, X: np.ndarray) -> np.ndarray:
         f = self.decision_function(X)
@@ -1278,8 +1400,19 @@ class PEMSVM:
             return f
         return np.where(f >= 0, 1, -1)
 
-    def score(self, X: np.ndarray, y: np.ndarray) -> float:
+    def rmse(self, X: np.ndarray, y: np.ndarray) -> float:
+        """Root-mean-square prediction error (SVR)."""
+        assert self.config.task == "SVR", "rmse is the SVR error metric"
         pred = self.predict(X)
+        return float(np.sqrt(np.mean(
+            (pred - np.asarray(y, np.float32)) ** 2)))
+
+    def score(self, X: np.ndarray, y: np.ndarray) -> float:
+        """HIGHER IS BETTER for every task: accuracy for CLS/MLT and
+        *negated* RMSE for SVR (use ``rmse`` for the raw error). The
+        old behavior returned raw RMSE here, silently inverting the
+        ordering for callers comparing scores across tasks."""
         if self.config.task == "SVR":
-            return float(np.sqrt(np.mean((pred - np.asarray(y)) ** 2)))
+            return -self.rmse(X, y)
+        pred = self.predict(X)
         return float(np.mean(pred == np.asarray(y)))

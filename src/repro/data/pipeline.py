@@ -26,7 +26,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
-def pad_features_to(X: np.ndarray, multiple: int) -> np.ndarray:
+def pad_features_to(X: np.ndarray, multiple: int | None = None, *,
+                    width: int | None = None) -> np.ndarray:
     """Zero-pad the FEATURE (last) dimension of a row block so its
     width divides ``multiple`` — the explicit route to a k_shard-
     divisible statistic width (``core/linear._k_block`` refuses
@@ -34,16 +35,30 @@ def pad_features_to(X: np.ndarray, multiple: int) -> np.ndarray:
     ``SVMConfig.pad_features`` plumbs this per-fit so callers need not
     pre-pad datasets by hand).
 
+    ``width=`` instead pads to an ABSOLUTE target width (the serving
+    prep mode: requests must widen to the model's fitted width, never
+    narrow) and REFUSES a target below the current width — slicing
+    features off would silently change every score, so it is an error,
+    not a truncation.
+
     Zero columns are exact no-ops for every statistic in this package:
     their Sigma rows/columns and b entries are zero, the ridge pins
     their weights to 0, and predictions are unchanged. Accepts numpy or
-    jax arrays (returns the matching kind); width already divisible is
-    an identity.
+    jax arrays (returns the matching kind); width already divisible (or
+    already equal to ``width``) is an identity.
     """
-    if multiple is None or multiple <= 1:
-        return X
     K = X.shape[-1]
-    pad = (-K) % multiple
+    if width is not None:
+        assert multiple is None, "pass either multiple or width, not both"
+        if width < K:
+            raise ValueError(
+                f"target width {width} is below the current feature "
+                f"width {K}; refusing to slice columns off")
+        pad = width - K
+    else:
+        if multiple is None or multiple <= 1:
+            return X
+        pad = (-K) % multiple
     if pad == 0:
         return X
     widths = [(0, 0)] * (X.ndim - 1) + [(0, pad)]

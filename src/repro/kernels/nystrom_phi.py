@@ -93,6 +93,31 @@ def _make_phi_kernel(kind: str, inv_two_sigma_sq: float,
     return _kernel
 
 
+def _make_score_kernel(kind: str, inv_two_sigma_sq: float,
+                       bias_col: int | None):
+    """The *scoring* epilogue (serving): phi tile -> margin columns.
+
+    Instead of accumulating (b, Sigma) like the fit-time epilogues, the
+    per-tile phi feeds one MXU matmul against the resident (Wp, Cp)
+    weight block — C score columns per row (one per tenant/class/
+    uncertainty direction) — and phi dies in VMEM. This is predict-time
+    single-stream: X is read once and the only HBM write is the (bn, Cp)
+    score tile."""
+    def _kernel(x_ref, lm_ref, pj_ref, mask_ref, w_ref, out_ref):
+        phi = _phi_tile(
+            x_ref[...].astype(jnp.float32),
+            lm_ref[...].astype(jnp.float32),
+            pj_ref[...].astype(jnp.float32),
+            mask_ref[...].astype(jnp.float32),
+            kind=kind, inv_two_sigma_sq=inv_two_sigma_sq,
+            bias_col=bias_col)
+        out_ref[...] = jax.lax.dot_general(
+            phi, w_ref[...].astype(jnp.float32),
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    return _kernel
+
+
 def _make_fused_kernel(kind: str, inv_two_sigma_sq: float,
                        bias_col: int | None, epilogue: str, eps: float,
                        eps_ins: float, n_noise: int, n_aug: int,
@@ -198,6 +223,50 @@ def nystrom_phi(X: jnp.ndarray, landmarks: jnp.ndarray, proj: jnp.ndarray,
         interpret=interpret,
     )(X, landmarks, proj, mask.reshape(Np, 1))
     return out[:N, :M]
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "kind", "add_bias",
+                                             "block_n", "interpret"))
+def nystrom_score(X: jnp.ndarray, landmarks: jnp.ndarray,
+                  proj: jnp.ndarray, W: jnp.ndarray,
+                  mask: jnp.ndarray | None = None, *, sigma: float = 1.0,
+                  kind: str = "rbf", add_bias: bool = False,
+                  block_n: int = 256,
+                  interpret: bool = False) -> jnp.ndarray:
+    """scores = nystrom_phi(X, ...) @ W — (N, C) f32, phi never in HBM.
+
+    The predict-side counterpart of ``nystrom_fused_stats``: the same
+    in-VMEM phi tile, but the epilogue is a matmul against a (M, C)
+    multi-output weight block (C = tenants x classes x uncertainty
+    directions) instead of the Sigma accumulation. Masked rows score 0
+    in every column. One X stream; HBM traffic is X in + (N, C) out.
+    """
+    N, D = X.shape
+    MW, C = W.shape
+    bn = min(block_n, _round_up(N, 8))
+    X, landmarks, proj, mask, Np, Wp, M = _pad_operands(
+        X, landmarks, proj, mask, add_bias, bn)
+    assert MW == M, (
+        f"W rows ({MW}) must equal the phi width "
+        f"(proj cols + add_bias = {M})")
+    Cp = _round_up(C, 128)
+    Wmat = jnp.pad(W.astype(jnp.float32), ((0, Wp - M), (0, Cp - C)))
+    out = pl.pallas_call(
+        _make_score_kernel(kind, 1.0 / (2.0 * float(sigma) ** 2),
+                           M - 1 if add_bias else None),
+        grid=(Np // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, X.shape[1]), lambda n: (n, 0)),
+            pl.BlockSpec(landmarks.shape, lambda n: (0, 0)),
+            pl.BlockSpec(proj.shape, lambda n: (0, 0)),
+            pl.BlockSpec((bn, 1), lambda n: (n, 0)),
+            pl.BlockSpec(Wmat.shape, lambda n: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, Cp), lambda n: (n, 0)),
+        out_shape=jax.ShapeDtypeStruct((Np, Cp), jnp.float32),
+        interpret=interpret,
+    )(X, landmarks, proj, mask.reshape(Np, 1), Wmat)
+    return out[:N, :C]
 
 
 @functools.partial(jax.jit, static_argnames=("sigma", "kind", "add_bias",

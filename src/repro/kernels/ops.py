@@ -289,6 +289,45 @@ def nystrom_phi(X: jnp.ndarray, landmarks: jnp.ndarray, proj: jnp.ndarray,
                            add_bias)
 
 
+def nystrom_score_fits(n_landmarks: int, n_features: int,
+                       n_score_cols: int, add_bias: bool = False,
+                       block_n: int = 256) -> bool:
+    """Whether the fused scoring epilogue's working set fits VMEM: the
+    featurize-only set plus the resident (Wp, Cp) weight block and the
+    (bn, Cp) score tile (serving's only HBM write)."""
+    if n_landmarks > NYSTROM_FUSED_MAX_M:
+        return False
+    Wp = _ru(n_landmarks + int(add_bias), 128)
+    Cp = _ru(n_score_cols, 128)
+    words = (_nystrom_vmem_words(n_landmarks, n_features, add_bias,
+                                 block_n, False)
+             + Wp * Cp + block_n * Cp)
+    return 4 * words <= _NYSTROM_VMEM_BUDGET
+
+
+def nystrom_score(X: jnp.ndarray, landmarks: jnp.ndarray,
+                  proj: jnp.ndarray, W: jnp.ndarray,
+                  mask: jnp.ndarray | None = None, *,
+                  sigma: float = 1.0, kind: str = "rbf",
+                  add_bias: bool = False,
+                  backend: str | None = None, **kw) -> jnp.ndarray:
+    """(N, C) scores = nystrom_phi(X, ...) @ W in one fused pass — the
+    predict-side epilogue: phi stays a per-row-block VMEM tile and dies
+    after one MXU matmul against the resident (M, C) weight block, so
+    serving never materializes the (N, M) feature matrix in HBM. C
+    columns carry tenants/classes/uncertainty directions. Oversized
+    working sets fall back to featurize-then-matmul (ref oracle)."""
+    backend = _resolve(backend)
+    if backend != "ref" and nystrom_score_fits(
+            landmarks.shape[0], X.shape[1], W.shape[1], add_bias,
+            kw.get("block_n", 256)):
+        return _nystrom_phi.nystrom_score(
+            X, landmarks, proj, W, mask, sigma=float(sigma), kind=kind,
+            add_bias=add_bias, interpret=(backend == "interpret"), **kw)
+    return ref.nystrom_score(X, landmarks, proj, W, mask, float(sigma),
+                             kind, add_bias)
+
+
 def nystrom_fused_stats(X: jnp.ndarray, landmarks: jnp.ndarray,
                         proj: jnp.ndarray, rho: jnp.ndarray,
                         beta: jnp.ndarray, wvec: jnp.ndarray,

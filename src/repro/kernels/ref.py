@@ -124,6 +124,17 @@ def nystrom_phi(X: jnp.ndarray, landmarks: jnp.ndarray, proj: jnp.ndarray,
     return phi * maskv
 
 
+def nystrom_score(X: jnp.ndarray, landmarks: jnp.ndarray,
+                  proj: jnp.ndarray, W: jnp.ndarray,
+                  mask: jnp.ndarray | None, sigma: float, kind: str,
+                  add_bias: bool) -> jnp.ndarray:
+    """Oracle for the fused scoring epilogue (serving): (N, C) f32
+    scores = nystrom_phi(X, ...) @ W — C score columns per row (one per
+    tenant/class/uncertainty direction). Masked rows score 0."""
+    phi = nystrom_phi(X, landmarks, proj, mask, sigma, kind, add_bias)
+    return phi @ W.astype(jnp.float32)
+
+
 def nystrom_fused_stats(X: jnp.ndarray, landmarks: jnp.ndarray,
                         proj: jnp.ndarray, rho: jnp.ndarray,
                         beta: jnp.ndarray, wvec: jnp.ndarray,

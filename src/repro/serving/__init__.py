@@ -1,2 +1,4 @@
-"""Serving substrate: prefill/decode steps, samplers."""
+"""Serving substrate: LM prefill/decode steps + the SVM scoring path."""
 from .serve_step import generate, make_decode_step, make_prefill_step  # noqa: F401
+from .svm_serve import (DEFAULT_TILE, ServableModel, ServeLoop,  # noqa: F401
+                        SVMScorer, WeightPager, phi_never_materialized)

@@ -1,0 +1,487 @@
+"""SVM serving: fused featurize-and-score with continuous batching.
+
+The predict-side analogue of the fit-time campaign (ROADMAP: production
+serving path). A fitted model exports a frozen :class:`ServableModel`;
+an :class:`SVMScorer` holds its arrays device-resident and scores
+requests through a jit-compiled, shape-bucketed *score cell*;
+:class:`WeightPager` LRU-pages many tenant models over a shared cell
+family; :class:`ServeLoop` decouples request intake from device compute
+(continuous batching: coalesce -> bucket-pad -> one dispatch -> split).
+
+Bitwise bucket invariance — the load-bearing design decision
+------------------------------------------------------------
+XLA's CPU matmul is NOT bitwise stable across row counts: scoring 700
+rows and slicing the first 700 of a 1000-row dispatch differ in low
+bits, which would make served scores depend on which bucket a request
+landed in. It IS bitwise stable at a fixed shape, regardless of row
+position and of what the other rows contain. So every score cell
+computes over fixed ``(tile, .)`` row tiles via ``lax.map``: any bucket
+dispatches the identical per-tile computation, and a request's scores
+are bit-identical whether it rides a 128-bucket alone or the tail of a
+1024-bucket batch — the parity gate in ``benchmarks/serve_latency.py``
+checks exactly this against the ``decision_function`` oracle (itself
+routed through the same cell, satellite: no cold re-upload per call).
+The feature width is pinned per model (``ServableModel.weights`` rows),
+since zero-padding columns is also not bitwise neutral.
+
+The Nystrom family runs ``ops.nystrom_score`` per tile — the *scoring*
+epilogue of the fused featurizer: the phi tile lives in VMEM, feeds one
+MXU matmul against the resident (M, C) weight block, and dies; the
+(N, M) feature matrix never exists in HBM at predict time either
+(``phi_never_materialized`` walks the traced jaxpr to prove it). C
+score columns carry tenants/classes and, in MC-posterior mode, the
+uncertainty directions: with U = L^{-T} from the Cholesky factor of the
+posterior precision P = lam I + S, ``std(margin) = ||phi U||`` row-wise
+— margin +- calibrated uncertainty is the same single fused dispatch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from collections import OrderedDict
+from concurrent.futures import Future
+from typing import Callable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+DEFAULT_TILE = 128
+
+# One compiled score cell per static configuration, shared by every
+# tenant model with that configuration (the weight-paging contract:
+# weights are runtime operands, not closure constants). TRACE_COUNTS
+# increments inside the cell body — a Python side effect that runs only
+# when jax traces, so it counts compilations, not calls (the no-retrace
+# regression tests key off it).
+_CELL_CACHE: dict[tuple, Callable] = {}
+TRACE_COUNTS: dict[tuple, int] = {}
+
+
+def _get_cell(key: tuple) -> Callable:
+    """jit-compiled score cell for a static config key.
+
+    linear key:  ("linear", add_bias, tile)
+                 cell(X (B, D), mask (B,), W (Kfit, C)) -> (B, C)
+                 in-cell prep mirrors fit: bias column (= mask, the
+                 stream driver's own convention) appended FIRST, then
+                 zero columns up to Kfit (the pad_features width).
+    nystrom key: ("nystrom", kind, sigma, phi_add_bias, tile, backend)
+                 cell(X, mask, W (M, C), lm, pj) -> (B, C)
+                 per-tile ops.nystrom_score — phi in VMEM only.
+    """
+    if key in _CELL_CACHE:
+        return _CELL_CACHE[key]
+    family = key[0]
+    if family == "linear":
+        _, add_bias, tile = key
+
+        def cell(X, mask, W):
+            TRACE_COUNTS[key] = TRACE_COUNTS.get(key, 0) + 1
+            B, D = X.shape
+            Kfit, C = W.shape
+            pad = Kfit - (D + int(add_bias))
+            if pad < 0:
+                raise ValueError(
+                    f"request feature width {D} (+bias={add_bias}) "
+                    f"exceeds the model's fitted width {Kfit}")
+
+            def one(args):
+                x, m = args
+                xb = (jnp.concatenate([x, m[:, None]], axis=1)
+                      if add_bias else x)
+                if pad:
+                    xb = jnp.pad(xb, ((0, 0), (0, pad)))
+                return (xb @ W) * m[:, None]
+
+            out = jax.lax.map(
+                one, (X.reshape(B // tile, tile, D),
+                      mask.reshape(B // tile, tile)))
+            return out.reshape(B, C)
+    else:
+        _, kind, sigma, phi_add_bias, tile, backend = key
+
+        def cell(X, mask, W, lm, pj):
+            TRACE_COUNTS[key] = TRACE_COUNTS.get(key, 0) + 1
+            B, D = X.shape
+
+            def one(args):
+                x, m = args
+                return ops.nystrom_score(
+                    x, lm, pj, W, m, sigma=sigma, kind=kind,
+                    add_bias=phi_add_bias, backend=backend,
+                    block_n=tile)
+
+            out = jax.lax.map(
+                one, (X.reshape(B // tile, tile, D),
+                      mask.reshape(B // tile, tile)))
+            return out.reshape(B, W.shape[1])
+
+    _CELL_CACHE[key] = jax.jit(cell)
+    TRACE_COUNTS.setdefault(key, 0)
+    return _CELL_CACHE[key]
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ServableModel:
+    """Frozen, host-side export of a fitted SVM — everything serving
+    needs, nothing it doesn't (replaces reaching into the solver's
+    ``_weights``/``_train_X``/``_phi_arrays`` plumbing).
+
+    ``weights`` is (Kfit, C) float32: columns [0, n_outputs) are margin
+    directions (1, or num_classes for MLT); any remaining columns are
+    the posterior uncertainty directions U = L^{-T} (MC mode), so
+    ``std(margin) = ||phi @ U||`` row-wise. ``landmarks``/``proj``
+    present selects the fused Nystrom score cell (this also carries the
+    exact-KRN model: landmarks = train rows, proj = omega[:, None],
+    weights = [[1.]]); absent selects the linear cell, whose in-cell
+    prep appends the bias column and pads to Kfit.
+    """
+    task: str                       # "cls" | "svr" | "mlt"
+    weights: np.ndarray             # (Kfit, C) f32, margin cols first
+    n_outputs: int                  # margin columns (1 or num_classes)
+    n_features: int                 # raw request width D
+    add_bias: bool = False          # linear-cell bias column
+    landmarks: np.ndarray | None = None
+    proj: np.ndarray | None = None
+    phi_kind: str = "rbf"
+    phi_sigma: float = 1.0
+    phi_add_bias: bool = False
+    backend: str | None = None
+    name: str = "svm"
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "weights", np.asarray(self.weights, np.float32))
+        assert self.weights.ndim == 2 and \
+            self.n_outputs <= self.weights.shape[1]
+        if self.landmarks is not None:
+            object.__setattr__(
+                self, "landmarks", np.asarray(self.landmarks, np.float32))
+            object.__setattr__(
+                self, "proj", np.asarray(self.proj, np.float32))
+
+    @property
+    def family(self) -> str:
+        return "linear" if self.landmarks is None else "nystrom"
+
+    @property
+    def has_uncertainty(self) -> bool:
+        return self.weights.shape[1] > self.n_outputs
+
+    @property
+    def nbytes(self) -> int:
+        n = self.weights.nbytes
+        if self.landmarks is not None:
+            n += self.landmarks.nbytes + self.proj.nbytes
+        return n
+
+
+class SVMScorer:
+    """Device-resident scorer for one :class:`ServableModel`.
+
+    Arrays go to device exactly once (construction); every ``score``
+    call pads its rows to a bucket, dispatches the shared jit cell, and
+    slices the real rows back — mask-aware, so padding rows never
+    change scores (see the module docstring for why that holds
+    *bitwise*). Buckets are the power-of-two ladder
+    tile, 2*tile, ..., max_bucket; larger batches chunk by max_bucket
+    so every dispatch shape comes from the fixed ladder.
+    """
+
+    def __init__(self, model: ServableModel, *, tile: int = DEFAULT_TILE,
+                 max_bucket: int = 1024):
+        assert max_bucket % tile == 0
+        self.model = model
+        self.tile = tile
+        self.max_bucket = max_bucket
+        self._W = jnp.asarray(model.weights)
+        if model.family == "nystrom":
+            self._lm = jnp.asarray(model.landmarks)
+            self._pj = jnp.asarray(model.proj)
+            self.cell_key = ("nystrom", model.phi_kind,
+                             float(model.phi_sigma), model.phi_add_bias,
+                             tile, model.backend)
+        else:
+            self._lm = self._pj = None
+            self.cell_key = ("linear", model.add_bias, tile)
+        self._cell = _get_cell(self.cell_key)
+
+    # ------------------------------------------------------------ buckets
+    def bucket_for(self, n: int) -> int:
+        b = self.tile
+        while b < n and b < self.max_bucket:
+            b *= 2
+        return b
+
+    @property
+    def traces(self) -> int:
+        """Compilation count of this scorer's (shared) cell."""
+        return TRACE_COUNTS.get(self.cell_key, 0)
+
+    # ------------------------------------------------------------ scoring
+    def _dispatch(self, Xb: np.ndarray, mb: np.ndarray) -> jax.Array:
+        args = (jnp.asarray(Xb), jnp.asarray(mb), self._W)
+        if self._lm is not None:
+            args += (self._lm, self._pj)
+        return self._cell(*args)
+
+    def score(self, X: np.ndarray) -> np.ndarray:
+        """(n, C) float32 score columns for (n, D) raw request rows."""
+        X = np.asarray(X, np.float32)
+        if X.ndim != 2 or X.shape[1] != self.model.n_features:
+            raise ValueError(
+                f"model {self.model.name!r} expects (n, "
+                f"{self.model.n_features}) requests, got {X.shape}")
+        n = X.shape[0]
+        outs, i = [], 0
+        while i < n:
+            take = min(n - i, self.max_bucket)
+            b = self.bucket_for(take)
+            Xb = np.zeros((b, X.shape[1]), np.float32)
+            Xb[:take] = X[i:i + take]
+            mb = np.zeros((b,), np.float32)
+            mb[:take] = 1.0
+            outs.append(np.asarray(self._dispatch(Xb, mb))[:take])
+            i += take
+        return outs[0] if len(outs) == 1 else np.concatenate(outs)
+
+    def margins(self, X: np.ndarray) -> np.ndarray:
+        out = self.score(X)[:, : self.model.n_outputs]
+        return out[:, 0] if self.model.n_outputs == 1 else out
+
+    def score_with_std(self, X: np.ndarray
+                       ) -> tuple[np.ndarray, np.ndarray]:
+        """(margin, std): calibrated posterior uncertainty serving.
+
+        The uncertainty columns U = L^{-T} ride the same weight block,
+        so margin and std come out of ONE fused dispatch:
+        std_i = ||phi_i @ U|| = sqrt(phi_i^T P^{-1} phi_i).
+        """
+        assert self.model.has_uncertainty, (
+            "model exported without posterior; use "
+            "export_servable(posterior_from=(X, y))")
+        out = self.score(X)
+        k = self.model.n_outputs
+        margin = out[:, 0] if k == 1 else out[:, :k]
+        std = np.sqrt(np.sum(out[:, k:].astype(np.float64) ** 2, axis=1))
+        return margin, std.astype(np.float32)
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        m = self.margins(X)
+        if self.model.task == "mlt":
+            return np.argmax(m, axis=1)
+        if self.model.task == "svr":
+            return m
+        return np.where(m >= 0, 1, -1)
+
+
+def phi_never_materialized(scorer: SVMScorer, bucket: int) -> bool:
+    """Walk the traced jaxpr of the score cell at ``bucket`` rows and
+    verify no intermediate carries a full-batch phi / cross-Gram shape
+    (bucket, m) or (bucket, M) — the residency gate the serve benchmark
+    asserts. Requires bucket > tile so per-tile VMEM shapes (tile, m),
+    which are the *point* of the fusion, are distinguishable."""
+    m = scorer.model
+    if m.family == "linear":
+        return True
+    assert bucket > scorer.tile and bucket % scorer.tile == 0
+    phi_widths = {m.proj.shape[1], m.proj.shape[1] + 1,
+                  m.landmarks.shape[0]}
+
+    def cell_fn(X, mask):
+        return scorer._cell(X, mask, scorer._W, scorer._lm, scorer._pj)
+
+    jaxpr = jax.make_jaxpr(cell_fn)(
+        jnp.zeros((bucket, m.n_features), jnp.float32),
+        jnp.zeros((bucket,), jnp.float32))
+
+    def walk(jx) -> bool:
+        for eqn in jx.eqns:
+            for v in eqn.outvars:
+                shape = getattr(getattr(v, "aval", None), "shape", ())
+                if (len(shape) == 2 and shape[0] == bucket
+                        and shape[1] in phi_widths):
+                    return False
+            for val in eqn.params.values():
+                sub = getattr(val, "jaxpr", val)
+                if hasattr(sub, "eqns") and not walk(sub):
+                    return False
+        return True
+
+    return walk(jaxpr.jaxpr)
+
+
+class WeightPager:
+    """LRU device residency for many tenant models over the shared cell
+    family: register() keeps the host-side ServableModel; scorer()
+    pages its arrays onto the device (building an SVMScorer) and evicts
+    the least-recently-used tenant past ``max_resident`` — compiled
+    cells are shared by configuration, so paging a tenant in is a
+    weight upload, not a recompile."""
+
+    def __init__(self, max_resident: int = 8, *,
+                 tile: int = DEFAULT_TILE, max_bucket: int = 1024):
+        assert max_resident >= 1
+        self.max_resident = max_resident
+        self.tile = tile
+        self.max_bucket = max_bucket
+        self._models: dict[str, ServableModel] = {}
+        self._resident: OrderedDict[str, SVMScorer] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def register(self, model: ServableModel) -> None:
+        self._models[model.name] = model
+        self._resident.pop(model.name, None)  # stale weights out
+
+    @property
+    def model_names(self) -> list[str]:
+        return list(self._models)
+
+    @property
+    def resident_names(self) -> list[str]:
+        return list(self._resident)
+
+    @property
+    def resident_bytes(self) -> int:
+        return sum(s.model.nbytes for s in self._resident.values())
+
+    def scorer(self, name: str) -> SVMScorer:
+        if name in self._resident:
+            self.hits += 1
+            self._resident.move_to_end(name)
+            return self._resident[name]
+        if name not in self._models:
+            raise KeyError(f"unknown model {name!r}; register() first")
+        self.misses += 1
+        s = SVMScorer(self._models[name], tile=self.tile,
+                      max_bucket=self.max_bucket)
+        self._resident[name] = s
+        while len(self._resident) > self.max_resident:
+            self._resident.popitem(last=False)
+            self.evictions += 1
+        return s
+
+
+@dataclasses.dataclass
+class _Request:
+    model: str
+    X: np.ndarray
+    future: Future
+    t_submit: float
+
+
+class ServeLoop:
+    """Continuous-batching request loop (the actor/learner split,
+    predict-side): intake enqueues (model, rows) and returns a Future;
+    a drain — threaded (``start``) or synchronous (``step``, what tests
+    and benchmarks drive) — coalesces queued requests per model,
+    concatenates their rows, scores them as ONE bucketed dispatch
+    through the :class:`WeightPager`, and splits the score rows back to
+    each request's Future. Padding is mask-aware and per-tile fixed, so
+    coalescing never changes any request's bits (module docstring)."""
+
+    def __init__(self, pager: WeightPager, *, max_batch: int = 1024,
+                 max_wait_ms: float = 2.0):
+        self.pager = pager
+        self.max_batch = max_batch
+        self.max_wait_ms = max_wait_ms
+        self._q: queue.Queue[_Request] = queue.Queue()
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self.latencies_ms: list[float] = []
+        self.n_requests = 0
+        self.n_rows = 0
+        self.n_batches = 0
+
+    # ------------------------------------------------------------- intake
+    def submit(self, model: str, X: np.ndarray) -> Future:
+        X = np.asarray(X, np.float32)
+        assert X.ndim == 2 and X.shape[0] >= 1
+        fut: Future = Future()
+        self._q.put(_Request(model, X, fut, time.perf_counter()))
+        return fut
+
+    # -------------------------------------------------------------- drain
+    def _drain_queue(self, block: bool) -> list[_Request]:
+        reqs: list[_Request] = []
+        rows = 0
+        timeout = self.max_wait_ms / 1e3
+        while rows < self.max_batch:
+            try:
+                r = self._q.get(block=block and not reqs,
+                                timeout=timeout if block else None)
+            except queue.Empty:
+                break
+            reqs.append(r)
+            rows += r.X.shape[0]
+        return reqs
+
+    def _serve(self, reqs: list[_Request]) -> None:
+        by_model: dict[str, list[_Request]] = {}
+        for r in reqs:
+            by_model.setdefault(r.model, []).append(r)
+        for name, group in by_model.items():
+            try:
+                scorer = self.pager.scorer(name)
+                X = (group[0].X if len(group) == 1
+                     else np.concatenate([r.X for r in group]))
+                scores = scorer.score(X)
+            except Exception as e:  # noqa: BLE001 — fail the futures
+                for r in group:
+                    r.future.set_exception(e)
+                continue
+            self.n_batches += 1
+            done = time.perf_counter()
+            i = 0
+            for r in group:
+                n = r.X.shape[0]
+                r.future.set_result(scores[i:i + n])
+                i += n
+                self.n_requests += 1
+                self.n_rows += n
+                self.latencies_ms.append((done - r.t_submit) * 1e3)
+
+    def step(self) -> int:
+        """Synchronous drain: serve everything queued right now.
+        Returns the number of requests served."""
+        reqs = self._drain_queue(block=False)
+        if reqs:
+            self._serve(reqs)
+        return len(reqs)
+
+    # ------------------------------------------------------------ threaded
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            reqs = self._drain_queue(block=True)
+            if reqs:
+                self._serve(reqs)
+        self.step()  # final flush
+
+    def start(self) -> "ServeLoop":
+        assert self._thread is None, "already started"
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="svm-serve-loop")
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        if self._thread is not None:
+            self._stop.set()
+            self._thread.join()
+            self._thread = None
+
+    # ------------------------------------------------------------- stats
+    def latency_quantiles(self) -> dict:
+        if not self.latencies_ms:
+            return {"p50_ms": None, "p99_ms": None}
+        q = np.quantile(np.asarray(self.latencies_ms), [0.5, 0.99])
+        return {"p50_ms": float(q[0]), "p99_ms": float(q[1])}

@@ -112,7 +112,7 @@ m = PEMSVM(SVMConfig(algorithm="MC", task="MLT", num_classes=M,
 m.fit(X, labels); assert m.score(X, labels) > 0.9
 ys = (X @ w_true).astype(np.float32)
 s = PEMSVM(SVMConfig(task="SVR", lam=0.1, max_iters=30), mesh=mesh)
-s.fit(X, ys); assert s.score(X, ys) < 0.1
+s.fit(X, ys); assert s.rmse(X, ys) < 0.1
 r_ = np.concatenate([rng.uniform(0, 1, 150), rng.uniform(1.5, 2.5, 150)])
 th = rng.uniform(0, 2 * np.pi, 300)
 Xc = np.stack([r_ * np.cos(th), r_ * np.sin(th)], 1).astype(np.float32)

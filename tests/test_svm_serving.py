@@ -1,0 +1,339 @@
+"""Serving-path suite: served-score parity (bitwise on the dispatch
+path), no-retrace regression, MC uncertainty vs the host Sigma oracle,
+the score-convention fix, pad_features_to's width guard, the _phi /
+device-path feature-order pin, weight paging and the serve loop."""
+import numpy as np
+import pytest
+
+from repro.core import PEMSVM, SVMConfig
+from repro.core.nystrom import NystromSVM
+from repro.data.pipeline import pad_features_to
+from repro.serving import (ServableModel, ServeLoop, SVMScorer,
+                           WeightPager, phi_never_materialized)
+from repro.serving.svm_serve import TRACE_COUNTS
+
+
+def _problem(task, n=420, d=11, m=3, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    w = rng.normal(size=d)
+    if task == "SVR":
+        y = (X @ w + 0.05 * rng.normal(size=n)).astype(np.float32)
+    elif task == "MLT":
+        y = np.argmax(X @ rng.normal(size=(m, d)).T, 1).astype(np.int32)
+    else:
+        y = np.where(X @ w > 0, 1.0, -1.0).astype(np.float32)
+    return X, y
+
+
+def _fit(task, family, **cfg_kw):
+    X, y = _problem(task)
+    if family == "linear":
+        svm = PEMSVM(SVMConfig(task=task, num_classes=3, max_iters=25,
+                               **cfg_kw))
+        svm.fit(X, y)
+        return svm, X
+    ny = NystromSVM(SVMConfig(formulation="KRN", task=task,
+                              num_classes=3, sigma=3.0, lam=0.1,
+                              max_iters=25, **cfg_kw), n_landmarks=24)
+    ny.fit(X, y)
+    return ny, X
+
+
+# --------------------------------------------------------------- parity
+@pytest.mark.parametrize("task", ["CLS", "SVR", "MLT"])
+@pytest.mark.parametrize("family", ["linear", "nystrom"])
+def test_served_scores_bitwise_vs_oracle(task, family):
+    """Bucketed/padded/batched serving == decision_function, BITWISE:
+    the fixed-tile score cell makes a request's bits independent of
+    which bucket it rides and what shares the batch (incl. the ragged
+    final bucket)."""
+    model, X = _fit(task, family)
+    oracle = model.decision_function(X)  # one big dispatch
+
+    pager = WeightPager()
+    pager.register(model.export_servable(name="m"))
+    loop = ServeLoop(pager)
+    # Ragged request mix: coalesced into one batch of 420 rows ->
+    # bucket 512 with a 92-row masked tail; the oracle above ran at
+    # bucket 512 too, but the single-row and 77-row dispatches below
+    # run at bucket 128.
+    sizes = [1, 77, 130, 212]
+    futs, i = [], 0
+    for s in sizes:
+        futs.append(loop.submit("m", X[i:i + s]))
+        i += s
+    assert loop.step() == len(sizes)
+    served = np.concatenate([f.result(timeout=5) for f in futs])
+    flat = served[:, 0] if task != "MLT" else served[:, :3]
+    assert np.array_equal(flat, oracle)
+
+    # Singleton dispatches (smallest bucket) match the same oracle bits.
+    one = np.concatenate(
+        [loop.pager.scorer("m").score(X[j:j + 1]) for j in (0, 133, 419)])
+    picks = oracle[[0, 133, 419]]
+    got = one[:, 0] if task != "MLT" else one[:, :3]
+    assert np.array_equal(got, picks)
+
+
+def test_exact_krn_serves_through_fused_cell():
+    """The exact-Gram model rides the same Nystrom score cell
+    (landmarks = train rows, proj = omega column, W = [[1.]])."""
+    rng = np.random.default_rng(1)
+    r_ = np.concatenate([rng.uniform(0, 1, 100), rng.uniform(1.5, 2.5, 100)])
+    th = rng.uniform(0, 2 * np.pi, 200)
+    X = np.stack([r_ * np.cos(th), r_ * np.sin(th)], 1).astype(np.float32)
+    y = np.concatenate([np.ones(100), -np.ones(100)]).astype(np.float32)
+    k = PEMSVM(SVMConfig(formulation="KRN", lam=0.1, sigma=0.7,
+                         max_iters=25))
+    k.fit(X, y)
+    m = k.export_servable()
+    assert m.family == "nystrom" and m.weights.shape == (1, 1)
+    assert np.array_equal(SVMScorer(m).margins(X),
+                          k.decision_function(X))
+    assert k.score(X, y) > 0.95
+    # and the margins agree with the direct Gram-matvec oracle
+    from repro.core import kernel as krn
+    import jax.numpy as jnp
+    f = np.asarray(krn.decision_function(
+        jnp.asarray(k._weights[:200]), jnp.asarray(k._train_X),
+        jnp.asarray(X), kind="rbf", sigma=0.7))
+    np.testing.assert_allclose(k.decision_function(X), f,
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_padded_biased_linear_parity():
+    """cfg.add_bias + cfg.pad_features: the serving cell's in-cell prep
+    (bias FIRST, then zero columns — the fit-time order) matches the
+    host oracle."""
+    X, y = _problem("CLS", d=13)  # 13 + 1 bias -> pad to 16
+    svm = PEMSVM(SVMConfig(max_iters=25, pad_features=8))
+    svm.fit(X, y)
+    w = np.asarray(svm._weights)
+    assert w.shape[0] == 16
+    Xb = np.concatenate([X, np.ones((len(X), 1), np.float32)], 1)
+    Xb = pad_features_to(Xb, 8)
+    np.testing.assert_allclose(svm.decision_function(X),
+                               Xb.astype(np.float32) @ w,
+                               rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------- no-retrace
+def test_no_retrace_at_seen_bucket():
+    """Repeat decision_function/serve calls at a seen bucket shape
+    compile exactly once — and a SECOND model of the same configuration
+    reuses the shared cell with zero new compilations (weight paging:
+    residency is a weight upload, not a recompile)."""
+    X, y = _problem("CLS", n=300, d=19)  # distinctive D
+    svm = PEMSVM(SVMConfig(max_iters=20))
+    svm.fit(X, y)
+    s = svm.scorer()
+    t0 = s.traces
+    svm.decision_function(X[:90])       # bucket 128: traces once
+    t1 = s.traces
+    assert t1 - t0 <= 1
+    for n in (90, 90, 17, 128, 1):      # all land in the 128 bucket
+        svm.decision_function(X[:n])
+    assert s.traces == t1, "retraced at a seen bucket shape"
+    assert svm.scorer() is s, "scorer rebuilt without a refit"
+
+    svm2 = PEMSVM(SVMConfig(max_iters=20))
+    svm2.fit(X, y)
+    assert svm2.scorer() is not s
+    svm2.decision_function(X[:50])
+    assert svm2.scorer().traces == t1, "same-config model recompiled"
+
+    svm.fit(X, y)                       # refit invalidates the cache
+    assert svm.scorer() is not s
+    svm.decision_function(X[:90])       # ... but still no new trace
+    assert svm.scorer().traces == t1
+
+
+def test_nystrom_no_retrace():
+    ny, X = _fit("CLS", "nystrom")
+    s = ny.scorer()
+    ny.decision_function(X[:40])
+    t = s.traces
+    for n in (40, 128, 3):
+        ny.decision_function(X[:n])
+    assert s.traces == t
+
+
+# ---------------------------------------------------------- uncertainty
+def _host_std_oracle(phi, P):
+    """sqrt(diag(phi P^{-1} phi^T)) in float64 — the Sigma-quadratic-
+    form oracle the served uncertainty head must match."""
+    sol = np.linalg.solve(P, phi.astype(np.float64).T)
+    return np.sqrt(np.sum(phi.astype(np.float64).T * sol, axis=0))
+
+
+def test_mc_uncertainty_linear_vs_sigma_oracle():
+    X, y = _problem("CLS", n=500, d=9)
+    cfg = SVMConfig(max_iters=30, lam=0.5)
+    svm = PEMSVM(cfg)
+    svm.fit(X, y)
+    sc = SVMScorer(svm.export_servable(posterior_from=(X, y)))
+    margin, std = sc.score_with_std(X[:200])
+    assert np.array_equal(margin, svm.decision_function(X[:200]))
+
+    # Independent host reconstruction of P = lam I + S at the fitted w.
+    Xb = np.concatenate([X, np.ones((len(X), 1), np.float32)], 1)
+    w = np.asarray(svm._weights, np.float64)
+    gamma = np.maximum(np.abs(1.0 - y.astype(np.float64) * (Xb @ w)),
+                       cfg.eps)
+    S = (Xb.astype(np.float64) * (1.0 / gamma)[:, None]).T @ Xb
+    K = S.shape[0]
+    P = S + cfg.lam * np.eye(K)
+    P = 0.5 * (P + P.T)
+    P += cfg.jitter * (np.trace(P) / K) * np.eye(K)
+    np.testing.assert_allclose(std, _host_std_oracle(Xb[:200], P),
+                               rtol=2e-3, atol=1e-6)
+    assert np.all(std > 0)
+
+
+def test_mc_uncertainty_nystrom_vs_sigma_oracle():
+    ny, X = _fit("CLS", "nystrom")
+    _, y = _problem("CLS")
+    cfg = ny.svm.config
+    sc = SVMScorer(ny.export_servable(posterior_from=(X, y)))
+    margin, std = sc.score_with_std(X[:150])
+    assert np.array_equal(margin, ny.decision_function(X[:150]))
+
+    phi = ny._phi(X, add_bias=True)  # host f64 oracle, bias LAST
+    w = np.asarray(ny.svm._weights, np.float64)
+    gamma = np.maximum(np.abs(1.0 - y.astype(np.float64) * (phi @ w)),
+                       cfg.eps)
+    S = (phi.astype(np.float64) * (1.0 / gamma)[:, None]).T @ phi
+    K = S.shape[0]
+    P = S + cfg.lam * np.eye(K)
+    P = 0.5 * (P + P.T)
+    P += cfg.jitter * (np.trace(P) / K) * np.eye(K)
+    # f32 device featurization vs f64 host phi: wider tolerance.
+    np.testing.assert_allclose(std, _host_std_oracle(phi[:150], P),
+                               rtol=5e-2, atol=1e-6)
+
+
+def test_mlt_posterior_rejected():
+    svm, X = _fit("MLT", "linear")
+    _, y = _problem("MLT")
+    with pytest.raises(NotImplementedError):
+        svm.export_servable(posterior_from=(X, y))
+
+
+# ------------------------------------------------------ score convention
+def test_score_higher_is_better_both_directions():
+    X, y = _problem("SVR")
+    good = PEMSVM(SVMConfig(task="SVR", lam=0.1, max_iters=40))
+    good.fit(X, y)
+    bad = PEMSVM(SVMConfig(task="SVR", lam=200.0, max_iters=3,
+                           min_iters=1))
+    bad.fit(X, y)
+    assert good.rmse(X, y) < bad.rmse(X, y)      # lower error is better
+    assert good.score(X, y) > bad.score(X, y)    # higher score is better
+    assert good.score(X, y) == -good.rmse(X, y)
+
+    Xc, yc = _problem("CLS")
+    cls = PEMSVM(SVMConfig(max_iters=25))
+    cls.fit(Xc, yc)
+    assert 0.0 <= cls.score(Xc, yc) <= 1.0       # accuracy, unchanged
+    with pytest.raises(AssertionError):
+        cls.rmse(Xc, yc)                         # rmse is SVR-only
+
+
+# --------------------------------------------------- pad_features_to
+def test_pad_features_width_guard():
+    X = np.ones((4, 10), np.float32)
+    assert pad_features_to(X, width=10) is X
+    assert pad_features_to(X, width=13).shape == (4, 13)
+    assert pad_features_to(X, 8).shape == (4, 16)  # multiple mode
+    with pytest.raises(ValueError, match="refusing to slice"):
+        pad_features_to(X, width=7)
+    with pytest.raises(AssertionError):
+        pad_features_to(X, 8, width=16)
+
+
+# --------------------------------------------- feature-order pin (_phi)
+def test_phi_host_oracle_matches_device_path():
+    """NystromSVM._phi (host f64) and the device phi path agree on
+    add_bias ordering: projected features first, bias column LAST."""
+    from repro.kernels import ops
+
+    ny, X = _fit("CLS", "nystrom")
+    host = ny._phi(X[:64], add_bias=True)
+    assert np.array_equal(host[:, -1], np.ones(64, np.float32))
+    dev = np.asarray(ops.nystrom_phi(
+        X[:64], ny._landmarks, ny._proj, None, sigma=ny.sigma,
+        kind=ny.kernel_kind, add_bias=True, backend="ref"))
+    np.testing.assert_allclose(host, dev, rtol=2e-4, atol=2e-5)
+    # no-bias default stays the bare projection width
+    assert ny._phi(X[:5]).shape[1] == ny._proj.shape[1]
+
+
+# ------------------------------------------------------------ residency
+def test_phi_never_materialized_gate():
+    ny, X = _fit("CLS", "nystrom")
+    sc = ny.scorer()
+    assert phi_never_materialized(sc, 512)
+    lin, _ = _fit("CLS", "linear")
+    assert phi_never_materialized(lin.scorer(), 512)
+
+
+# ---------------------------------------------------------- weight pager
+def test_weight_pager_lru_and_stale_eviction():
+    svm, X = _fit("CLS", "linear")
+    base = svm.export_servable()
+    pager = WeightPager(max_resident=2)
+    for name in ("a", "b", "c"):
+        pager.register(ServableModel(
+            task=base.task, weights=base.weights,
+            n_outputs=base.n_outputs, n_features=base.n_features,
+            add_bias=base.add_bias, name=name))
+    assert pager.scorer("a") is pager.scorer("a")
+    assert pager.hits == 1 and pager.misses == 1
+    pager.scorer("b")
+    pager.scorer("c")                       # evicts "a" (LRU)
+    assert pager.resident_names == ["b", "c"]
+    assert pager.evictions == 1
+    s_b = pager.scorer("b")
+    pager.register(ServableModel(           # re-register drops stale
+        task=base.task, weights=base.weights * 2.0,
+        n_outputs=base.n_outputs, n_features=base.n_features,
+        add_bias=base.add_bias, name="b"))
+    s_b2 = pager.scorer("b")
+    assert s_b2 is not s_b
+    assert pager.resident_bytes > 0
+    with pytest.raises(KeyError):
+        pager.scorer("nope")
+    # many tenants, one cell: scoring through different tenants shares
+    # the compiled cell, so the bits match when weights match
+    assert np.array_equal(pager.scorer("a").score(X[:32]),
+                          pager.scorer("c").score(X[:32]))
+
+
+# ------------------------------------------------------------ serve loop
+def test_serve_loop_threaded_and_errors():
+    svm, X = _fit("CLS", "linear")
+    pager = WeightPager()
+    pager.register(svm.export_servable(name="m"))
+    loop = ServeLoop(pager, max_wait_ms=1.0).start()
+    try:
+        futs = [loop.submit("m", X[i * 20:(i + 1) * 20])
+                for i in range(8)]
+        bad = loop.submit("missing", X[:4])
+        outs = [f.result(timeout=10) for f in futs]
+        with pytest.raises(KeyError):
+            bad.result(timeout=10)
+    finally:
+        loop.stop()
+    served = np.concatenate(outs)[:, 0]
+    assert np.array_equal(served, svm.decision_function(X[:160]))
+    assert loop.n_requests == 8 and loop.n_rows == 160
+    assert len(loop.latencies_ms) == 8
+    q = loop.latency_quantiles()
+    assert q["p50_ms"] is not None and q["p99_ms"] >= q["p50_ms"]
+
+
+def test_scorer_rejects_wrong_width():
+    svm, X = _fit("CLS", "linear")
+    with pytest.raises(ValueError, match="expects"):
+        svm.scorer().score(X[:5, :-1])
