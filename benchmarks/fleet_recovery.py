@@ -1,0 +1,155 @@
+"""Fleet-controller tax and recovery latency (ISSUE 8 acceptance
+benchmark) -> ``BENCH_fleet.json``.
+
+The supervisor must be ~free when nothing fails, and cheap to invoke
+when something does:
+
+  * controller overhead — the same undisturbed fit run bare vs under
+    :class:`FleetController` (supervision thread polling the shared
+    checkpoint directory for progress). Gated at <= 5% (+ a noise
+    allowance for shared CI machines): the monitor only ever lists a
+    directory, so the hot path must not feel it;
+  * recovery latency — a SIGKILL-style preemption mid-fit, then the
+    relaunch: time from the relaunch's start to its FIRST checkpoint
+    commit (``AttemptRecord.first_commit_s`` — restore + re-warm +
+    one checkpoint cadence, the span during which a second failure
+    would lose ground), plus the end-to-end disturbed wall clock.
+    Gated by an absolute ceiling (env-tunable for slower runners).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import PEMSVM, SVMConfig
+from repro.runtime import faults
+from repro.runtime.controller import FleetController, FleetPolicy
+from repro.runtime.faults import FleetSchedule
+from repro.runtime.policy import FaultPolicy
+
+from .common import append_json, emit
+
+BENCH_JSON = os.environ.get("BENCH_FLEET_JSON", "BENCH_fleet.json")
+
+# Generous on CI: the gate documents the contract, the JSON history
+# tracks the real number.
+OVERHEAD_GATE = float(os.environ.get("FLEET_OVERHEAD_GATE", "0.05"))
+NOISE_ALLOWANCE = 0.05          # shared-runner wall-clock jitter
+RECOVERY_GATE_S = float(os.environ.get("FLEET_RECOVERY_GATE_S", "30"))
+
+
+def _data(full: bool):
+    # Iterations must dominate the supervisor's directory polls for the
+    # overhead gate to measure the controller rather than the noise.
+    n, k = (200_000, 128) if full else (65_536, 64)
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(n, k)).astype(np.float32)
+    y = np.where(X @ rng.normal(size=k) > 0, 1.0, -1.0)
+    return X, y
+
+
+def _best_of(fn, reps: int = 3, reset=None):
+    """Best-of-N with a per-rep reset (clearing the checkpoint dir so a
+    repeated run never turns into a resume). Best-of also amortizes the
+    one-time jit compile out of the measurement."""
+    best, out = float("inf"), None
+    for _ in range(reps):
+        if reset is not None:
+            reset()
+        t0 = time.time()
+        out = fn()
+        best = min(best, time.time() - t0)
+    return out, best
+
+
+def run(full: bool = False) -> None:
+    X, y = _data(full)
+    iters = 12
+    kw = dict(algorithm="EM", eps=1e-2, driver="loop", max_iters=iters,
+              min_iters=iters)
+    rows = []
+
+    with tempfile.TemporaryDirectory() as root:
+        d = os.path.join(root, "ckpt")
+        pol = FaultPolicy(ckpt_dir=d, ckpt_every=3, keep_k=2)
+        cfg = SVMConfig(**kw, fault=pol)
+
+        def reset():
+            shutil.rmtree(d, ignore_errors=True)
+            os.makedirs(d)
+
+        # --- bare fit (checkpointing on, no supervisor) ---------------
+        _, base = _best_of(lambda: PEMSVM(cfg).fit(X, y), reset=reset)
+
+        # --- the same fit under the controller, nothing failing -------
+        def make_host(level):
+            def host(ctx):
+                return PEMSVM(cfg).fit(X, y, resume_from=ctx.resume_from,
+                                       fault_hook=ctx.fault_hook)
+            return host
+
+        def fleet_fit():
+            return FleetController(
+                make_host, d,
+                policy=FleetPolicy(max_attempts=3, poll_s=0.02)).run()
+
+        fr, ctl = _best_of(fleet_fit, reset=reset)
+        assert fr.n_relaunches == 0 and not fr.recovered
+        overhead = ctl / base - 1.0
+        rows.append({
+            "name": "controller_overhead",
+            "seconds": ctl,
+            "base_seconds": round(base, 4),
+            "overhead_pct": round(100 * overhead, 2),
+            "gated": True,
+            "n_iters": iters,
+            "n": X.shape[0],
+        })
+
+        # --- disturbed run: SIGKILL mid-fit, supervised relaunch ------
+        reset()
+        t0 = time.time()
+        fr = FleetController(
+            make_host, d,
+            policy=FleetPolicy(max_attempts=3, backoff_s=1e-3,
+                               poll_s=0.02),
+            schedule=FleetSchedule({
+                0: lambda cancel: faults.kill_at_iteration(iters // 2),
+            })).run()
+        disturbed = time.time() - t0
+        relaunch = fr.attempts[1]
+        first_commit = relaunch.first_commit_s
+        rows.append({
+            "name": "recovery_after_kill",
+            "seconds": disturbed,
+            "base_seconds": round(base, 4),
+            "first_commit_s": (None if first_commit is None
+                               else round(first_commit, 4)),
+            "resumed_at": fr.result.resumed_at,
+            "n_relaunches": fr.n_relaunches,
+            "disturbed_over_base_pct": round(
+                100 * (disturbed / base - 1.0), 2),
+            "gated": True,
+            "n_iters": iters,
+        })
+        assert fr.recovered and fr.result.resumed_at is not None
+        assert np.isfinite(fr.result.weights).all()
+
+    emit(rows, "fleet_recovery")
+    append_json(rows, BENCH_JSON)
+    assert overhead <= OVERHEAD_GATE + NOISE_ALLOWANCE, (
+        f"fleet supervision cost {100 * overhead:.1f}% on an undisturbed "
+        f"fit (gate {100 * OVERHEAD_GATE:.0f}% + "
+        f"{100 * NOISE_ALLOWANCE:.0f}% noise allowance) — the progress "
+        "monitor is interfering with the hot path")
+    assert first_commit is not None and first_commit <= RECOVERY_GATE_S, (
+        f"relaunch took {first_commit}s to its first checkpoint commit "
+        f"(gate {RECOVERY_GATE_S}s) — restore or re-warm has regressed")
+
+
+if __name__ == "__main__":
+    run()

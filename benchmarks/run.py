@@ -17,8 +17,8 @@ def main() -> None:
     args, _ = ap.parse_known_args()
 
     from . import (elastic_overhead, fig2_cores, fig34_scaling,
-                   fig56_convergence, kshard_fused, mc_fused,
-                   nystrom_fused, roofline, serve_latency,
+                   fig56_convergence, fleet_recovery, kshard_fused,
+                   mc_fused, nystrom_fused, roofline, serve_latency,
                    stream_vs_resident, table5_dna, table6_svr,
                    table7_krn, table8_mlt, table9_gram)
     benches = {
@@ -36,6 +36,7 @@ def main() -> None:
         "mc_fused": mc_fused.run,
         "kshard_fused": kshard_fused.run,
         "elastic_overhead": elastic_overhead.run,
+        "fleet_recovery": fleet_recovery.run,
         "serve_latency": serve_latency.run,
     }
     only = [x for x in args.only.split(",") if x]

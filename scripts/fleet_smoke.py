@@ -1,0 +1,130 @@
+#!/usr/bin/env python
+"""CPU fleet-controller smoke for CI: run a fit fleet through a
+deterministic chaos schedule and demand the undisturbed bits
+(DESIGN.md §Reliability).
+
+Three gates, strongest first:
+
+  * chaos recovery — a streaming MC fit supervised by
+    ``FleetController`` is preempted (SIGKILL-style) on attempt 0 and
+    evicted (SIGTERM-style) on attempt 1; the completing attempt's
+    weights must equal the uninterrupted fit's BITWISE (the flaky-
+    loader leg of the schedule is pinned in tests/test_fleet.py);
+  * windowed statistics — hard expiry is EXACT: a donor dragging
+    generations beyond the horizon changes nothing (bitwise), and a
+    killed windowed fit resumes bit-identically (the ring rides the
+    checkpoint);
+  * real process supervision — a ``SubprocessHost`` that crashes on
+    attempt 0 is classified retryable and the relaunch completes.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+import textwrap
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> int:
+    import numpy as np
+
+    from repro.core import PEMSVM, SVMConfig
+    from repro.runtime import faults
+    from repro.runtime.controller import (FleetController, FleetPolicy,
+                                          SubprocessHost)
+    from repro.runtime.faults import FleetSchedule
+    from repro.runtime.policy import FaultPolicy
+
+    rng = np.random.default_rng(0)
+    N, K = 400, 12
+    X = rng.normal(size=(N, K)).astype(np.float32)
+    y = np.where(X @ rng.normal(size=K) + 0.2 * rng.normal(size=N) > 0,
+                 1.0, -1.0)
+    ok = True
+
+    # --- 1. chaos schedule -> bitwise recovery --------------------------
+    kw = dict(algorithm="MC", driver="stream", chunk_rows=64,
+              max_iters=10, min_iters=10, burnin=3)
+    ref = PEMSVM(SVMConfig(**kw)).fit(X, y)
+    with tempfile.TemporaryDirectory() as d:
+        pol = FaultPolicy(ckpt_dir=d, ckpt_every=2, loader_retries=3,
+                          loader_backoff=1e-3)
+        cfg = SVMConfig(**kw, fault=pol)
+
+        def make_host(level):
+            def host(ctx, svm=PEMSVM(cfg)):
+                return svm.fit(X, y, resume_from=ctx.resume_from,
+                               fault_hook=ctx.fault_hook)
+            return host
+
+        fr = FleetController(
+            make_host, d,
+            policy=FleetPolicy(max_attempts=5, backoff_s=1e-3),
+            schedule=FleetSchedule({
+                0: lambda cancel: faults.kill_at_iteration(4),
+                1: lambda cancel: faults.terminate_at_iteration(7),
+            })).run()
+    bitwise = np.array_equal(ref.weights, fr.result.weights)
+    outcomes = [a.outcome for a in fr.attempts]
+    print(f"chaos fleet: bitwise={bitwise} outcomes={outcomes} "
+          f"resumed_at={fr.result.resumed_at}")
+    ok &= bitwise and outcomes == ["retryable", "retryable", "completed"]
+
+    # --- 2. windowed statistics: exact expiry + resume-exact ring -------
+    import dataclasses
+
+    kw = dict(algorithm="EM", driver="stream", chunk_rows=64,
+              max_iters=6, min_iters=6, window=2)
+    g1 = PEMSVM(SVMConfig(**kw)).fit(X, y)
+    g2 = PEMSVM(SVMConfig(**kw)).fit(X, -y, warm_start=g1)
+    g3a = PEMSVM(SVMConfig(**kw)).fit(X, y, warm_start=g2)
+    fat = dataclasses.replace(g2,
+                              stats_window=g2.stats_window
+                              + g1.stats_window)
+    g3b = PEMSVM(SVMConfig(**kw)).fit(X, y, warm_start=fat)
+    expiry = np.array_equal(g3a.weights, g3b.weights)
+    folds = not np.allclose(
+        g3a.weights, PEMSVM(SVMConfig(**kw)).fit(X, y).weights)
+    with tempfile.TemporaryDirectory() as d:
+        polw = FaultPolicy(ckpt_dir=d, ckpt_every=2)
+        cfgw = SVMConfig(**kw, fault=polw)
+        refw = PEMSVM(SVMConfig(**kw)).fit(X, -y, warm_start=g1)
+        try:
+            PEMSVM(cfgw).fit(X, -y, warm_start=g1,
+                             fault_hook=faults.kill_at_iteration(3))
+            print("window kill did not fire")
+            return 1
+        except faults.SimulatedPreemption:
+            pass
+        resw = PEMSVM(cfgw).fit(X, -y, resume_from=d)
+    resume_exact = np.array_equal(refw.weights, resw.weights)
+    print(f"window: hard_expiry_exact={expiry} folds={folds} "
+          f"kill_resume_bitwise={resume_exact}")
+    ok &= expiry and folds and resume_exact
+
+    # --- 3. SubprocessHost: crash -> retry -> complete ------------------
+    code = textwrap.dedent("""
+        import os, sys
+        sys.exit(3 if os.environ["FLEET_ATTEMPT"] == "0" else 0)
+    """)
+    with tempfile.TemporaryDirectory() as d:
+        fr = FleetController(
+            lambda level: SubprocessHost(code, load_result=lambda: "ok"),
+            d, policy=FleetPolicy(max_attempts=3, backoff_s=1e-3)).run()
+    sub_ok = (fr.result == "ok"
+              and [a.outcome for a in fr.attempts]
+              == ["retryable", "completed"])
+    print(f"subprocess host: recovered={sub_ok}")
+    ok &= sub_ok
+
+    if not ok:
+        print("FLEET SMOKE FAIL")
+        return 1
+    print("fleet smoke complete")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

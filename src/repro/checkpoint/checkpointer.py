@@ -12,7 +12,16 @@ single-host implementation stands in for the multi-host version):
     synchronously (cheap device->host copy) and written by a background
     thread, so training never blocks on the filesystem;
   * atomicity by COMMIT marker — restore only considers committed steps,
-    so a node failure mid-save never corrupts the restore point;
+    so a node failure mid-save never corrupts the restore point. Every
+    file (arrays, manifest, the marker) is fsynced and the containing
+    directories are fsynced around the rename, so the commit cannot be
+    reordered ahead of its data by the page cache on a power loss;
+  * defense in depth past the marker: restore VALIDATES the newest
+    committed snapshot (manifest parse, array load, shape/dtype check
+    against the manifest) and on a truncated/corrupt snapshot — torn
+    write, bit rot, an fsync-less writer from an older version — it
+    warns and falls back to the previous keep_k entry instead of
+    crashing the resume (`latest_valid_step`/`restore*`);
   * keep_k garbage collection bounds disk;
   * ELASTIC restore: arrays are saved as full (host-gathered) logical
     tensors, so a checkpoint written on a 2x16x16 mesh restores onto a
@@ -28,10 +37,21 @@ import os
 import shutil
 import threading
 import time
+import warnings
 from typing import Any
 
 import jax
 import numpy as np
+
+
+def _fsync_path(path: str) -> None:
+    """fsync a file or directory by path (directory fsync is what makes
+    a rename durable on POSIX filesystems)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def _tree_flatten_with_names(tree):
@@ -82,15 +102,30 @@ class Checkpointer:
                 manifest = {"step": step, "time": time.time(),
                             "meta": meta or {}, "leaves": []}
                 for i, (n, a) in enumerate(zip(names, host)):
-                    np.save(os.path.join(tmp, "arrays", f"{i}.npy"), a)
+                    with open(os.path.join(tmp, "arrays", f"{i}.npy"),
+                              "wb") as f:
+                        np.save(f, a)
+                        f.flush()
+                        os.fsync(f.fileno())
                     manifest["leaves"].append(
                         {"name": n, "idx": i, "shape": list(a.shape),
                          "dtype": str(a.dtype)})
                 with open(os.path.join(tmp, "manifest.json"), "w") as f:
                     json.dump(manifest, f)
+                    f.flush()
+                    os.fsync(f.fileno())
+                # Data must be durable BEFORE the rename/COMMIT become
+                # visible, or a power loss could leave a committed step
+                # with torn contents.
+                _fsync_path(os.path.join(tmp, "arrays"))
+                _fsync_path(tmp)
                 shutil.rmtree(final, ignore_errors=True)
                 os.rename(tmp, final)
-                open(final + ".COMMIT", "w").close()   # atomic commit mark
+                _fsync_path(self.dir)                  # durable rename
+                with open(final + ".COMMIT", "w") as f:
+                    f.flush()
+                    os.fsync(f.fileno())               # atomic commit mark
+                _fsync_path(self.dir)
                 self._gc()
             except Exception as e:  # noqa: BLE001
                 self._error = e
@@ -130,15 +165,61 @@ class Checkpointer:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def _load_manifest(self, step: int | None):
-        if step is None:
-            step = self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+    def _read_step(self, step: int) -> tuple[dict, dict]:
+        """Load + VALIDATE one committed step: the manifest must parse
+        and every leaf array must load with the manifest's shape/dtype.
+        Raises on any corruption (truncated npy, torn manifest, missing
+        file) — the fallback loop below turns that into skip-and-warn."""
         final = os.path.join(self.dir, f"step_{step:09d}")
         with open(os.path.join(final, "manifest.json")) as f:
             manifest = json.load(f)
-        return step, final, manifest
+        arrays: dict[str, np.ndarray] = {}
+        for e in manifest["leaves"]:
+            a = np.load(os.path.join(final, "arrays", f"{e['idx']}.npy"))
+            if (list(a.shape) != list(e["shape"])
+                    or str(a.dtype) != e["dtype"]):
+                raise ValueError(
+                    f"leaf {e['name']!r} of step_{step:09d} loads as "
+                    f"{a.shape}/{a.dtype}, manifest says "
+                    f"{e['shape']}/{e['dtype']} — corrupt snapshot")
+            arrays[e["name"]] = a
+        return arrays, manifest
+
+    def _load_valid(self, step: int | None) -> tuple[int, dict, dict]:
+        """Resolve ``step`` to a VALID snapshot. An explicit step is
+        loaded strictly (corruption raises — the caller pinned it). With
+        ``step=None``, committed steps are tried newest-first; a
+        truncated/corrupt snapshot is skipped with a warning and the
+        previous keep_k entry is used instead, so one torn write never
+        poisons the whole resume directory."""
+        if step is not None:
+            arrays, manifest = self._read_step(step)
+            return step, arrays, manifest
+        steps = self.all_steps()
+        if not steps:
+            raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+        for s in reversed(steps):
+            try:
+                arrays, manifest = self._read_step(s)
+                return s, arrays, manifest
+            except Exception as e:  # noqa: BLE001 — corrupt: try older
+                warnings.warn(
+                    f"checkpoint step_{s:09d} in {self.dir} is "
+                    f"unreadable ({e!r}); falling back to the previous "
+                    "committed snapshot", RuntimeWarning, stacklevel=3)
+        raise FileNotFoundError(
+            f"all {len(steps)} committed checkpoints in {self.dir} are "
+            "corrupt — nothing to restore (poisoned checkpoint "
+            "directory)")
+
+    def latest_valid_step(self) -> int | None:
+        """Newest committed step that actually loads — what restore()
+        with ``step=None`` will use. Corrupt newer steps warn."""
+        try:
+            step, _, _ = self._load_valid(None)
+        except FileNotFoundError:
+            return None
+        return step
 
     def restore(self, tree_like: Any, step: int | None = None,
                 shardings: Any = None) -> Any:
@@ -146,7 +227,7 @@ class Checkpointer:
         given (a matching tree of NamedSharding / None), each leaf is
         device_put with its target sharding — this is the elastic-remesh
         path (checkpoint mesh need not equal restore mesh)."""
-        step, final, manifest = self._load_manifest(step)
+        step, arrays, manifest = self._load_valid(step)
         names, leaves, treedef = _tree_flatten_with_names(tree_like)
         by_name = {e["name"]: e for e in manifest["leaves"]}
         sh_leaves = (jax.tree.leaves(shardings, is_leaf=lambda x: x is None)
@@ -160,8 +241,7 @@ class Checkpointer:
                     f"{sorted(e['name'] for e in manifest['leaves'])} — "
                     "the restore tree's structure does not match what "
                     "was saved (config/model mismatch?)")
-            e = by_name[n]
-            a = np.load(os.path.join(final, "arrays", f"{e['idx']}.npy"))
+            a = arrays[n]
             want = tuple(getattr(leaf, "shape", a.shape))
             assert tuple(a.shape) == want, (n, a.shape, want)
             out.append(jax.device_put(a, sh) if sh is not None
@@ -175,9 +255,5 @@ class Checkpointer:
         ``restore`` for callers whose payload shape is data-dependent —
         the solver's resume path, where history lengths and the presence
         of mid-pass accumulators vary per checkpoint."""
-        step, final, manifest = self._load_manifest(step)
-        arrays = {
-            e["name"]: np.load(os.path.join(final, "arrays",
-                                            f"{e['idx']}.npy"))
-            for e in manifest["leaves"]}
+        _, arrays, manifest = self._load_valid(step)
         return arrays, manifest

@@ -8,7 +8,11 @@ O(N):
            sum (= mean * n_avg, driver-independent), and for a MID-PASS
            stream snapshot the iteration subkey plus the partial chunk
            totals (tot_*); with decayed warm-start stats, the frozen
-           previous-fit (S, b) ride along (prev_*).
+           previous-fit (S, b) ride along (prev_*); with a windowed
+           warm start (cfg.window), the whole hard-expiry ring of
+           per-generation partials rides along (win{i}_*) — the ring is
+           frozen for the fit, so restoring it verbatim makes every
+           post-resume fold bit-identical.
   meta     scalar loop state: completed iteration count, histories,
            stopping-rule counters, the chunk cursor, and the config
            FINGERPRINT (the semantic fields that must match for the
@@ -36,6 +40,8 @@ import numpy as np
 
 from repro.checkpoint import Checkpointer
 
+from .stats import StatsWindow
+
 _MIDPASS_STRIDE = 1_000_000
 
 # Fields whose values change the fit trajectory itself (as opposed to
@@ -45,6 +51,7 @@ _SEMANTIC_FIELDS = (
     "formulation", "algorithm", "task", "lam", "eps", "eps_ins",
     "num_classes", "kernel", "sigma", "min_iters", "patience", "tol",
     "burnin", "jitter", "add_bias", "seed", "pad_features", "decay",
+    "window",
 )
 
 
@@ -63,6 +70,7 @@ def save_snapshot(ckpt: Checkpointer, cfg, *, it: int, state, key,
                   samp_sum, n_avg: int, n_small: int, objs: list,
                   aux_hist: dict, n_syncs: int, converged: bool = False,
                   prev_stats: dict | None = None,
+                  window_stats: list | None = None,
                   sub=None, totals: dict | None = None,
                   chunk_idx: int = 0, row0: int = 0,
                   blocking: bool = False) -> int:
@@ -85,6 +93,8 @@ def save_snapshot(ckpt: Checkpointer, cfg, *, it: int, state, key,
     if prev_stats is not None:
         for k, v in prev_stats.items():
             arrays[f"prev_{k}"] = np.asarray(v)
+    if window_stats:
+        arrays.update(StatsWindow.pack(window_stats))
     meta = {
         "fingerprint": config_fingerprint(cfg),
         "it": int(it),
@@ -121,6 +131,7 @@ def load_snapshot(ckpt: Checkpointer, step: int | None = None) -> dict:
     prev = {k[len("prev_"):]: v for k, v in arrays.items()
             if k.startswith("prev_")}
     payload["prev_stats"] = prev or None
+    payload["window_stats"] = StatsWindow.unpack(arrays) or None
     return payload
 
 

@@ -77,6 +77,10 @@ class SVMConfig:
     phi_spec: PhiSpec | None = None  # Nystrom phi-space mode (NystromSVM)
     fault: FaultPolicy | None = None  # checkpoint/retry/straggler policy
     decay: float = 0.0           # warm-start statistic decay (stream only)
+    window: int = 0              # hard-expiry statistics horizon in fit
+                                 # generations (stream only; 0 = off) —
+                                 # the ring-of-partials alternative to
+                                 # decay (stats.StatsWindow)
 
     def __post_init__(self):
         assert self.formulation in FORMULATIONS, self.formulation
@@ -99,6 +103,17 @@ class SVMConfig:
         assert self.decay == 0.0 or self.driver == "stream", (
             "decay (online warm-start statistics) requires "
             "driver='stream'")
+        # window is decay's hard-expiry sibling: a ring of the last
+        # window-1 generations' FRESH (S, b) partials summed at full
+        # weight, older generations dropped exactly. Same stream-only
+        # constraint, and the two semantics are mutually exclusive.
+        assert self.window >= 0, self.window
+        assert self.window == 0 or self.driver == "stream", (
+            "window (hard-expiry warm-start statistics) requires "
+            "driver='stream'")
+        assert self.window == 0 or self.decay == 0.0, (
+            "window and decay are competing warm-start semantics "
+            "(hard expiry vs geometric); pick one")
         # KRN x {SVR, MLT, stream} is valid CONFIGURATION now: NystromSVM
         # serves all of it through the phi-space route. Only the exact
         # N x N-Gram solver (PEMSVM) rejects those combinations, at fit
@@ -137,12 +152,20 @@ class FitResult:
     n_host_syncs: int = 0           # device->host objective transfers
     peak_input_bytes: int = 0       # stream driver: max device-resident input
     stats: dict | None = None       # effective (S, b) at the final M-step
-    #                                 (stream driver with decay > 0) — feed
-    #                                 back via fit(warm_start=result)
+    #                                 (stream driver with decay > 0 or
+    #                                 window >= 1) — feed back via
+    #                                 fit(warm_start=result)
     straggler_events: list = dataclasses.field(default_factory=list)
     resumed_at: int | None = None   # completed iterations restored from
     #                                 checkpoint (None = fresh fit)
     n_checkpoints: int = 0          # snapshots committed during this fit
+    stats_window: list | None = None  # hard-expiry ring for the NEXT
+    #                                 generation (stream, window >= 1):
+    #                                 this fit's fresh (S, b) plus the
+    #                                 retained donors, newest first
+    loader_retries: int = 0         # transient loader failures absorbed
+    #                                 by retrying_chunks during this fit
+    loader_backoff_s: float = 0.0   # seconds slept backing those off
 
 
 @functools.lru_cache(maxsize=256)
@@ -381,6 +404,8 @@ class _FitRuntime:
         self.midpass: dict | None = None
         self.pending_sub = None
         self.cur_it = 0
+        from repro.data.pipeline import RetryStats
+        self.retry_stats = RetryStats()
 
         if resume_from is not None and warm_start is not None:
             raise ValueError(
@@ -409,6 +434,7 @@ class _FitRuntime:
 
         self.warm_state = None
         self.prev_stats: dict | None = None
+        self.window_entries: list = []
         if warm_start is not None:
             self.warm_state = np.asarray(warm_start.last_sample,
                                          np.float32)
@@ -421,8 +447,23 @@ class _FitRuntime:
                         "with decay > 0 (which populates FitResult.stats)")
                 self.prev_stats = {k: np.asarray(v)
                                    for k, v in warm_start.stats.items()}
+            if cfg.window >= 2:
+                if warm_start.stats_window is None:
+                    raise ValueError(
+                        "window >= 2 retains the previous generations' "
+                        "fresh statistics, but warm_start.stats_window "
+                        "is None — the donor fit must itself run "
+                        "driver='stream' with window >= 1 (which "
+                        "populates FitResult.stats_window)")
+                # Hard expiry happens HERE: entries beyond the horizon
+                # are dropped before the fit ever folds them.
+                self.window_entries = [
+                    {k: np.asarray(v) for k, v in e.items()}
+                    for e in warm_start.stats_window][: cfg.window - 1]
         if self.payload is not None and self.payload.get("prev_stats"):
             self.prev_stats = self.payload["prev_stats"]
+        if self.payload is not None and self.payload.get("window_stats"):
+            self.window_entries = self.payload["window_stats"]
 
         self.live_dev = None
         self._live_host: np.ndarray | None = None
@@ -541,7 +582,8 @@ class _FitRuntime:
             n_avg=self.n_avg, n_small=self.n_small, objs=self.objs,
             aux_hist=self.aux_hist,
             n_syncs=len(self.objs) if n_syncs is None else n_syncs,
-            converged=converged, prev_stats=self.prev_stats, sub=sub,
+            converged=converged, prev_stats=self.prev_stats,
+            window_stats=self.window_entries or None, sub=sub,
             totals=totals, chunk_idx=chunk_idx, row0=row0,
             blocking=blocking)
         self.n_checkpoints += 1
@@ -905,7 +947,9 @@ class PEMSVM:
                          converged=converged, n_host_syncs=n_syncs,
                          straggler_events=rt.events,
                          resumed_at=rt.resumed_at,
-                         n_checkpoints=rt.n_checkpoints)
+                         n_checkpoints=rt.n_checkpoints,
+                         loader_retries=rt.retry_stats.retries,
+                         loader_backoff_s=rt.retry_stats.backoff_s)
 
     def _fit_host_loop(self, iterate, state0,
                        rt: "_FitRuntime") -> FitResult:
@@ -982,7 +1026,9 @@ class PEMSVM:
                          converged=converged, n_host_syncs=len(objs),
                          straggler_events=rt.events,
                          resumed_at=rt.resumed_at,
-                         n_checkpoints=rt.n_checkpoints)
+                         n_checkpoints=rt.n_checkpoints,
+                         loader_retries=rt.retry_stats.retries,
+                         loader_backoff_s=rt.retry_stats.backoff_s)
 
     def _fit_loop(self, data, prior, state, step, N: int,
                   rt: "_FitRuntime") -> FitResult:
@@ -1033,9 +1079,14 @@ class PEMSVM:
         already-folded chunks and continues the same pass, bit-for-bit.
         With ``config.decay > 0`` a warm-started fit folds the donor's
         statistics in at weight decay each M-step (an exponentially
-        decayed window over fit generations); the loss/objective stays
-        fresh-data-only, and ``FitResult.stats`` carries the effective
-        statistics for the next generation.
+        decayed window over fit generations); with ``config.window >= 1``
+        it instead folds a HARD-EXPIRY ring of the last window-1
+        generations' fresh partials at full weight
+        (``stats.StatsWindow`` — exact data expiry for the online
+        scenario). Either way the loss/objective stays fresh-data-only;
+        ``FitResult.stats`` carries the effective statistics and
+        ``FitResult.stats_window`` the advanced ring for the next
+        generation.
         """
         cfg = self.config
         if self.mesh is not None:
@@ -1060,7 +1111,15 @@ class PEMSVM:
         # fit — the window decays per fit GENERATION, not per iteration.
         prev = (None if rt.prev_stats is None else
                 {k: jnp.asarray(v) for k, v in rt.prev_stats.items()})
+        # Hard-expiry ring (window >= 1): the retained generations'
+        # fresh partials, device-resident, frozen for the whole fit.
+        win = (stats.StatsWindow(
+                   cfg.window,
+                   [{k: jnp.asarray(v) for k, v in e.items()}
+                    for e in rt.window_entries])
+               if cfg.window >= 1 else None)
         eff_stats = None
+        fresh_stats = None
         peak_bytes = 0
 
         def chunk_source(skip):
@@ -1074,7 +1133,9 @@ class PEMSVM:
                 src = retrying_chunks(
                     lambda done: chunk_source(skip0 + done),
                     retries=pol.loader_retries,
-                    backoff=pol.loader_backoff)
+                    backoff=pol.loader_backoff,
+                    jitter=pol.loader_jitter, seed=cfg.seed,
+                    stats=rt.retry_stats)
             else:
                 src = chunk_source(skip0)
             return ChunkPrefetcher(src, depth=cfg.prefetch)
@@ -1109,28 +1170,37 @@ class PEMSVM:
             # One blocking device->host transfer per iteration: the
             # statistics stay on device through every sweep/solve and
             # the scalar trace comes down in a single device_get.
-            nonlocal eff_stats
+            nonlocal eff_stats, fresh_stats
             midpass, rt.midpass = rt.midpass, None
+            keep_stats = cfg.decay > 0.0 or win is not None
             if is_mlt:
                 # MLT snapshots at iteration boundaries only (a sweep
                 # is per class; a mid-sweep cursor would also need the
                 # class index — not worth the surface).
-                eff_S, eff_b = [], []
+                eff_S, eff_b, fr_S, fr_b = [], [], [], []
                 for y_cls in range(cfg.num_classes):
                     t = sweep(lambda d, r0, _y=jnp.int32(y_cls):
                               fns["chunk"](d, state, sub, r0, _y, phi))
                     S, b = t["S"], t["b"]
+                    fr_S.append(S)
+                    fr_b.append(b)
                     if cfg.decay > 0.0 and prev is not None:
                         S = S + cfg.decay * prev["S"][y_cls]
                         b = b + cfg.decay * prev["b"][y_cls]
-                    if cfg.decay > 0.0:
+                    if win is not None:
+                        for e in win.entries:  # newest first, like folded
+                            S = S + e["S"][y_cls]
+                            b = b + e["b"][y_cls]
+                    if keep_stats:
                         eff_S.append(S)
                         eff_b.append(b)
                     state = fns["mstep"](state, S, b, sub,
                                          jnp.int32(y_cls))
-                if cfg.decay > 0.0:
+                if keep_stats:
                     eff_stats = {"S": jnp.stack(eff_S),
                                  "b": jnp.stack(eff_b)}
+                    fresh_stats = {"S": jnp.stack(fr_S),
+                                   "b": jnp.stack(fr_b)}
                 t = sweep(lambda d, r0: fns["obj"](d, state, phi))
                 obj, mask_sum = jax.device_get(
                     (fns["obj_total"](state, t["loss"]), t["mask_sum"]))
@@ -1152,11 +1222,15 @@ class PEMSVM:
                               row00=midpass["row0"], saver=sv)
                 else:
                     t = sweep(body, saver=sv)
-                if cfg.decay > 0.0:
-                    if prev is not None:
-                        t = dict(t)
+                if keep_stats:
+                    fresh_stats = {"S": t["S"], "b": t["b"]}
+                    t = dict(t)
+                    if cfg.decay > 0.0 and prev is not None:
                         t["S"] = t["S"] + cfg.decay * prev["S"]
                         t["b"] = t["b"] + cfg.decay * prev["b"]
+                    if win is not None:
+                        folded = win.folded(fresh_stats)
+                        t["S"], t["b"] = folded["S"], folded["b"]
                     eff_stats = {"S": t["S"], "b": t["b"]}
                 state, obj_dev = fns["mstep"](t["S"], t["b"], t["loss"],
                                               sub)
@@ -1175,9 +1249,14 @@ class PEMSVM:
 
         result = self._fit_host_loop(iterate, state0, rt)
         result.peak_input_bytes = int(peak_bytes)
-        if cfg.decay > 0.0 and eff_stats is not None:
+        if eff_stats is not None:
             result.stats = {k: np.asarray(v)
                             for k, v in eff_stats.items()}
+        if win is not None and fresh_stats is not None:
+            # The ring the NEXT generation folds: this fit's fresh
+            # partials pushed in front, horizon enforced.
+            result.stats_window = win.advance(
+                {k: np.asarray(v) for k, v in fresh_stats.items()})
         return result
 
     # ------------------------------------------------------ setup helpers

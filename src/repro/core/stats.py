@@ -13,6 +13,7 @@ dominant collective from K^2 to K(K+1)/2 elements.
 """
 from __future__ import annotations
 
+import itertools
 from typing import Sequence
 
 import jax
@@ -206,3 +207,66 @@ def draw_weight(key: jax.Array, L: jnp.ndarray, mu: jnp.ndarray) -> jnp.ndarray:
     """MC draw w ~ N(mu, P^{-1}) via w = mu + L^{-T} z (paper Eq. 4)."""
     z = jax.random.normal(key, mu.shape, dtype=mu.dtype)
     return mu + jax.scipy.linalg.solve_triangular(L.T, z, lower=False)
+
+
+class StatsWindow:
+    """Hard-expiry ring of per-generation (Sigma, b) statistic partials
+    — the windowed alternative to the geometric ``SVMConfig.decay``
+    warm start (DESIGN.md §Reliability).
+
+    Decay folds the previous generation's EFFECTIVE statistics in at
+    weight d, so every generation ever seen keeps a geometric tail —
+    old data never fully leaves the model. A window instead retains the
+    FRESH partials of the last ``horizon - 1`` generations verbatim and
+    sums them at full weight; a generation older than the horizon is
+    dropped outright. Because (Sigma, b) are plain sums over rows, the
+    drop is EXACT data expiry: the expired rows' contribution to the
+    effective statistic is identically zero afterwards — the semantics
+    GDPR-style retention horizons need and decay cannot give.
+
+    ``entries[0]`` is the newest retained previous generation. The ring
+    is frozen for the whole fit (generations advance per fit, not per
+    iteration — same contract as decay) and rides the checkpoint
+    payload verbatim (``pack``/``unpack``), so a killed fit resumes
+    folding bit-identical sums: resume-exactness reduces to the ring
+    arrays being restored as saved, which ``core.resume`` tests pin.
+    """
+
+    def __init__(self, horizon: int, entries=()):
+        assert horizon >= 1, horizon
+        self.horizon = int(horizon)
+        self.entries = [dict(e) for e in entries][: self.horizon - 1]
+
+    def folded(self, fresh: dict) -> dict:
+        """Effective statistics for the M-step: fresh + every retained
+        generation at full weight (newest first — a fixed association
+        order, so repeated folds are bitwise reproducible)."""
+        out = dict(fresh)
+        for e in self.entries:
+            out["S"] = out["S"] + e["S"]
+            out["b"] = out["b"] + e["b"]
+        return out
+
+    def advance(self, fresh: dict) -> list[dict]:
+        """The ring the NEXT generation carries: this generation's fresh
+        partials pushed in front, hard-truncated to the horizon."""
+        head = [{k: np.asarray(fresh[k]) for k in ("S", "b")}]
+        return (head + self.entries)[: self.horizon - 1]
+
+    @staticmethod
+    def pack(entries) -> dict:
+        """Flat ``{win{i}_{S,b}: array}`` dict for the checkpoint
+        payload (``core.resume.save_snapshot``)."""
+        return {f"win{i}_{k}": np.asarray(e[k])
+                for i, e in enumerate(entries) for k in ("S", "b")}
+
+    @staticmethod
+    def unpack(arrays: dict) -> list:
+        """Inverse of ``pack`` over a flat checkpoint-arrays dict."""
+        out: list[dict] = []
+        for i in itertools.count():
+            if f"win{i}_S" not in arrays:
+                break
+            out.append({"S": np.asarray(arrays[f"win{i}_S"]),
+                        "b": np.asarray(arrays[f"win{i}_b"])})
+        return out

@@ -5,5 +5,6 @@ from .synthetic import (  # noqa: F401
     make_blobs, make_circles, make_lm_tokens)
 from .libsvm import (iter_libsvm, load_libsvm, parse_libsvm_line,  # noqa: F401
                      save_libsvm)
-from .pipeline import (ChunkPrefetcher, ShardedBatcher,  # noqa: F401
-                       pad_features_to, reservoir_rows, retrying_chunks)
+from .pipeline import (ChunkPrefetcher, RetryStats,  # noqa: F401
+                       ShardedBatcher, pad_features_to, reservoir_rows,
+                       retrying_chunks)

@@ -15,6 +15,7 @@ Two consumers share the double-buffering pattern here:
 """
 from __future__ import annotations
 
+import dataclasses
 import queue
 import threading
 import time
@@ -104,10 +105,25 @@ def reservoir_rows(chunks: Iterable, m: int, seed: int = 0
     return np.stack(reservoir), seen
 
 
+@dataclasses.dataclass
+class RetryStats:
+    """Cumulative loader-retry accounting for one consumer — how much
+    I/O flakiness a fit absorbed. ``retrying_chunks`` mutates the
+    instance it is handed; the stream driver threads one per fit and
+    surfaces it as ``FitResult.loader_retries``/``loader_backoff_s`` so
+    an outer controller (``runtime.controller``) can budget on it."""
+
+    retries: int = 0          # total retry_on failures absorbed
+    backoff_s: float = 0.0    # total seconds slept backing off
+    exhausted: int = 0        # budgets that ran out (error re-raised)
+
+
 def retrying_chunks(factory: Callable[[int], Iterable], *,
                     retries: int = 3, backoff: float = 0.05,
+                    jitter: float = 0.0, seed: int = 0,
                     retry_on: tuple = (IOError, OSError),
-                    sleep: Callable[[float], None] = time.sleep
+                    sleep: Callable[[float], None] = time.sleep,
+                    stats: RetryStats | None = None
                     ) -> Iterator:
     """Bounded retry + exponential backoff around a restartable chunk
     source — how ``driver="stream"`` turns a flaky filesystem into
@@ -118,14 +134,21 @@ def retrying_chunks(factory: Callable[[int], Iterable], *,
     re-open + fast-forward; ``itertools.islice`` over a fresh generator
     works for any source). On a ``retry_on`` error the source is
     re-created past the chunks already yielded, after sleeping
-    ``backoff * 2**(attempt-1)`` seconds; ``retries`` CONSECUTIVE
-    failures at the same position exhaust the budget and re-raise (a
-    success resets the count, so a loader failing every nth chunk once
-    is survivable indefinitely with retries >= 1). ``retries=0`` is
-    pass-through. Exceptions outside ``retry_on`` — including the fault
-    harness's ``SimulatedPreemption`` — propagate immediately: a
-    preemption is not a retryable IO blip.
+    ``backoff * 2**(attempt-1) * (1 + jitter*u)`` seconds with
+    ``u ~ U[0,1)`` drawn from a ``seed``-keyed generator — DETERMINISTIC
+    jitter: the same (seed, failure sequence) sleeps the same schedule,
+    so chaos tests replay bit-for-bit while a fleet of consumers with
+    distinct seeds desynchronizes instead of thundering-herding a
+    recovering filesystem. ``retries`` CONSECUTIVE failures at the same
+    position exhaust the budget and re-raise (a success resets the
+    count, so a loader failing every nth chunk once is survivable
+    indefinitely with retries >= 1). ``retries=0`` is pass-through.
+    Exceptions outside ``retry_on`` — including the fault harness's
+    ``SimulatedPreemption`` — propagate immediately: a preemption is not
+    a retryable IO blip. ``stats`` (a :class:`RetryStats`) accumulates
+    what was absorbed.
     """
+    rng = np.random.default_rng(seed)
     yielded = 0
     attempt = 0
     it = None
@@ -139,8 +162,16 @@ def retrying_chunks(factory: Callable[[int], Iterable], *,
         except retry_on:
             attempt += 1
             if attempt > retries:
+                if stats is not None:
+                    stats.exhausted += 1
                 raise
-            sleep(backoff * (2 ** (attempt - 1)))
+            pause = backoff * (2 ** (attempt - 1))
+            if jitter > 0.0:
+                pause *= 1.0 + jitter * float(rng.random())
+            if stats is not None:
+                stats.retries += 1
+                stats.backoff_s += pause
+            sleep(pause)
             it = None
             continue
         attempt = 0

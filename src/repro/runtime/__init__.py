@@ -1,9 +1,16 @@
 """Runtime control plane: fault policy, straggler detection, elastic
-re-meshing, and the deterministic fault-injection harness that proves
-the recovery paths work (DESIGN.md §Reliability)."""
+re-meshing, the fleet supervisor that owns worker lifecycles, and the
+deterministic fault-injection harness that proves the recovery paths
+work (DESIGN.md §Reliability)."""
+from .controller import (AttemptCancelled, AttemptRecord,  # noqa: F401
+                         FleetController, FleetError, FleetPolicy,
+                         FleetResult, HostContext, HostDied,
+                         SubprocessHost)
 from .elastic import remesh, scale_batch_schedule  # noqa: F401
-from .faults import (SimulatedPreemption, compose_hooks,  # noqa: F401
-                     delay_chunks, delay_iterations, io_error_every_nth,
-                     kill_after_chunks, kill_at_iteration)
+from .faults import (FleetSchedule, SimulatedPreemption,  # noqa: F401
+                     SimulatedTermination, compose_hooks, delay_chunks,
+                     delay_iterations, hang_at_iteration,
+                     io_error_every_nth, kill_after_chunks,
+                     kill_at_iteration, terminate_at_iteration)
 from .policy import FaultPolicy, StragglerError  # noqa: F401
 from .straggler import StepTimeMonitor  # noqa: F401

@@ -1,0 +1,401 @@
+"""FleetController: the fit-side supervisor (DESIGN.md §Reliability).
+
+PR 6 made a single fit preemption-safe — kill it at any point and
+``fit(resume_from=...)`` replays the identical trajectory from the last
+committed snapshot. This module supplies the OTHER half the ROADMAP
+names: the outer control loop that treats a whole fleet of fit attempts
+as the unit of reliability. The controller owns worker lifecycles
+end-to-end:
+
+  * it LAUNCHES attempts — an in-process callable built per provisioning
+    level (``make_host(level)``), or a real OS process
+    (:class:`SubprocessHost`, the multi-host simulation: SIGTERM-able,
+    crash-isolatable);
+  * it CONSUMES the signals the workers already emit: ``StragglerError``
+    (``FaultPolicy(on_straggler="raise")``), preemption exceptions,
+    loader-retry exhaustion, and — through the shared checkpoint
+    directory — monotonic progress (``Checkpointer.all_steps`` is the
+    heartbeat: a worker that commits is alive AND advancing; a worker
+    that is alive but not committing is indistinguishable from a hang,
+    which is precisely what the watchdog assumes);
+  * it REACTS per a declarative :class:`FleetPolicy` — the state machine
+
+        attempt --retryable--> backoff --> relaunch (same level)
+        attempt --straggler--> DEGRADE (level+1: shrink the mesh)
+        attempt --no progress for watchdog_s--> kill --> relaunch
+        degraded + recover_commits of progress --> GROW (level-1)
+        attempt --terminal--> FleetError (fingerprint mismatch,
+                               poisoned checkpoint, unknown exception)
+
+    with retry budgets, exponential backoff + DETERMINISTIC jitter
+    (keyed on (policy.seed, attempt): replayable in tests, decorrelated
+    across controllers in a fleet), and shrink/grow re-provisioning by
+    relaunching onto a different level's mesh — the checkpoint format is
+    layout-free (``core/resume``), so "re-provision" is literally
+    ``make_host(new_level)`` + resume, with ``elastic.remesh`` placing
+    the restored tensors onto whatever mesh the new host holds.
+
+Because every worker failure funnels into resume-from-snapshot, the
+recovered model is bit-identical to the undisturbed fit whenever the
+relaunch keeps the same layout, and within the documented reassociation
+band across layouts — ``tests/test_fleet.py`` pins both under a
+deterministic chaos schedule (``runtime.faults.FleetSchedule``).
+
+Single-host caveat (documented, not hidden): cancelling an IN-PROCESS
+attempt is cooperative — the cancel check rides the per-iteration fault
+hook, so a worker hung inside one iteration is abandoned (daemon
+thread) rather than killed, and could in principle commit a stale
+snapshot after abandonment. Subprocess hosts have no such gap (SIGTERM
+then SIGKILL); a multi-host deployment would add writer fencing
+(attempt epoch in the step id) — noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import subprocess
+import sys
+import threading
+import time
+import warnings
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+
+from .faults import FleetSchedule
+from .policy import StragglerError
+
+
+class AttemptCancelled(RuntimeError):
+    """Raised inside a worker when the controller cancels its attempt
+    (watchdog kill or grow-back re-provisioning). Carries no verdict —
+    the controller classifies from its own recorded cancel reason."""
+
+
+class HostDied(RuntimeError):
+    """A subprocess host exited nonzero (crash / injected kill)."""
+
+
+class FleetError(RuntimeError):
+    """Terminal controller failure: a non-retryable worker error or an
+    exhausted retry budget. ``attempts`` carries the full lifecycle log
+    for post-mortems."""
+
+    def __init__(self, msg: str, attempts: list, cause=None):
+        super().__init__(msg)
+        self.attempts = attempts
+        self.cause = cause
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetPolicy:
+    """Declarative fleet reaction policy. Everything deterministic:
+    backoff jitter is keyed on (seed, attempt index), so a chaos test
+    replays the exact schedule and two controllers with different seeds
+    never synchronize their retry storms."""
+
+    max_attempts: int = 6           # total launches (incl. the first)
+    backoff_s: float = 0.05         # base relaunch delay; doubles per
+                                    # CONSECUTIVE failure
+    backoff_cap_s: float = 5.0      # exponential growth ceiling
+    jitter: float = 0.1             # delay *= 1 + jitter * U[0,1)
+    seed: int = 0                   # jitter determinism key
+    watchdog_s: float | None = None  # no checkpoint advance within this
+                                    # -> presume hang, kill, relaunch
+                                    # (None = no watchdog)
+    poll_s: float = 0.02            # progress-monitor poll interval
+    kill_grace_s: float = 2.0       # cancel -> abandon/SIGKILL deadline
+    recover_commits: int = 0        # commits at a degraded level before
+                                    # growing back toward level 0
+                                    # (0 = stay degraded once shrunk)
+    # Classification. Terminal is checked FIRST, so FileNotFoundError
+    # (poisoned/empty checkpoint dir) stays terminal even though it is
+    # an OSError; ValueError covers the config-fingerprint mismatch and
+    # shape mismatches — retrying cannot fix a wrong config.
+    terminal: tuple = (ValueError, FileNotFoundError, AssertionError)
+    retryable: tuple = (RuntimeError, IOError, OSError)
+
+    def __post_init__(self):
+        assert self.max_attempts >= 1, self.max_attempts
+        assert self.backoff_s >= 0.0, self.backoff_s
+        assert self.backoff_cap_s >= self.backoff_s
+        assert self.jitter >= 0.0, self.jitter
+        assert self.watchdog_s is None or self.watchdog_s > 0.0
+        assert self.poll_s > 0.0, self.poll_s
+        assert self.recover_commits >= 0, self.recover_commits
+
+    def relaunch_delay(self, consecutive: int, attempt: int) -> float:
+        """Deterministic backoff before relaunch ``attempt`` after
+        ``consecutive`` straight failures (>= 1)."""
+        base = min(self.backoff_cap_s,
+                   self.backoff_s * (2 ** max(consecutive - 1, 0)))
+        u = float(np.random.default_rng((self.seed, attempt)).random())
+        return base * (1.0 + self.jitter * u)
+
+
+@dataclasses.dataclass
+class HostContext:
+    """Everything one attempt needs from the controller. ``fault_hook``
+    composes the scheduled injectors with the controller's cancel check
+    — pass it into ``fit(..., fault_hook=ctx.fault_hook)`` (or ignore it
+    for hosts, like subprocesses, that are cancelled externally)."""
+
+    attempt: int
+    level: int
+    resume_from: str | None
+    fault_hook: Callable[[int], None]
+    cancel: threading.Event
+
+
+@dataclasses.dataclass
+class AttemptRecord:
+    index: int
+    level: int
+    outcome: str                    # completed | retryable | straggler |
+    #                                 watchdog | abandoned | reprovision |
+    #                                 terminal
+    error: str | None = None
+    resume_step: int | None = None  # latest valid snapshot at launch
+    commits: int = 0                # checkpoint commits observed
+    seconds: float = 0.0
+    first_commit_s: float | None = None  # launch -> first commit (the
+    #                                 recovery-latency numerator)
+
+
+@dataclasses.dataclass
+class FleetResult:
+    result: Any                     # the completing attempt's FitResult
+    attempts: list                  # AttemptRecord log, launch order
+    final_level: int
+    n_relaunches: int               # attempts beyond the first
+    recovered: bool                 # True if any failure was absorbed
+
+
+class SubprocessHost:
+    """One attempt as a real OS process — the multi-host simulation.
+
+    ``code`` is a self-contained Python program (run via ``python -c``)
+    that performs the fit and exits 0; it reads its attempt context from
+    the environment: ``FLEET_ATTEMPT``, ``FLEET_LEVEL``,
+    ``FLEET_RESUME`` (empty string = fresh). Cancellation is REAL here:
+    the controller's cancel event becomes SIGTERM, then SIGKILL after
+    ``FleetPolicy.kill_grace_s` — no cooperative gap. Nonzero exit
+    raises :class:`HostDied` (retryable); on success ``load_result()``
+    (if given) produces the value returned to the controller — e.g.
+    reading the weights the program wrote, or loading the final
+    snapshot from the shared checkpoint directory.
+    """
+
+    def __init__(self, code: str, *, env: dict | None = None,
+                 load_result: Callable[[], Any] | None = None,
+                 grace_s: float = 2.0, poll_s: float = 0.05):
+        self.code = code
+        self.env = dict(env or {})
+        self.load_result = load_result
+        self.grace_s = grace_s
+        self.poll_s = poll_s
+
+    def __call__(self, ctx: HostContext) -> Any:
+        env = dict(os.environ, **self.env)
+        env["FLEET_ATTEMPT"] = str(ctx.attempt)
+        env["FLEET_LEVEL"] = str(ctx.level)
+        env["FLEET_RESUME"] = ctx.resume_from or ""
+        proc = subprocess.Popen([sys.executable, "-c", self.code],
+                                env=env, stdout=subprocess.PIPE,
+                                stderr=subprocess.STDOUT, text=True)
+        try:
+            while proc.poll() is None:
+                if ctx.cancel.is_set():
+                    proc.terminate()          # SIGTERM-style first
+                    try:
+                        proc.wait(timeout=self.grace_s)
+                    except subprocess.TimeoutExpired:
+                        proc.kill()
+                        proc.wait()
+                    raise AttemptCancelled(
+                        f"attempt {ctx.attempt} cancelled (subprocess "
+                        "terminated)")
+                time.sleep(self.poll_s)
+        finally:
+            if proc.poll() is None and ctx.cancel.is_set():
+                proc.kill()
+        out = proc.stdout.read() if proc.stdout else ""
+        if proc.returncode != 0:
+            tail = "\n".join(out.strip().splitlines()[-8:])
+            raise HostDied(
+                f"subprocess host exited {proc.returncode} on attempt "
+                f"{ctx.attempt}:\n{tail}")
+        return self.load_result() if self.load_result else None
+
+
+class FleetController:
+    """Supervise fit attempts until one completes or the policy says
+    stop. See the module docstring for the state machine.
+
+    ``make_host(level)`` returns the attempt callable for a provisioning
+    level: ``host(ctx: HostContext) -> result``. Level 0 is the full
+    fleet; higher levels are progressively degraded layouts (e.g. the
+    (2,2) k-shard mesh at 0, the flat (4,) mesh at 1). ``n_levels``
+    bounds degradation. The shared ``ckpt_dir`` is both the resume
+    source and the progress heartbeat; the controller never parses
+    snapshots itself, only watches committed step ids advance.
+    """
+
+    def __init__(self, make_host: Callable[[int], Callable],
+                 ckpt_dir: str, *, policy: FleetPolicy | None = None,
+                 n_levels: int = 1,
+                 schedule: FleetSchedule | None = None,
+                 sleep: Callable[[float], None] = time.sleep):
+        assert n_levels >= 1, n_levels
+        self.make_host = make_host
+        self.ckpt_dir = str(ckpt_dir)
+        self.policy = policy or FleetPolicy()
+        self.n_levels = n_levels
+        self.schedule = schedule or FleetSchedule()
+        self.sleep = sleep
+        self._ckpt = Checkpointer(self.ckpt_dir)
+
+    # ---------------------------------------------------------- internals
+    def _latest_step(self) -> int | None:
+        try:
+            return self._ckpt.latest_step()
+        except OSError:
+            return None
+
+    def _compose_hook(self, attempt: int, cancel: threading.Event
+                      ) -> Callable[[int], None]:
+        scheduled = self.schedule.hook_for(attempt, cancel)
+
+        def hook(it: int) -> None:
+            if scheduled is not None:
+                scheduled(it)
+            # After the injector: a cancel-aware hang returns here on
+            # wake-up and the attempt aborts cooperatively.
+            if cancel.is_set():
+                raise AttemptCancelled(
+                    f"attempt {attempt} cancelled at iteration {it}")
+        return hook
+
+    def _supervise(self, thread: threading.Thread, cancel: threading.Event,
+                   rec: AttemptRecord, level: int) -> str | None:
+        """Progress-monitor loop while the attempt thread runs. Returns
+        the cancel reason (None if the attempt ended on its own)."""
+        pol = self.policy
+        t0 = time.monotonic()
+        last_step = self._latest_step()
+        last_advance = t0
+        reason: str | None = None
+        while thread.is_alive():
+            time.sleep(pol.poll_s)
+            step = self._latest_step()
+            if step != last_step:
+                now = time.monotonic()
+                last_step = step
+                last_advance = now
+                rec.commits += 1
+                if rec.first_commit_s is None:
+                    rec.first_commit_s = now - t0
+            if reason is not None:
+                continue   # already cancelled; just drain the thread
+            if (level > 0 and pol.recover_commits > 0
+                    and rec.commits >= pol.recover_commits):
+                reason = "reprovision"   # healthy again: grow back
+                cancel.set()
+            elif (pol.watchdog_s is not None
+                    and time.monotonic() - last_advance > pol.watchdog_s):
+                reason = "watchdog"      # alive but not advancing
+                cancel.set()
+        return reason
+
+    # --------------------------------------------------------------- run
+    def run(self) -> FleetResult:
+        pol = self.policy
+        attempts: list[AttemptRecord] = []
+        level = 0
+        consecutive = 0
+        for attempt in range(pol.max_attempts):
+            cancel = threading.Event()
+            ctx = HostContext(
+                attempt=attempt, level=level,
+                resume_from=(self.ckpt_dir
+                             if self._latest_step() is not None else None),
+                fault_hook=self._compose_hook(attempt, cancel),
+                cancel=cancel)
+            rec = AttemptRecord(index=attempt, level=level, outcome="?",
+                                resume_step=self._latest_step())
+            attempts.append(rec)
+            host = self.make_host(level)
+            box: dict[str, Any] = {}
+
+            def work(host=host, ctx=ctx, box=box):
+                try:
+                    box["result"] = host(ctx)
+                except BaseException as e:  # noqa: BLE001 — classified
+                    box["error"] = e
+
+            t0 = time.monotonic()
+            thread = threading.Thread(target=work, daemon=True,
+                                      name=f"fleet-attempt-{attempt}")
+            thread.start()
+            reason = self._supervise(thread, cancel, rec, level)
+            thread.join(timeout=pol.kill_grace_s if cancel.is_set()
+                        else None)
+            rec.seconds = time.monotonic() - t0
+
+            if thread.is_alive():
+                # True hang: the cancel check never ran. Abandon the
+                # daemon thread and relaunch from the last snapshot.
+                warnings.warn(
+                    f"fleet attempt {attempt} did not exit within "
+                    f"{pol.kill_grace_s}s of cancellation; abandoning "
+                    "the worker thread (it can no longer win: a stale "
+                    "commit would be superseded by the relaunch's)",
+                    RuntimeWarning, stacklevel=2)
+                rec.outcome = "abandoned"
+                rec.error = f"cancelled ({reason}), thread abandoned"
+                consecutive += 1
+            elif "result" in box:
+                rec.outcome = "completed"
+                return FleetResult(result=box["result"], attempts=attempts,
+                                   final_level=level,
+                                   n_relaunches=attempt,
+                                   recovered=attempt > 0)
+            else:
+                err = box.get("error")
+                rec.error = repr(err)
+                if isinstance(err, AttemptCancelled):
+                    rec.outcome = reason or "cancelled"
+                    if reason == "reprovision":
+                        level = max(level - 1, 0)    # grow back
+                        consecutive = 0
+                    else:
+                        consecutive += 1             # watchdog kill
+                elif isinstance(err, StragglerError):
+                    rec.outcome = "straggler"
+                    level = min(level + 1, self.n_levels - 1)  # degrade
+                    consecutive = 0
+                elif isinstance(err, pol.terminal):
+                    rec.outcome = "terminal"
+                    raise FleetError(
+                        f"attempt {attempt} failed terminally "
+                        f"(non-retryable {type(err).__name__}); see "
+                        ".attempts for the lifecycle log", attempts,
+                        cause=err) from err
+                elif isinstance(err, pol.retryable):
+                    rec.outcome = "retryable"
+                    consecutive += 1
+                else:
+                    rec.outcome = "terminal"
+                    raise FleetError(
+                        f"attempt {attempt} raised unclassified "
+                        f"{type(err).__name__} — treating as terminal",
+                        attempts, cause=err) from err
+
+            if attempt + 1 < pol.max_attempts and consecutive > 0:
+                self.sleep(pol.relaunch_delay(consecutive, attempt + 1))
+
+        raise FleetError(
+            f"retry budget exhausted: {pol.max_attempts} attempts, none "
+            "completed", attempts)

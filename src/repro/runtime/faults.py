@@ -18,6 +18,21 @@ are reproducible bit-for-bit:
   * ``delay_chunks`` — per-chunk sleep injection, the stream driver's
     straggler simulator.
 
+Controller-level injectors (PR 8, ``runtime.controller``): a fleet
+supervisor sees faults per ATTEMPT, not per iteration, so the schedule
+moves up a level too:
+
+  * ``hang_at_iteration`` — a worker that stops making progress without
+    dying (the failure mode only a monotonic-progress watchdog catches):
+    blocks at iteration k until the controller's cancel event fires;
+  * ``terminate_at_iteration`` — SIGTERM-style graceful preemption: the
+    eviction notice arrives between iterations, after the boundary
+    checkpoint committed (distinct exception type so policies can treat
+    notice-ful eviction differently from SIGKILL);
+  * ``FleetSchedule`` — the deterministic per-attempt plan: attempt
+    index -> hook factory, so chaos tests replay the exact same fault
+    sequence on every run.
+
 The injectors wrap *chunk factories* (zero-arg callables returning a
 fresh iterator — exactly what ``PEMSVM.fit_chunks`` consumes) or act as
 ``fit(..., fault_hook=...)`` callables; they never reach into solver
@@ -25,8 +40,16 @@ internals, so the code under test is the production path.
 """
 from __future__ import annotations
 
+import threading
 import time
 from typing import Callable, Iterable, Iterator
+
+
+class SimulatedTermination(RuntimeError):
+    """SIGTERM-style graceful preemption: unlike ``SimulatedPreemption``
+    (SIGKILL — no notice), this models an eviction NOTICE delivered
+    between iterations, with the boundary checkpoint already committed.
+    Controllers may relaunch immediately (no crash suspicion)."""
 
 
 class SimulatedPreemption(RuntimeError):
@@ -107,6 +130,57 @@ def io_error_every_nth(make_chunks: Callable[[], Iterable], nth: int,
                     f"({fails[i]}/{times})")
             yield chunk
     return factory
+
+
+def terminate_at_iteration(k: int) -> Callable[[int], None]:
+    """``fault_hook`` delivering a graceful SIGTERM-style eviction right
+    after iteration ``k`` completes (boundary snapshot, if due, already
+    committed — the polite preemption cloud schedulers send first)."""
+    return kill_at_iteration(k, exc=SimulatedTermination)
+
+
+def hang_at_iteration(k: int, *, until: threading.Event,
+                      poll: float = 0.01, max_seconds: float = 60.0,
+                      sleep: Callable[[float], None] = time.sleep
+                      ) -> Callable[[int], None]:
+    """``fault_hook`` simulating a HANG at iteration ``k``: the worker
+    stops advancing (no checkpoint commits, no exception) until the
+    controller's cancel event ``until`` fires — exactly the failure a
+    liveness heartbeat misses and a monotonic-progress watchdog
+    catches. Once cancelled the hook raises nothing itself; the
+    controller's own cancel check (composed after it) converts the
+    wake-up into an attempt abort. ``max_seconds`` bounds the block so
+    a test with a broken watchdog fails instead of deadlocking."""
+    def hook(it: int) -> None:
+        if it != k:
+            return
+        t0 = time.monotonic()
+        while not until.is_set():
+            if time.monotonic() - t0 > max_seconds:
+                raise RuntimeError(
+                    f"hang_at_iteration({k}) gave up after "
+                    f"{max_seconds}s — no watchdog cancelled it")
+            sleep(poll)
+    return hook
+
+
+class FleetSchedule:
+    """Deterministic per-ATTEMPT fault plan for ``FleetController``:
+    ``plans[i]`` is a factory ``(cancel_event) -> fault_hook`` applied
+    to attempt ``i`` (0-based, counting every launch including
+    relaunches). Attempts without a plan run clean. The factory takes
+    the controller's cancel event so cancel-aware injectors
+    (``hang_at_iteration``) can be scheduled declaratively; factories
+    that ignore it are just ``lambda cancel: kill_at_iteration(5)``.
+    """
+
+    def __init__(self, plans: dict[int, Callable] | None = None):
+        self.plans = dict(plans or {})
+
+    def hook_for(self, attempt: int,
+                 cancel: threading.Event) -> Callable[[int], None] | None:
+        factory = self.plans.get(attempt)
+        return factory(cancel) if factory is not None else None
 
 
 def delay_chunks(make_chunks: Callable[[], Iterable],

@@ -48,6 +48,11 @@ class FaultPolicy:
     keep_k: int = 3                 # committed checkpoints retained on disk
     loader_retries: int = 3         # consecutive loader failures tolerated
     loader_backoff: float = 0.05    # base seconds; doubles per retry
+    loader_jitter: float = 0.0      # backoff *= 1 + jitter*U[0,1) — the
+                                    # draw is keyed on SVMConfig.seed, so
+                                    # it is DETERMINISTIC per fit while a
+                                    # fleet with distinct seeds spreads
+                                    # its retry storms
     straggler_threshold: float = 2.5  # x EMA -> straggler event
     straggler_warmup: int = 5       # steps ignored (compile noise)
     on_straggler: str = "record"    # record | drop | raise
@@ -58,6 +63,7 @@ class FaultPolicy:
         assert self.keep_k >= 1, self.keep_k
         assert self.loader_retries >= 0, self.loader_retries
         assert self.loader_backoff >= 0.0, self.loader_backoff
+        assert self.loader_jitter >= 0.0, self.loader_jitter
         assert self.straggler_threshold > 1.0, self.straggler_threshold
         assert self.on_straggler in ON_STRAGGLER, self.on_straggler
 

@@ -1,4 +1,5 @@
 """Serving substrate: LM prefill/decode steps + the SVM scoring path."""
 from .serve_step import generate, make_decode_step, make_prefill_step  # noqa: F401
-from .svm_serve import (DEFAULT_TILE, ServableModel, ServeLoop,  # noqa: F401
+from .svm_serve import (DEFAULT_TILE, DeadlineExceeded,  # noqa: F401
+                        ServableModel, ServeLoop, ServeRejected,
                         SVMScorer, WeightPager, phi_never_materialized)

@@ -370,12 +370,25 @@ class WeightPager:
         return s
 
 
+class DeadlineExceeded(RuntimeError):
+    """A request's per-request deadline passed before it was scored; its
+    Future fails with this instead of waiting forever."""
+
+
+class ServeRejected(RuntimeError):
+    """Backpressure: the intake queue is at capacity, so the request was
+    shed at submit time — an explicit, immediate rejection the client
+    can retry against another replica, instead of unbounded queueing
+    that turns overload into timeouts for everyone."""
+
+
 @dataclasses.dataclass
 class _Request:
     model: str
     X: np.ndarray
     future: Future
     t_submit: float
+    deadline_s: float | None = None   # absolute perf_counter() time
 
 
 class ServeLoop:
@@ -386,27 +399,55 @@ class ServeLoop:
     concatenates their rows, scores them as ONE bucketed dispatch
     through the :class:`WeightPager`, and splits the score rows back to
     each request's Future. Padding is mask-aware and per-tile fixed, so
-    coalescing never changes any request's bits (module docstring)."""
+    coalescing never changes any request's bits (module docstring).
+
+    Overload behavior is explicit (DESIGN.md §Reliability): with
+    ``max_queue`` set the intake is BOUNDED — a submit against a full
+    queue returns a Future already failed with :class:`ServeRejected`
+    (load shedding, counted in ``n_rejected``); a request whose
+    deadline (``deadline_ms`` per request, or ``default_deadline_ms``)
+    has passed by the time the drain picks it up fails with
+    :class:`DeadlineExceeded` instead of occupying a batch slot
+    (counted in ``n_expired``). Expiry is checked at drain time, so it
+    is deterministic under the synchronous ``step()`` drive."""
 
     def __init__(self, pager: WeightPager, *, max_batch: int = 1024,
-                 max_wait_ms: float = 2.0):
+                 max_wait_ms: float = 2.0, max_queue: int | None = None,
+                 default_deadline_ms: float | None = None):
+        assert max_queue is None or max_queue >= 1, max_queue
         self.pager = pager
         self.max_batch = max_batch
         self.max_wait_ms = max_wait_ms
-        self._q: queue.Queue[_Request] = queue.Queue()
+        self.default_deadline_ms = default_deadline_ms
+        self._q: queue.Queue[_Request] = queue.Queue(
+            maxsize=max_queue or 0)
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
         self.latencies_ms: list[float] = []
         self.n_requests = 0
         self.n_rows = 0
         self.n_batches = 0
+        self.n_rejected = 0
+        self.n_expired = 0
 
     # ------------------------------------------------------------- intake
-    def submit(self, model: str, X: np.ndarray) -> Future:
+    def submit(self, model: str, X: np.ndarray, *,
+               deadline_ms: float | None = None) -> Future:
         X = np.asarray(X, np.float32)
         assert X.ndim == 2 and X.shape[0] >= 1
         fut: Future = Future()
-        self._q.put(_Request(model, X, fut, time.perf_counter()))
+        now = time.perf_counter()
+        ms = deadline_ms if deadline_ms is not None \
+            else self.default_deadline_ms
+        deadline = now + ms / 1e3 if ms is not None else None
+        try:
+            self._q.put_nowait(_Request(model, X, fut, now, deadline))
+        except queue.Full:
+            self.n_rejected += 1
+            fut.set_exception(ServeRejected(
+                f"intake queue at capacity ({self._q.maxsize} requests); "
+                "request shed — retry against another replica or back "
+                "off"))
         return fut
 
     # -------------------------------------------------------------- drain
@@ -425,8 +466,22 @@ class ServeLoop:
         return reqs
 
     def _serve(self, reqs: list[_Request]) -> None:
-        by_model: dict[str, list[_Request]] = {}
+        # Deadline check first: an expired request must not occupy batch
+        # rows (its client has already given up).
+        now = time.perf_counter()
+        live: list[_Request] = []
         for r in reqs:
+            if r.deadline_s is not None and now > r.deadline_s:
+                self.n_expired += 1
+                r.future.set_exception(DeadlineExceeded(
+                    f"request for {r.model!r} expired after "
+                    f"{(now - r.t_submit) * 1e3:.1f} ms in queue "
+                    f"(deadline {(r.deadline_s - r.t_submit) * 1e3:.1f} "
+                    "ms)"))
+            else:
+                live.append(r)
+        by_model: dict[str, list[_Request]] = {}
+        for r in live:
             by_model.setdefault(r.model, []).append(r)
         for name, group in by_model.items():
             try:
@@ -481,7 +536,8 @@ class ServeLoop:
 
     # ------------------------------------------------------------- stats
     def latency_quantiles(self) -> dict:
+        counts = {"rejected": self.n_rejected, "expired": self.n_expired}
         if not self.latencies_ms:
-            return {"p50_ms": None, "p99_ms": None}
+            return {"p50_ms": None, "p99_ms": None, **counts}
         q = np.quantile(np.asarray(self.latencies_ms), [0.5, 0.99])
-        return {"p50_ms": float(q[0]), "p99_ms": float(q[1])}
+        return {"p50_ms": float(q[0]), "p99_ms": float(q[1]), **counts}

@@ -88,3 +88,79 @@ def test_meta_roundtrip_and_restore_named(tmp_path):
     # pinned step works too
     arrays2, m2 = ck.restore_named(step=7)
     assert m2["step"] == 7
+
+
+# ---------------------------------------- torn-write defense (PR 8)
+def _truncate(path, nbytes=8):
+    """Simulate a torn write: keep only the first bytes of a file —
+    what a power loss can leave behind despite a COMMIT marker written
+    by an fsync-less older writer."""
+    with open(path, "rb") as f:
+        head = f.read(nbytes)
+    with open(path, "wb") as f:
+        f.write(head)
+
+
+def test_torn_array_falls_back_with_warning(tmp_path):
+    """A truncated leaf in the NEWEST committed snapshot must not kill
+    the resume: restore warns and falls back to the previous keep_k
+    entry; ``latest_valid_step`` reports the step restore will use."""
+    ck = Checkpointer(str(tmp_path), keep_k=3)
+    for s in [1, 2, 3]:
+        ck.save(s, _tree(float(s)), blocking=True)
+    _truncate(tmp_path / "step_000000003" / "arrays" / "0.npy")
+
+    assert ck.latest_step() == 3                 # still committed...
+    with pytest.warns(RuntimeWarning, match="step_000000003"):
+        assert ck.latest_valid_step() == 2       # ...but not restorable
+    with pytest.warns(RuntimeWarning):
+        out = ck.restore(_tree(0.0))
+    np.testing.assert_allclose(np.asarray(out["a"]), 2.0)
+
+
+def test_torn_manifest_falls_back(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep_k=3)
+    ck.save(1, _tree(1.0), blocking=True)
+    ck.save(2, _tree(2.0), blocking=True)
+    _truncate(tmp_path / "step_000000002" / "manifest.json")
+    with pytest.warns(RuntimeWarning):
+        arrays, manifest = ck.restore_named()
+    assert manifest["step"] == 1
+
+
+def test_wrong_shape_on_disk_is_corruption(tmp_path):
+    """Bit-rot that still parses: an array whose shape/dtype disagrees
+    with the manifest is treated as corruption, not silently restored."""
+    ck = Checkpointer(str(tmp_path), keep_k=3)
+    ck.save(1, _tree(1.0), blocking=True)
+    ck.save(2, _tree(2.0), blocking=True)
+    np.save(tmp_path / "step_000000002" / "arrays" / "0.npy",
+            np.zeros((9, 9), np.float64))
+    with pytest.warns(RuntimeWarning, match="corrupt"):
+        out = ck.restore(_tree(0.0))
+    np.testing.assert_allclose(np.asarray(out["a"]), 1.0)
+
+
+def test_all_corrupt_is_poisoned_directory(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep_k=3)
+    for s in [1, 2]:
+        ck.save(s, _tree(float(s)), blocking=True)
+        _truncate(tmp_path / f"step_{s:09d}" / "manifest.json")
+    with pytest.warns(RuntimeWarning):
+        with pytest.raises(FileNotFoundError, match="poisoned"):
+            ck.restore(_tree(0.0))
+    with pytest.warns(RuntimeWarning):
+        assert ck.latest_valid_step() is None
+
+
+def test_pinned_step_loads_strictly(tmp_path):
+    """An EXPLICITLY pinned step does not silently fall back — the
+    caller asked for those bits, so corruption raises."""
+    ck = Checkpointer(str(tmp_path), keep_k=3)
+    ck.save(1, _tree(1.0), blocking=True)
+    ck.save(2, _tree(2.0), blocking=True)
+    _truncate(tmp_path / "step_000000002" / "arrays" / "0.npy")
+    with pytest.raises(Exception):
+        ck.restore(_tree(0.0), step=2)
+    out = ck.restore(_tree(0.0), step=1)         # older pin still fine
+    np.testing.assert_allclose(np.asarray(out["a"]), 1.0)

@@ -2,13 +2,16 @@
 path), no-retrace regression, MC uncertainty vs the host Sigma oracle,
 the score-convention fix, pad_features_to's width guard, the _phi /
 device-path feature-order pin, weight paging and the serve loop."""
+import time
+
 import numpy as np
 import pytest
 
 from repro.core import PEMSVM, SVMConfig
 from repro.core.nystrom import NystromSVM
 from repro.data.pipeline import pad_features_to
-from repro.serving import (ServableModel, ServeLoop, SVMScorer,
+from repro.serving import (DeadlineExceeded, ServableModel,  # noqa: F401
+                           ServeLoop, ServeRejected, SVMScorer,
                            WeightPager, phi_never_materialized)
 from repro.serving.svm_serve import TRACE_COUNTS
 
@@ -337,3 +340,71 @@ def test_scorer_rejects_wrong_width():
     svm, X = _fit("CLS", "linear")
     with pytest.raises(ValueError, match="expects"):
         svm.scorer().score(X[:5, :-1])
+
+
+# ------------------------------------ overload behavior (backpressure)
+def test_bounded_intake_sheds_with_explicit_rejection():
+    """max_queue bounds the intake: a submit against a full queue gets
+    an ALREADY-FAILED Future (ServeRejected) — explicit load shedding
+    the client can route around, never silent unbounded queueing."""
+    svm, X = _fit("CLS", "linear")
+    pager = WeightPager()
+    pager.register(svm.export_servable(name="m"))
+    loop = ServeLoop(pager, max_queue=2)
+
+    f1 = loop.submit("m", X[:4])
+    f2 = loop.submit("m", X[4:8])
+    f3 = loop.submit("m", X[8:12])             # over capacity
+    assert f3.done()                           # failed at submit time
+    with pytest.raises(ServeRejected, match="capacity"):
+        f3.result()
+    assert loop.n_rejected == 1
+
+    assert loop.step() == 2                    # queued pair still serves
+    assert np.array_equal(
+        np.concatenate([f1.result(timeout=5), f2.result(timeout=5)])[:, 0],
+        svm.decision_function(X[:8]))
+
+    f4 = loop.submit("m", X[:2])               # drained: capacity back
+    assert loop.step() == 1 and f4.result(timeout=5).shape[0] == 2
+    q = loop.latency_quantiles()
+    assert q["rejected"] == 1 and q["expired"] == 0
+
+
+def test_deadline_expires_at_drain_not_in_batch():
+    """A request whose deadline passed while queued fails with
+    DeadlineExceeded at drain time and never occupies batch rows; the
+    co-queued live request is unaffected. Expiry-at-drain keeps the
+    behavior deterministic under the synchronous step() drive."""
+    svm, X = _fit("CLS", "linear")
+    pager = WeightPager()
+    pager.register(svm.export_servable(name="m"))
+    loop = ServeLoop(pager)
+
+    doomed = loop.submit("m", X[:4], deadline_ms=1.0)
+    live = loop.submit("m", X[4:8])            # no deadline
+    time.sleep(0.05)
+    assert loop.step() == 2                    # both drained...
+    assert loop.n_requests == 1                # ...one served
+    assert loop.n_expired == 1
+    with pytest.raises(DeadlineExceeded, match="expired"):
+        doomed.result()
+    assert np.array_equal(live.result(timeout=5)[:, 0],
+                          svm.decision_function(X[4:8]))
+    assert loop.latency_quantiles()["expired"] == 1
+
+
+def test_default_deadline_applies_and_is_overridable():
+    svm, X = _fit("CLS", "linear")
+    pager = WeightPager()
+    pager.register(svm.export_servable(name="m"))
+    loop = ServeLoop(pager, default_deadline_ms=1.0)
+
+    doomed = loop.submit("m", X[:4])           # inherits the default
+    patient = loop.submit("m", X[4:8], deadline_ms=60_000.0)
+    time.sleep(0.05)
+    loop.step()
+    with pytest.raises(DeadlineExceeded):
+        doomed.result()
+    assert patient.result(timeout=5).shape[0] == 4
+    assert loop.n_expired == 1
