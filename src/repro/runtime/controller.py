@@ -205,6 +205,21 @@ class SubprocessHost:
         proc = subprocess.Popen([sys.executable, "-c", self.code],
                                 env=env, stdout=subprocess.PIPE,
                                 stderr=subprocess.STDOUT, text=True)
+        # Drain stdout concurrently: a child that writes more than the
+        # OS pipe buffer (~64KB) would otherwise block on write and
+        # never exit, turning a healthy-but-verbose worker into a hang
+        # (or a spurious watchdog kill).
+        out_parts: list[str] = []
+
+        def _drain(stream=proc.stdout):
+            try:
+                out_parts.append(stream.read())
+            except (OSError, ValueError):
+                pass
+
+        reader = threading.Thread(target=_drain, daemon=True,
+                                  name=f"fleet-stdout-{ctx.attempt}")
+        reader.start()
         try:
             while proc.poll() is None:
                 if ctx.cancel.is_set():
@@ -221,7 +236,8 @@ class SubprocessHost:
         finally:
             if proc.poll() is None and ctx.cancel.is_set():
                 proc.kill()
-        out = proc.stdout.read() if proc.stdout else ""
+            reader.join(timeout=self.grace_s)
+        out = "".join(out_parts)
         if proc.returncode != 0:
             tail = "\n".join(out.strip().splitlines()[-8:])
             raise HostDied(
@@ -279,16 +295,26 @@ class FleetController:
         return hook
 
     def _supervise(self, thread: threading.Thread, cancel: threading.Event,
-                   rec: AttemptRecord, level: int) -> str | None:
+                   rec: AttemptRecord, level: int,
+                   last_step: int | None) -> str | None:
         """Progress-monitor loop while the attempt thread runs. Returns
-        the cancel reason (None if the attempt ended on its own)."""
+        the cancel reason (None if the attempt ended on its own).
+        ``last_step`` is the committed-step baseline sampled just before
+        ``thread.start()``, so a commit landing between launch and the
+        first poll still counts.
+
+        After a cancel the loop drains the thread for at most
+        ``kill_grace_s`` more — a non-cooperative hang (worker stuck
+        inside one iteration, never reaching the fault hook) would
+        otherwise keep ``thread.is_alive()`` true forever; breaking out
+        lets ``run()``'s abandon branch engage as documented."""
         pol = self.policy
         t0 = time.monotonic()
-        last_step = self._latest_step()
         last_advance = t0
         reason: str | None = None
+        t_cancel = 0.0
         while thread.is_alive():
-            time.sleep(pol.poll_s)
+            self.sleep(pol.poll_s)
             step = self._latest_step()
             if step != last_step:
                 now = time.monotonic()
@@ -298,14 +324,18 @@ class FleetController:
                 if rec.first_commit_s is None:
                     rec.first_commit_s = now - t0
             if reason is not None:
-                continue   # already cancelled; just drain the thread
+                if time.monotonic() - t_cancel > pol.kill_grace_s:
+                    break      # non-cooperative hang: abandon in run()
+                continue       # cancelled; drain within the grace window
             if (level > 0 and pol.recover_commits > 0
                     and rec.commits >= pol.recover_commits):
                 reason = "reprovision"   # healthy again: grow back
+                t_cancel = time.monotonic()
                 cancel.set()
             elif (pol.watchdog_s is not None
                     and time.monotonic() - last_advance > pol.watchdog_s):
                 reason = "watchdog"      # alive but not advancing
+                t_cancel = time.monotonic()
                 cancel.set()
         return reason
 
@@ -338,8 +368,12 @@ class FleetController:
             t0 = time.monotonic()
             thread = threading.Thread(target=work, daemon=True,
                                       name=f"fleet-attempt-{attempt}")
+            # Baseline for commit counting, sampled immediately before
+            # launch (an abandoned prior worker may still commit late).
+            baseline_step = self._latest_step()
             thread.start()
-            reason = self._supervise(thread, cancel, rec, level)
+            reason = self._supervise(thread, cancel, rec, level,
+                                     baseline_step)
             thread.join(timeout=pol.kill_grace_s if cancel.is_set()
                         else None)
             rec.seconds = time.monotonic() - t0

@@ -423,6 +423,10 @@ class ServeLoop:
             maxsize=max_queue or 0)
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
+        # Counters are mutated from client threads (submit: n_rejected)
+        # and the drain thread (_serve: everything else) concurrently,
+        # so every read-modify-write goes through one lock.
+        self._stats_lock = threading.Lock()
         self.latencies_ms: list[float] = []
         self.n_requests = 0
         self.n_rows = 0
@@ -443,7 +447,8 @@ class ServeLoop:
         try:
             self._q.put_nowait(_Request(model, X, fut, now, deadline))
         except queue.Full:
-            self.n_rejected += 1
+            with self._stats_lock:
+                self.n_rejected += 1
             fut.set_exception(ServeRejected(
                 f"intake queue at capacity ({self._q.maxsize} requests); "
                 "request shed — retry against another replica or back "
@@ -472,7 +477,8 @@ class ServeLoop:
         live: list[_Request] = []
         for r in reqs:
             if r.deadline_s is not None and now > r.deadline_s:
-                self.n_expired += 1
+                with self._stats_lock:
+                    self.n_expired += 1
                 r.future.set_exception(DeadlineExceeded(
                     f"request for {r.model!r} expired after "
                     f"{(now - r.t_submit) * 1e3:.1f} ms in queue "
@@ -493,16 +499,18 @@ class ServeLoop:
                 for r in group:
                     r.future.set_exception(e)
                 continue
-            self.n_batches += 1
             done = time.perf_counter()
             i = 0
             for r in group:
                 n = r.X.shape[0]
                 r.future.set_result(scores[i:i + n])
                 i += n
-                self.n_requests += 1
-                self.n_rows += n
-                self.latencies_ms.append((done - r.t_submit) * 1e3)
+            with self._stats_lock:
+                self.n_batches += 1
+                self.n_requests += len(group)
+                self.n_rows += i
+                self.latencies_ms.extend(
+                    (done - r.t_submit) * 1e3 for r in group)
 
     def step(self) -> int:
         """Synchronous drain: serve everything queued right now.
@@ -536,8 +544,11 @@ class ServeLoop:
 
     # ------------------------------------------------------------- stats
     def latency_quantiles(self) -> dict:
-        counts = {"rejected": self.n_rejected, "expired": self.n_expired}
-        if not self.latencies_ms:
+        with self._stats_lock:
+            counts = {"rejected": self.n_rejected,
+                      "expired": self.n_expired}
+            lat = np.asarray(self.latencies_ms)
+        if lat.size == 0:
             return {"p50_ms": None, "p99_ms": None, **counts}
-        q = np.quantile(np.asarray(self.latencies_ms), [0.5, 0.99])
+        q = np.quantile(lat, [0.5, 0.99])
         return {"p50_ms": float(q[0]), "p99_ms": float(q[1]), **counts}

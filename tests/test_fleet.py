@@ -149,6 +149,46 @@ def test_fleet_watchdog_catches_hang(tmp_path):
     assert np.array_equal(ref.weights, fr.result.weights)
 
 
+def test_fleet_abandons_noncooperative_hang(tmp_path):
+    """A worker stuck INSIDE one iteration never reaches the fault hook,
+    so it cannot observe cancel: the watchdog fires, the supervise loop
+    waits at most kill_grace_s for it to exit, and run() abandons the
+    daemon thread (RuntimeWarning) instead of spinning on it forever —
+    the relaunch then completes normally."""
+    kw = dict(algorithm="EM", task="CLS", driver="loop", max_iters=8,
+              min_iters=8)
+    ref = PEMSVM(SVMConfig(**kw)).fit(X, Y_CLS)
+    cfg = SVMConfig(**kw, fault=FaultPolicy(ckpt_dir=str(tmp_path),
+                                            ckpt_every=1))
+    release = threading.Event()   # bounds the abandoned worker's life
+
+    def make_host(level):
+        def host(ctx):
+            if ctx.attempt == 0:
+                release.wait(30.0)    # ignores ctx.cancel entirely
+                raise RuntimeError("hung worker released")
+            return PEMSVM(cfg).fit(X, Y_CLS, resume_from=ctx.resume_from,
+                                   fault_hook=ctx.fault_hook)
+        return host
+
+    fc = FleetController(
+        make_host, str(tmp_path),
+        policy=FleetPolicy(max_attempts=3, backoff_s=1e-3,
+                           watchdog_s=0.3, poll_s=0.02,
+                           kill_grace_s=0.2))
+    try:
+        with pytest.warns(RuntimeWarning, match="abandoning"):
+            fr = fc.run()
+    finally:
+        release.set()
+
+    assert [a.outcome for a in fr.attempts] == ["abandoned", "completed"]
+    # Abandoned within ~watchdog + grace, not the worker's 30s hang.
+    assert fr.attempts[0].seconds < 5.0
+    assert fr.recovered and fr.final_level == 0
+    assert np.array_equal(ref.weights, fr.result.weights)
+
+
 def test_fleet_straggler_degrade_then_growback(tmp_path):
     """``on_straggler="raise"`` escalates to the controller: the fleet
     SHRINKS one provisioning level, and after ``recover_commits`` of
@@ -293,6 +333,29 @@ def test_subprocess_host_died_then_completes(tmp_path):
     assert "injected crash" in fr.attempts[0].error   # output tail kept
 
 
+def test_subprocess_verbose_child_does_not_deadlock(tmp_path):
+    """A child that writes far more than the OS pipe buffer (~64KB) to
+    stdout must still exit: stdout is drained concurrently, so a
+    healthy-but-verbose worker neither blocks on write nor gets killed
+    as a spurious 'watchdog'."""
+    code = textwrap.dedent("""
+        import sys
+        for i in range(4000):
+            print("x" * 80)          # ~320KB >> pipe buffer
+        sys.exit(0)
+    """)
+
+    fc = FleetController(
+        lambda level: SubprocessHost(code, load_result=lambda: "ok",
+                                     poll_s=0.02),
+        str(tmp_path),
+        policy=FleetPolicy(max_attempts=1, watchdog_s=20.0,
+                           poll_s=0.02))
+    fr = fc.run()
+    assert fr.result == "ok"
+    assert [a.outcome for a in fr.attempts] == ["completed"]
+
+
 def test_subprocess_watchdog_real_sigterm(tmp_path):
     """A subprocess that never commits progress: the watchdog fires and
     cancellation is REAL (SIGTERM, then SIGKILL past the grace window)
@@ -353,7 +416,11 @@ y = np.where(X @ w_true + 0.3 * rng.normal(size=N) > 0, 1.0, -1.0)
 
 kw = dict(algorithm="EM", task="CLS", driver="loop", max_iters=10,
           min_iters=10, eps=1e-2)
-floor = faults.delay_iterations(range(1, 11), 0.05)
+# Wide margins so a loaded machine cannot flip the outcome: the floor
+# dominates per-iteration compute jitter (a spurious straggler needs a
+# >2x-floor hiccup) and the injected spike stays >3x EMA even if the
+# sharded fit's real step time inflates the EMA by ~1s under load.
+floor = faults.delay_iterations(range(1, 11), 0.15)
 with tempfile.TemporaryDirectory() as d:
     pol = FaultPolicy(ckpt_dir=d, ckpt_every=2, keep_k=10,
                       on_straggler="raise", straggler_threshold=3.0,
@@ -380,7 +447,7 @@ with tempfile.TemporaryDirectory() as d:
         n_levels=2,
         schedule=FleetSchedule({
             0: lambda cancel: faults.compose_hooks(
-                floor, faults.delay_iterations([6], 0.5)),
+                floor, faults.delay_iterations([6], 2.5)),
             1: lambda cancel: floor,
         }))
     fr = fc.run()
