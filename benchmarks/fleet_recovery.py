@@ -14,21 +14,32 @@ when something does:
     commit (``AttemptRecord.first_commit_s`` — restore + re-warm +
     one checkpoint cadence, the span during which a second failure
     would lose ground), plus the end-to-end disturbed wall clock.
-    Gated by an absolute ceiling (env-tunable for slower runners).
+    Gated by an absolute ceiling (env-tunable for slower runners);
+  * lease takeover (ISSUE 9) — leader A freezes mid-supervision with a
+    NON-cooperative zombie worker; standby B's lease expiry takeover
+    (term+1) to B's FIRST checkpoint commit is the measured latency
+    (ttl wait + resume + re-warm + one cadence). Gated by
+    ttl + an absolute ceiling, plus the ZERO-LOST-COMMIT gate: the
+    zombie's late commit must be rejected at the rename boundary and
+    contribute no committed record after the takeover.
 """
 from __future__ import annotations
 
 import os
 import shutil
 import tempfile
+import threading
 import time
 
 import numpy as np
 
+from repro.checkpoint import Checkpointer, FencedCommitError
 from repro.core import PEMSVM, SVMConfig
 from repro.runtime import faults
-from repro.runtime.controller import FleetController, FleetPolicy
+from repro.runtime.controller import (FleetController, FleetError,
+                                      FleetPolicy)
 from repro.runtime.faults import FleetSchedule
+from repro.runtime.lease import LeasePolicy
 from repro.runtime.policy import FaultPolicy
 
 from .common import append_json, emit
@@ -40,6 +51,8 @@ BENCH_JSON = os.environ.get("BENCH_FLEET_JSON", "BENCH_fleet.json")
 OVERHEAD_GATE = float(os.environ.get("FLEET_OVERHEAD_GATE", "0.05"))
 NOISE_ALLOWANCE = 0.05          # shared-runner wall-clock jitter
 RECOVERY_GATE_S = float(os.environ.get("FLEET_RECOVERY_GATE_S", "30"))
+TAKEOVER_GATE_S = float(os.environ.get("FLEET_TAKEOVER_GATE_S", "30"))
+LEASE_TTL_S = 1.0               # benchmark election's expiry horizon
 
 
 def _data(full: bool):
@@ -139,6 +152,101 @@ def run(full: bool = False) -> None:
         assert fr.recovered and fr.result.resumed_at is not None
         assert np.isfinite(fr.result.weights).all()
 
+        # --- lease takeover: frozen leader, fenced zombie commit ------
+        reset()
+        frozen = threading.Event()
+        release = threading.Event()
+        zombie: dict = {}
+
+        def make_rogue(level):
+            def host(ctx):
+                # Ignores ctx.fault_hook/cancel: a genuine zombie. Its
+                # writer IS epoch-fenced, so the post-takeover commit
+                # must die at the rename boundary.
+                try:
+                    return PEMSVM(cfg).fit(
+                        X, y, resume_from=ctx.resume_from,
+                        fault_hook=faults.hold_at_iteration(
+                            iters // 2, release=release,
+                            max_seconds=600.0),
+                        epoch=ctx.epoch)
+                except Exception as e:  # noqa: BLE001 — recorded
+                    zombie["error"] = e
+                    raise
+            return host
+
+        def make_fenced(level):
+            def host(ctx):
+                return PEMSVM(cfg).fit(X, y, resume_from=ctx.resume_from,
+                                       fault_hook=ctx.fault_hook,
+                                       epoch=ctx.epoch)
+            return host
+
+        lease = LeasePolicy(ttl_s=LEASE_TTL_S, renew_every_s=0.2,
+                            poll_s=0.05)
+        A = FleetController(
+            make_rogue, d,
+            policy=FleetPolicy(max_attempts=2, poll_s=0.02,
+                               kill_grace_s=0.3),
+            lease=lease, owner="bench-A",
+            sleep=faults.freezable_sleep(frozen, max_seconds=600.0))
+        B = FleetController(
+            make_fenced, d,
+            policy=FleetPolicy(max_attempts=2, poll_s=0.02),
+            lease=lease, owner="bench-B")
+        out: dict = {}
+
+        def run_a():
+            try:
+                out["A"] = A.run()
+            except FleetError as e:     # LeadershipLost expected
+                out["A"] = e
+
+        ta = threading.Thread(target=run_a)
+        ta.start()
+        watcher = Checkpointer(d, keep_k=0)
+        hold_step = (iters // 2) * 1_000_000
+        deadline = time.time() + 600.0
+        while (watcher.latest_record() or (0, 0))[1] < hold_step:
+            assert time.time() < deadline, "leader's worker never held"
+            time.sleep(0.02)
+        t_freeze = time.time()
+        frozen.set()                    # the leader goes dark
+        tb = threading.Thread(
+            target=lambda: out.__setitem__("B", B.run()))
+        tb.start()
+        while (watcher.latest_record() or (0, 0))[0] < 2:
+            assert time.time() < deadline, "takeover never committed"
+            time.sleep(0.01)
+        takeover_s = time.time() - t_freeze
+        tb.join(timeout=600.0)
+        fr_b = out["B"]
+        records_at_takeover = watcher.all_records()
+        release.set()                   # zombie wakes, tries to commit
+        while "error" not in zombie:
+            assert time.time() < deadline, "zombie never hit the fence"
+            time.sleep(0.02)
+        lost = [r for r in watcher.all_records()
+                if r not in records_at_takeover]
+        frozen.clear()                  # deposed leader stands down
+        ta.join(timeout=600.0)
+        rows.append({
+            "name": "lease_takeover",
+            "seconds": takeover_s,
+            "ttl_s": LEASE_TTL_S,
+            "takeover_term": fr_b.term,
+            "resumed_at": fr_b.result.resumed_at,
+            "first_commit_s": (None if fr_b.attempts[0].first_commit_s
+                               is None
+                               else round(fr_b.attempts[0].first_commit_s,
+                                          4)),
+            "fenced_commit_rejected": isinstance(zombie.get("error"),
+                                                 FencedCommitError),
+            "lost_commits": len(lost),
+            "gated": True,
+            "n_iters": iters,
+        })
+
     emit(rows, "fleet_recovery")
     append_json(rows, BENCH_JSON)
     assert overhead <= OVERHEAD_GATE + NOISE_ALLOWANCE, (
@@ -149,6 +257,17 @@ def run(full: bool = False) -> None:
     assert first_commit is not None and first_commit <= RECOVERY_GATE_S, (
         f"relaunch took {first_commit}s to its first checkpoint commit "
         f"(gate {RECOVERY_GATE_S}s) — restore or re-warm has regressed")
+    assert takeover_s <= LEASE_TTL_S + TAKEOVER_GATE_S, (
+        f"lease takeover to first commit took {takeover_s:.2f}s (gate "
+        f"ttl {LEASE_TTL_S}s + {TAKEOVER_GATE_S}s) — election or "
+        "resume has regressed")
+    assert fr_b.term == 2 and fr_b.result.resumed_at is not None
+    assert isinstance(zombie.get("error"), FencedCommitError), (
+        f"zombie worker ended with {zombie.get('error')!r} instead of a "
+        "fenced commit — the rename-boundary rejection has regressed")
+    assert not lost, (
+        f"zero-lost-commit gate: {lost} landed after the takeover — a "
+        "fenced writer's commit became visible")
 
 
 if __name__ == "__main__":

@@ -3,13 +3,19 @@
 deterministic chaos schedule and demand the undisturbed bits
 (DESIGN.md §Reliability).
 
-Three gates, strongest first:
+Four gates, strongest first:
 
   * chaos recovery — a streaming MC fit supervised by
     ``FleetController`` is preempted (SIGKILL-style) on attempt 0 and
     evicted (SIGTERM-style) on attempt 1; the completing attempt's
     weights must equal the uninterrupted fit's BITWISE (the flaky-
     loader leg of the schedule is pinned in tests/test_fleet.py);
+  * split-brain takeover — two controllers co-supervise one checkpoint
+    directory; the leader freezes mid-supervision with a
+    non-cooperative zombie worker, the standby takes over at term+1,
+    the zombie's late commit is REJECTED at the rename boundary
+    (epoch fencing), and the recovered model is bitwise the
+    undisturbed fit;
   * windowed statistics — hard expiry is EXACT: a donor dragging
     generations beyond the horizon changes nothing (bitwise), and a
     killed windowed fit resumes bit-identically (the ring rides the
@@ -72,7 +78,93 @@ def main() -> int:
           f"resumed_at={fr.result.resumed_at}")
     ok &= bitwise and outcomes == ["retryable", "retryable", "completed"]
 
-    # --- 2. windowed statistics: exact expiry + resume-exact ring -------
+    # --- 2. split-brain: frozen leader, takeover, fenced zombie ---------
+    import threading
+    import time
+
+    from repro.checkpoint import Checkpointer, FencedCommitError
+    from repro.runtime.controller import FleetError
+    from repro.runtime.lease import LeasePolicy
+
+    kw2 = dict(algorithm="EM", driver="loop", max_iters=10, min_iters=10)
+    ref2 = PEMSVM(SVMConfig(**kw2)).fit(X, y)
+    with tempfile.TemporaryDirectory() as d:
+        cfg2 = SVMConfig(**kw2, fault=FaultPolicy(ckpt_dir=d,
+                                                  ckpt_every=1))
+        frozen, release = threading.Event(), threading.Event()
+        zombie: dict = {}
+
+        def make_rogue(level):
+            def host(ctx):
+                try:   # ignores cancel: a genuine zombie worker
+                    return PEMSVM(cfg2).fit(
+                        X, y, resume_from=ctx.resume_from,
+                        fault_hook=faults.hold_at_iteration(
+                            5, release=release, max_seconds=300.0),
+                        epoch=ctx.epoch)
+                except Exception as e:  # noqa: BLE001 — recorded
+                    zombie["error"] = e
+                    raise
+            return host
+
+        def make_fenced(level):
+            def host(ctx):
+                return PEMSVM(cfg2).fit(X, y, resume_from=ctx.resume_from,
+                                        fault_hook=ctx.fault_hook,
+                                        epoch=ctx.epoch)
+            return host
+
+        lease = LeasePolicy(ttl_s=0.6, renew_every_s=0.1, poll_s=0.05)
+        A = FleetController(
+            make_rogue, d,
+            policy=FleetPolicy(max_attempts=2, poll_s=0.02,
+                               kill_grace_s=0.3),
+            lease=lease, owner="smoke-A",
+            sleep=faults.freezable_sleep(frozen, max_seconds=300.0))
+        B = FleetController(
+            make_fenced, d,
+            policy=FleetPolicy(max_attempts=2, poll_s=0.02),
+            lease=lease, owner="smoke-B")
+        out: dict = {}
+
+        def run_a():
+            try:
+                out["A"] = A.run()
+            except FleetError as e:     # LeadershipLost expected
+                out["A"] = e
+
+        ta = threading.Thread(target=run_a)
+        ta.start()
+        watcher = Checkpointer(d, keep_k=0)
+        deadline = time.time() + 300.0
+        while (watcher.latest_record() or (0, 0))[1] < 5_000_000:
+            if time.time() > deadline:
+                print("leader's worker never held")
+                return 1
+            time.sleep(0.02)
+        frozen.set()
+        tb = threading.Thread(
+            target=lambda: out.__setitem__("B", B.run()))
+        tb.start()
+        tb.join(timeout=300.0)
+        fr_b = out["B"]
+        records = watcher.all_records()
+        release.set()
+        while "error" not in zombie:
+            if time.time() > deadline:
+                print("zombie never hit the fence")
+                return 1
+            time.sleep(0.02)
+        frozen.clear()
+        ta.join(timeout=300.0)
+        lost = [r for r in watcher.all_records() if r not in records]
+    bitwise2 = np.array_equal(ref2.weights, fr_b.result.weights)
+    fenced = isinstance(zombie["error"], FencedCommitError)
+    print(f"split-brain: takeover_term={fr_b.term} bitwise={bitwise2} "
+          f"zombie_fenced={fenced} lost_commits={len(lost)}")
+    ok &= fr_b.term == 2 and bitwise2 and fenced and not lost
+
+    # --- 3. windowed statistics: exact expiry + resume-exact ring -------
     import dataclasses
 
     kw = dict(algorithm="EM", driver="stream", chunk_rows=64,
@@ -104,7 +196,7 @@ def main() -> int:
           f"kill_resume_bitwise={resume_exact}")
     ok &= expiry and folds and resume_exact
 
-    # --- 3. SubprocessHost: crash -> retry -> complete ------------------
+    # --- 4. SubprocessHost: crash -> retry -> complete ------------------
     code = textwrap.dedent("""
         import os, sys
         sys.exit(3 if os.environ["FLEET_ATTEMPT"] == "0" else 0)

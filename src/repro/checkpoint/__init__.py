@@ -1,2 +1,5 @@
-"""Fault-tolerant checkpointing (async, atomic, keep-K, elastic restore)."""
-from .checkpointer import Checkpointer  # noqa: F401
+"""Fault-tolerant checkpointing (async, atomic, keep-K, elastic
+restore, epoch-fenced multi-writer safety)."""
+from .checkpointer import (Checkpointer, CheckpointWriteError,  # noqa: F401
+                           FencedCommitError, FencedWriterError,
+                           advance_fence, read_fence)

@@ -1,10 +1,14 @@
-"""Fault-tolerant checkpointing: async, atomic, keep-K, elastic restore.
+"""Fault-tolerant checkpointing: async, atomic, keep-K, elastic restore,
+epoch-fenced multi-writer safety.
 
-Layout (one directory per step):
-    <dir>/step_000100/
-        manifest.json        # tree structure, shapes, dtypes, mesh info
+Layout (one directory per step; the epoch tag appears for fenced
+writers with epoch > 0 — legacy single-writer directories stay valid):
+    <dir>/step_000000100/            # epoch-0 (legacy) name
+    <dir>/step_000000100.e000003/    # the same step written at epoch 3
+        manifest.json        # tree structure, shapes, dtypes, epoch
         arrays/<idx>.npy     # one file per leaf (host-gathered)
-    <dir>/step_000100.COMMIT # written last -> crash-safe atomicity
+    <dir>/step_000000100.e000003.COMMIT  # written last -> atomicity
+    <dir>/FENCE              # advance-only max epoch ever granted
 
 Design points for 1000+ node deployments (documented where this
 single-host implementation stands in for the multi-host version):
@@ -16,13 +20,27 @@ single-host implementation stands in for the multi-host version):
     file (arrays, manifest, the marker) is fsynced and the containing
     directories are fsynced around the rename, so the commit cannot be
     reordered ahead of its data by the page cache on a power loss;
+  * EPOCH FENCING makes the directory safe under multiple concurrent
+    writers (several controllers co-supervising one checkpoint store):
+    a writer opened with a fence token (``epoch=``) advances the
+    shared ``FENCE`` file at open; its commits re-read the fence AFTER
+    the data fsync and BEFORE the rename/COMMIT become visible, and a
+    superseded writer (fence > own epoch) has the commit rejected at
+    that rename boundary (``FencedCommitError``) — a zombie worker's
+    late commit can never win over a relaunch's line. Restore resolves
+    the newest snapshot by ``(epoch, step)`` ordering, epoch-major, so
+    even a commit that races past the fence check never outranks the
+    successor line. Fencing at COMMIT rather than at ``save()`` keeps
+    the check off the hot path and closes the enqueue->write race: the
+    authoritative read happens on the writer thread, after the data is
+    durable, immediately before visibility;
   * defense in depth past the marker: restore VALIDATES the newest
     committed snapshot (manifest parse, array load, shape/dtype check
-    against the manifest) and on a truncated/corrupt snapshot — torn
-    write, bit rot, an fsync-less writer from an older version — it
-    warns and falls back to the previous keep_k entry instead of
+    against the manifest) and on a truncated/corrupt/concurrently-GCed
+    snapshot it warns and falls back to the previous entry instead of
     crashing the resume (`latest_valid_step`/`restore*`);
-  * keep_k garbage collection bounds disk;
+  * keep_k garbage collection bounds disk (ordered by (epoch, step),
+    so a superseded line's snapshots age out first);
   * ELASTIC restore: arrays are saved as full (host-gathered) logical
     tensors, so a checkpoint written on a 2x16x16 mesh restores onto a
     16x16 (or any other) mesh — restore takes target shardings and
@@ -32,8 +50,10 @@ single-host implementation stands in for the multi-host version):
 """
 from __future__ import annotations
 
+import itertools
 import json
 import os
+import re
 import shutil
 import threading
 import time
@@ -42,6 +62,52 @@ from typing import Any
 
 import jax
 import numpy as np
+
+FENCE_FILE = "FENCE"
+
+_OWNER_SEQ = itertools.count()   # unique default owner per writer
+
+_FENCE_LOCK = threading.Lock()   # serialize in-process fence advances
+
+_STEP_RE = re.compile(r"^step_(\d{9})(?:\.e(\d{6}))?$")
+_COMMIT_RE = re.compile(r"^step_(\d{9})(?:\.e(\d{6}))?\.COMMIT$")
+_TMP_RE = re.compile(r"^\.tmp_step_(\d{9})(?:\.e(\d{6}))?(?:\.(.+))?$")
+
+
+class FencedWriterError(RuntimeError):
+    """Raised at ``Checkpointer`` construction when the fence token is
+    already superseded: another writer line (a lease takeover, a
+    relaunched attempt) advanced the shared FENCE past this epoch, so
+    nothing this writer could commit would ever be restored."""
+
+
+class FencedCommitError(RuntimeError):
+    """A commit was rejected at the rename boundary: the shared FENCE
+    advanced past this writer's epoch between open and commit — the
+    writer is a zombie (its controller abandoned it, or its controller
+    lost the lease) and its snapshot must not become visible."""
+
+    def __init__(self, msg: str, *, step: int, epoch: int, fence: int,
+                 directory: str):
+        super().__init__(msg)
+        self.step = step
+        self.epoch = epoch
+        self.fence = fence
+        self.directory = directory
+
+
+class CheckpointWriteError(RuntimeError):
+    """A background checkpoint write failed. Wraps the original error
+    with the step id and directory so a fleet log can attribute the
+    lost commit to a snapshot (the on-disk state stays at the previous
+    commit). The original exception rides ``__cause__``."""
+
+    def __init__(self, msg: str, *, step: int, epoch: int,
+                 directory: str):
+        super().__init__(msg)
+        self.step = step
+        self.epoch = epoch
+        self.directory = directory
 
 
 def _fsync_path(path: str) -> None:
@@ -54,6 +120,51 @@ def _fsync_path(path: str) -> None:
         os.close(fd)
 
 
+def read_fence(directory: str) -> int:
+    """Max epoch ever granted on this checkpoint directory (0 if no
+    fenced writer has opened it). Torn/corrupt fence files read as 0 —
+    advance-only semantics mean a reader can only under-estimate, and
+    an under-estimate never fences a legitimate writer out."""
+    try:
+        with open(os.path.join(directory, FENCE_FILE)) as f:
+            return int(json.load(f)["epoch"])
+    except (OSError, ValueError, KeyError, json.JSONDecodeError):
+        return 0
+
+
+def advance_fence(directory: str, epoch: int, owner: str | None = None
+                  ) -> int:
+    """Advance the shared fence to ``epoch`` (no-op if already there or
+    beyond); returns the resulting fence. The write is atomic
+    (tmp + fsync + rename + directory fsync), so a concurrent reader
+    sees either the old or the new epoch, never a tear. Advance-only:
+    the fence is the single monotonic counter that attempt epochs AND
+    lease terms are minted from (``runtime/lease.py``)."""
+    # The lock serializes in-process advancers (several controllers in
+    # one test process): without it, two threads could interleave
+    # read-then-replace and roll the fence BACKWARD. Cross-process the
+    # window is benign for correctness of the protocols built on top —
+    # terms/epochs are minted max(fence)+1 and verified after write
+    # (lease re-read; FencedWriterError at open) — but in-process we
+    # can simply not have the window.
+    with _FENCE_LOCK:
+        cur = read_fence(directory)
+        if epoch <= cur:
+            return cur
+        os.makedirs(directory, exist_ok=True)
+        tmp = os.path.join(
+            directory,
+            f".{FENCE_FILE}.tmp.{os.getpid()}.{next(_OWNER_SEQ)}")
+        with open(tmp, "w") as f:
+            json.dump({"epoch": int(epoch), "owner": owner,
+                       "time": time.time()}, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, os.path.join(directory, FENCE_FILE))
+        _fsync_path(directory)
+        return epoch
+
+
 def _tree_flatten_with_names(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     names = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
@@ -62,21 +173,66 @@ def _tree_flatten_with_names(tree):
 
 
 class Checkpointer:
-    def __init__(self, directory: str, keep_k: int = 3):
+    """``epoch=None`` (default) is the legacy single-writer mode: no
+    fence is advanced and commits are never rejected — exactly the
+    pre-fencing behavior. ``epoch=e`` opens a FENCED writer: the shared
+    FENCE advances to ``e`` at open (raising :class:`FencedWriterError`
+    if already superseded) and every commit re-checks the fence at the
+    rename boundary. ``owner`` scopes the tmp work directories so a
+    sweep never deletes a live competitor's in-flight write."""
+
+    def __init__(self, directory: str, keep_k: int = 3, *,
+                 epoch: int | None = None, owner: str | None = None):
         self.dir = directory
         self.keep_k = keep_k
+        self.epoch = int(epoch) if epoch is not None else 0
+        self._fenced = epoch is not None
+        self.owner = (str(owner) if owner
+                      else f"pid{os.getpid()}w{next(_OWNER_SEQ)}")
+        self.fenced_commits = 0          # rejected-at-boundary count
         os.makedirs(directory, exist_ok=True)
+        if self._fenced:
+            fence = read_fence(directory)
+            if fence > self.epoch:
+                raise FencedWriterError(
+                    f"checkpoint writer opened with fence token (epoch) "
+                    f"{self.epoch}, but {directory} has already granted "
+                    f"epoch {fence} — this writer line is superseded and "
+                    "must not commit (resume under a fresh epoch instead)")
+            advance_fence(directory, self.epoch, self.owner)
         self._sweep_stale_tmp()
         self._thread: threading.Thread | None = None
         self._error: Exception | None = None
 
+    # ------------------------------------------------------------- naming
+    def _name(self, step: int, epoch: int | None = None) -> str:
+        e = self.epoch if epoch is None else epoch
+        base = f"step_{step:09d}"
+        return base if e == 0 else f"{base}.e{e:06d}"
+
+    @staticmethod
+    def _parse_commit(fname: str) -> tuple[int, int] | None:
+        m = _COMMIT_RE.match(fname)
+        if m is None:
+            return None
+        return (int(m.group(2) or 0), int(m.group(1)))   # (epoch, step)
+
     def _sweep_stale_tmp(self) -> None:
-        """Remove ``.tmp_step_*`` work directories left by a crash
-        mid-save. They are never restore candidates (no COMMIT marker),
-        but without this sweep they accumulate forever on a preemption-
-        heavy deployment; construction is the natural restart point."""
+        """Remove stale ``.tmp_step_*`` work directories left by a
+        crash mid-save. OWNER-SCOPED: with several writers sharing the
+        directory, sweeping everything would delete a live competitor's
+        in-flight write. A tmp is swept iff it belongs to this owner,
+        predates this writer's epoch (its line is fenced — it can never
+        commit, so its work is garbage), or carries no owner tag at all
+        (legacy writer, by definition single-writer)."""
         for f in os.listdir(self.dir):
-            if f.startswith(".tmp_step_"):
+            m = _TMP_RE.match(f)
+            if m is None:
+                continue
+            tmp_epoch = int(m.group(2) or 0)
+            tmp_owner = m.group(3)
+            if (tmp_owner is None or tmp_owner == self.owner
+                    or tmp_epoch < self.epoch):
                 shutil.rmtree(os.path.join(self.dir, f),
                               ignore_errors=True)
 
@@ -94,12 +250,19 @@ class Checkpointer:
         host = [np.asarray(x) for x in leaves]   # device->host snapshot
 
         def _write():
+            name = self._name(step)
+            # Fenced writers OWN their tmp dirs (multi-writer safety);
+            # legacy writers keep the untagged PR-6 name, whose sweep
+            # assumes single-writer.
+            tmp = os.path.join(
+                self.dir, f".tmp_{name}.{self.owner}" if self._fenced
+                else f".tmp_{name}")
             try:
-                tmp = os.path.join(self.dir, f".tmp_step_{step:09d}")
-                final = os.path.join(self.dir, f"step_{step:09d}")
+                final = os.path.join(self.dir, name)
                 shutil.rmtree(tmp, ignore_errors=True)
                 os.makedirs(os.path.join(tmp, "arrays"))
-                manifest = {"step": step, "time": time.time(),
+                manifest = {"step": step, "epoch": self.epoch,
+                            "time": time.time(),
                             "meta": meta or {}, "leaves": []}
                 for i, (n, a) in enumerate(zip(names, host)):
                     with open(os.path.join(tmp, "arrays", f"{i}.npy"),
@@ -119,16 +282,52 @@ class Checkpointer:
                 # with torn contents.
                 _fsync_path(os.path.join(tmp, "arrays"))
                 _fsync_path(tmp)
-                shutil.rmtree(final, ignore_errors=True)
-                os.rename(tmp, final)
-                _fsync_path(self.dir)                  # durable rename
-                with open(final + ".COMMIT", "w") as f:
-                    f.flush()
-                    os.fsync(f.fileno())               # atomic commit mark
-                _fsync_path(self.dir)
+                # FENCE CHECK at the rename boundary: after the data
+                # fsync, before anything becomes visible. A writer
+                # whose epoch was superseded while it was writing (its
+                # controller lost the lease; its attempt was abandoned
+                # and relaunched) is a zombie — reject the commit.
+                if self._fenced:
+                    fence = read_fence(self.dir)
+                    if fence > self.epoch:
+                        shutil.rmtree(tmp, ignore_errors=True)
+                        self.fenced_commits += 1
+                        raise FencedCommitError(
+                            f"commit of {name} in {self.dir} rejected: "
+                            f"writer epoch {self.epoch} superseded by "
+                            f"fence {fence} — a newer attempt owns this "
+                            "checkpoint line (zombie write fenced out)",
+                            step=step, epoch=self.epoch, fence=fence,
+                            directory=self.dir)
+                if os.path.exists(final + ".COMMIT"):
+                    # Same (epoch, step) already committed — never
+                    # clobber a committed snapshot; same epoch + same
+                    # step means the identical trajectory bits anyway.
+                    shutil.rmtree(tmp, ignore_errors=True)
+                else:
+                    # A final dir WITHOUT a commit marker is the crash
+                    # window (death between rename and COMMIT): it was
+                    # never a restore candidate, so the next writer of
+                    # the same step replaces it.
+                    shutil.rmtree(final, ignore_errors=True)
+                    os.rename(tmp, final)
+                    _fsync_path(self.dir)              # durable rename
+                    with open(final + ".COMMIT", "w") as f:
+                        f.flush()
+                        os.fsync(f.fileno())           # atomic commit mark
+                    _fsync_path(self.dir)
                 self._gc()
-            except Exception as e:  # noqa: BLE001
+            except FencedCommitError as e:
                 self._error = e
+            except Exception as e:  # noqa: BLE001
+                shutil.rmtree(tmp, ignore_errors=True)
+                self._error = CheckpointWriteError(
+                    f"background checkpoint write of {name} in "
+                    f"{self.dir} failed ({e!r}) — the commit is lost; "
+                    "on-disk state stays at the previous committed "
+                    "snapshot", step=step, epoch=self.epoch,
+                    directory=self.dir)
+                self._error.__cause__ = e
 
         self._thread = threading.Thread(target=_write, daemon=True)
         self._thread.start()
@@ -144,33 +343,51 @@ class Checkpointer:
             raise err
 
     def _gc(self) -> None:
-        steps = self.all_steps()
-        for s in steps[: -self.keep_k] if self.keep_k else []:
-            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"),
+        if not self.keep_k:
+            return
+        records = self.all_records()
+        for e, s in records[: -self.keep_k]:
+            name = self._name(s, e)
+            shutil.rmtree(os.path.join(self.dir, name),
                           ignore_errors=True)
             try:
-                os.remove(os.path.join(self.dir, f"step_{s:09d}.COMMIT"))
+                os.remove(os.path.join(self.dir, name + ".COMMIT"))
             except OSError:
                 pass
 
     # ------------------------------------------------------------ restore
-    def all_steps(self) -> list[int]:
+    def all_records(self) -> list[tuple[int, int]]:
+        """All committed snapshots as ``(epoch, step)``, sorted
+        epoch-major: the LAST entry is what restore resolves with no
+        pin. Epoch-major ordering is the fencing guarantee's second
+        half — even a zombie commit that raced past the fence check
+        never outranks the successor line's snapshots."""
         out = []
         for f in os.listdir(self.dir):
-            if f.endswith(".COMMIT"):
-                out.append(int(f[len("step_"):-len(".COMMIT")]))
+            rec = self._parse_commit(f)
+            if rec is not None:
+                out.append(rec)
         return sorted(out)
 
-    def latest_step(self) -> int | None:
-        steps = self.all_steps()
-        return steps[-1] if steps else None
+    def all_steps(self) -> list[int]:
+        return sorted({s for _, s in self.all_records()})
 
-    def _read_step(self, step: int) -> tuple[dict, dict]:
-        """Load + VALIDATE one committed step: the manifest must parse
-        and every leaf array must load with the manifest's shape/dtype.
-        Raises on any corruption (truncated npy, torn manifest, missing
-        file) — the fallback loop below turns that into skip-and-warn."""
-        final = os.path.join(self.dir, f"step_{step:09d}")
+    def latest_record(self) -> tuple[int, int] | None:
+        records = self.all_records()
+        return records[-1] if records else None
+
+    def latest_step(self) -> int | None:
+        rec = self.latest_record()
+        return rec[1] if rec else None
+
+    def _read_record(self, epoch: int, step: int) -> tuple[dict, dict]:
+        """Load + VALIDATE one committed snapshot: the manifest must
+        parse and every leaf array must load with the manifest's
+        shape/dtype. Raises on any corruption (truncated npy, torn
+        manifest, missing file — including a directory a competitor's
+        GC deleted between listing and load) — the fallback loop below
+        turns that into skip-and-warn."""
+        final = os.path.join(self.dir, self._name(step, epoch))
         with open(os.path.join(final, "manifest.json")) as f:
             manifest = json.load(f)
         arrays: dict[str, np.ndarray] = {}
@@ -179,36 +396,48 @@ class Checkpointer:
             if (list(a.shape) != list(e["shape"])
                     or str(a.dtype) != e["dtype"]):
                 raise ValueError(
-                    f"leaf {e['name']!r} of step_{step:09d} loads as "
-                    f"{a.shape}/{a.dtype}, manifest says "
+                    f"leaf {e['name']!r} of {self._name(step, epoch)} "
+                    f"loads as {a.shape}/{a.dtype}, manifest says "
                     f"{e['shape']}/{e['dtype']} — corrupt snapshot")
             arrays[e["name"]] = a
         return arrays, manifest
 
+    def _resolve_pin(self, step: int) -> tuple[int, int]:
+        """A pinned step resolves to its newest epoch (the successor
+        line's copy when both a zombie and its successor committed the
+        same step id)."""
+        epochs = [e for e, s in self.all_records() if s == step]
+        if not epochs:
+            raise FileNotFoundError(
+                f"no committed checkpoint for step {step} in {self.dir}")
+        return max(epochs), step
+
     def _load_valid(self, step: int | None) -> tuple[int, dict, dict]:
         """Resolve ``step`` to a VALID snapshot. An explicit step is
         loaded strictly (corruption raises — the caller pinned it). With
-        ``step=None``, committed steps are tried newest-first; a
-        truncated/corrupt snapshot is skipped with a warning and the
-        previous keep_k entry is used instead, so one torn write never
-        poisons the whole resume directory."""
+        ``step=None``, committed records are tried newest-first in
+        ``(epoch, step)`` order; a truncated/corrupt/concurrently-
+        deleted snapshot is skipped with a warning and the previous
+        entry is used instead, so one torn write (or a competitor's GC
+        racing this read) never poisons the whole resume directory."""
         if step is not None:
-            arrays, manifest = self._read_step(step)
+            epoch, step = self._resolve_pin(step)
+            arrays, manifest = self._read_record(epoch, step)
             return step, arrays, manifest
-        steps = self.all_steps()
-        if not steps:
+        records = self.all_records()
+        if not records:
             raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
-        for s in reversed(steps):
+        for e, s in reversed(records):
             try:
-                arrays, manifest = self._read_step(s)
+                arrays, manifest = self._read_record(e, s)
                 return s, arrays, manifest
-            except Exception as e:  # noqa: BLE001 — corrupt: try older
+            except Exception as exc:  # noqa: BLE001 — corrupt: try older
                 warnings.warn(
-                    f"checkpoint step_{s:09d} in {self.dir} is "
-                    f"unreadable ({e!r}); falling back to the previous "
+                    f"checkpoint {self._name(s, e)} in {self.dir} is "
+                    f"unreadable ({exc!r}); falling back to the previous "
                     "committed snapshot", RuntimeWarning, stacklevel=3)
         raise FileNotFoundError(
-            f"all {len(steps)} committed checkpoints in {self.dir} are "
+            f"all {len(records)} committed checkpoints in {self.dir} are "
             "corrupt — nothing to restore (poisoned checkpoint "
             "directory)")
 
@@ -243,7 +472,15 @@ class Checkpointer:
                     "was saved (config/model mismatch?)")
             a = arrays[n]
             want = tuple(getattr(leaf, "shape", a.shape))
-            assert tuple(a.shape) == want, (n, a.shape, want)
+            if tuple(a.shape) != want:
+                raise ValueError(
+                    f"checkpoint leaf {n!r} of step_{step:09d} in "
+                    f"{self.dir} has shape {tuple(a.shape)}, the restore "
+                    f"tree expects {want} — restoring requires matching "
+                    "logical shapes (checkpoints are layout-free, so an "
+                    "elastic remesh changes SHARDING, never shape; a "
+                    "shape change means a different dataset, "
+                    "featurization, or model was used)")
             out.append(jax.device_put(a, sh) if sh is not None
                        else jax.device_put(a))
         return jax.tree.unflatten(treedef, out)

@@ -29,7 +29,11 @@ fit with the SAME chunk_rows (checked at restore).
 
 Step numbering: ``step = it * 1_000_000 + chunk_idx`` — boundary saves
 (chunk_idx = 0) and mid-pass saves share one monotonic axis, so
-``Checkpointer.latest_step()`` is always the most recent commit.
+``Checkpointer.latest_step()`` is always the most recent commit of the
+newest writer line. Under multi-controller co-supervision each attempt
+additionally carries a fence EPOCH (``fit(..., epoch=)``); snapshots
+order epoch-major, so a zombie attempt's late commit — even one that
+lands — never outranks its successor's (DESIGN.md §Reliability).
 """
 from __future__ import annotations
 
@@ -121,6 +125,11 @@ def load_snapshot(ckpt: Checkpointer, step: int | None = None) -> dict:
     meta = manifest["meta"]
     payload = dict(meta)
     payload["step"] = manifest["step"]
+    # The attempt epoch the snapshot was committed under (0 for legacy
+    # unfenced writers). Outside the fingerprint on purpose: epochs are
+    # attempt lineage, not problem semantics — every epoch of the same
+    # fingerprint is the same trajectory.
+    payload["epoch"] = int(manifest.get("epoch", 0))
     payload["state"] = arrays["state"]
     payload["key"] = arrays["key"]
     payload["samp_sum"] = arrays["samp_sum"]

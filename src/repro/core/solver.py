@@ -391,7 +391,7 @@ class _FitRuntime:
     """
 
     def __init__(self, svm: "PEMSVM", resume_from, resume_step,
-                 warm_start, live, fault_hook):
+                 warm_start, live, fault_hook, epoch: int | None = None):
         cfg = svm.config
         self.svm = svm
         self.policy = cfg.fault or FaultPolicy()
@@ -415,15 +415,26 @@ class _FitRuntime:
         if resume_step is not None and resume_from is None:
             raise ValueError("resume_step without resume_from")
 
+        # ``epoch`` is the attempt's fence token (minted by an outer
+        # controller / lease takeover): the writer advances the shared
+        # FENCE at open — raising FencedWriterError if this attempt is
+        # already superseded — and every commit re-checks it at the
+        # rename boundary, so an abandoned zombie attempt can never
+        # land a stale snapshot over its successor's line. None keeps
+        # the legacy unfenced single-writer behavior.
+        self.epoch = epoch
         self.ckpt = (Checkpointer(self.policy.ckpt_dir,
-                                  keep_k=self.policy.keep_k)
+                                  keep_k=self.policy.keep_k,
+                                  epoch=epoch)
                      if self.policy.checkpoints_enabled else None)
 
         self.payload: dict | None = None
         if resume_from is not None:
             src = (resume_from if isinstance(resume_from, Checkpointer)
                    else Checkpointer(str(resume_from),
-                                     keep_k=self.policy.keep_k))
+                                     keep_k=self.policy.keep_k,
+                                     epoch=(epoch if self.ckpt is None
+                                            else None)))
             self.payload = resume_mod.load_snapshot(src, resume_step)
             resume_mod.check_compatible(self.payload, cfg)
             self.resumed_at = int(self.payload["it"])
@@ -674,7 +685,8 @@ class PEMSVM:
     def fit(self, X: np.ndarray, y: np.ndarray, *,
             resume_from=None, resume_step: int | None = None,
             warm_start: FitResult | None = None,
-            live=None, fault_hook: Callable | None = None) -> FitResult:
+            live=None, fault_hook: Callable | None = None,
+            epoch: int | None = None) -> FitResult:
         """Fit. The keyword group is the elastic/preemption-safe surface:
 
         ``resume_from`` (dir path or ``Checkpointer``) continues a
@@ -688,10 +700,14 @@ class PEMSVM:
         model instead of refitting from scratch. ``live`` is an initial
         per-data-shard liveness vector (mesh only). ``fault_hook(it)``
         is called once per completed iteration — the deterministic
-        fault-injection seam (``repro.runtime.faults``).
+        fault-injection seam (``repro.runtime.faults``). ``epoch`` is
+        the attempt's fence token under multi-controller co-supervision
+        (``HostContext.epoch``): commits carry it, restore orders by
+        (epoch, step), and a superseded attempt's commits are rejected
+        at the rename boundary (DESIGN.md §Reliability).
         """
         rt = _FitRuntime(self, resume_from, resume_step, warm_start,
-                         live, fault_hook)
+                         live, fault_hook, epoch)
         cfg = self.config
         X = np.asarray(X, np.float32)
         y = np.asarray(y)
@@ -777,7 +793,8 @@ class PEMSVM:
     def fit_chunks(self, make_chunks: Callable, K: int, *,
                    resume_from=None, resume_step: int | None = None,
                    warm_start: FitResult | None = None,
-                   fault_hook: Callable | None = None) -> FitResult:
+                   fault_hook: Callable | None = None,
+                   epoch: int | None = None) -> FitResult:
         """Out-of-core fit over an arbitrary restartable chunk source.
 
         ``make_chunks()`` returns a fresh iterator of host
@@ -799,7 +816,7 @@ class PEMSVM:
                 "driver='stream' cannot use the exact N x N Gram "
                 "statistic; use NystromSVM (phi-space streams raw rows)")
         rt = _FitRuntime(self, resume_from, resume_step, warm_start,
-                         None, fault_hook)
+                         None, fault_hook, epoch)
         try:
             return self._fit_stream(make_chunks, K, rt)
         finally:

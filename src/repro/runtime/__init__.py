@@ -1,16 +1,20 @@
 """Runtime control plane: fault policy, straggler detection, elastic
-re-meshing, the fleet supervisor that owns worker lifecycles, and the
-deterministic fault-injection harness that proves the recovery paths
-work (DESIGN.md §Reliability)."""
+re-meshing, the fleet supervisor that owns worker lifecycles (with
+lease-based leader election for multi-controller co-supervision), and
+the deterministic fault-injection harness that proves the recovery
+paths work (DESIGN.md §Reliability)."""
 from .controller import (AttemptCancelled, AttemptRecord,  # noqa: F401
                          FleetController, FleetError, FleetPolicy,
                          FleetResult, HostContext, HostDied,
-                         SubprocessHost)
+                         LeadershipLost, SubprocessHost)
 from .elastic import remesh, scale_batch_schedule  # noqa: F401
 from .faults import (FleetSchedule, SimulatedPreemption,  # noqa: F401
                      SimulatedTermination, compose_hooks, delay_chunks,
-                     delay_iterations, hang_at_iteration,
-                     io_error_every_nth, kill_after_chunks,
-                     kill_at_iteration, terminate_at_iteration)
+                     delay_iterations, freezable_sleep, hang_at_iteration,
+                     hold_at_iteration, io_error_every_nth,
+                     kill_after_chunks, kill_at_iteration, tear_file,
+                     terminate_at_iteration)
+from .lease import (LeaseLost, LeaseManager, LeasePolicy,  # noqa: F401
+                    LeaseState)
 from .policy import FaultPolicy, StragglerError  # noqa: F401
 from .straggler import StepTimeMonitor  # noqa: F401

@@ -14,7 +14,7 @@ end-to-end:
   * it CONSUMES the signals the workers already emit: ``StragglerError``
     (``FaultPolicy(on_straggler="raise")``), preemption exceptions,
     loader-retry exhaustion, and — through the shared checkpoint
-    directory — monotonic progress (``Checkpointer.all_steps`` is the
+    directory — monotonic progress (``Checkpointer.all_records`` is the
     heartbeat: a worker that commits is alive AND advancing; a worker
     that is alive but not committing is indistinguishable from a hang,
     which is precisely what the watchdog assumes);
@@ -41,17 +41,35 @@ relaunch keeps the same layout, and within the documented reassociation
 band across layouts — ``tests/test_fleet.py`` pins both under a
 deterministic chaos schedule (``runtime.faults.FleetSchedule``).
 
-Single-host caveat (documented, not hidden): cancelling an IN-PROCESS
-attempt is cooperative — the cancel check rides the per-iteration fault
-hook, so a worker hung inside one iteration is abandoned (daemon
-thread) rather than killed, and could in principle commit a stale
-snapshot after abandonment. Subprocess hosts have no such gap (SIGTERM
-then SIGKILL); a multi-host deployment would add writer fencing
-(attempt epoch in the step id) — noted in DESIGN.md.
+Epoch fencing (PR 9) closes the abandoned-worker window PR 8 could only
+document: the controller mints a fresh attempt EPOCH before every
+launch — ``advance_fence`` on the shared checkpoint directory, then
+``HostContext.epoch`` into the worker's ``fit(..., epoch=)``. A worker
+abandoned mid-iteration (cooperative cancel never reached) that later
+wakes and tries to commit finds the fence ahead of its epoch and is
+REJECTED at the rename boundary (``FencedCommitError``); and even a
+commit that raced past the fence check orders epoch-major below the
+successor's, so ``restore`` never selects it. The abandon branch's
+"a stale commit can no longer win" is now an enforced invariant, not a
+step-ordering hope. Hosts that ignore ``ctx.epoch`` (all PR 8 hosts)
+still work — their writers run unfenced, exactly the legacy behavior.
+
+Multi-controller co-supervision (PR 9): pass ``lease=LeasePolicy(...)``
+and several controllers may call ``run()`` on the SAME checkpoint
+directory. They elect a leader through a crash-safe lease file
+(``runtime.lease``): one acquires and supervises, the rest stand by and
+watch. The leader renews inside its supervision poll loop; if it
+freezes (GC pause, partition) past the ttl, a standby takes over at
+``term+1`` — which also advances the fence, so every worker the old
+leader ever launched is fenced out BEFORE the new leader launches its
+first resume. A deposed leader discovers the loss at its next renewal
+(or via a worker's ``FencedCommitError``) and raises
+:class:`LeadershipLost` rather than continuing a split brain.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import os
 import subprocess
 import sys
@@ -62,10 +80,14 @@ from typing import Any, Callable
 
 import numpy as np
 
-from repro.checkpoint import Checkpointer
+from repro.checkpoint import (Checkpointer, FencedCommitError,
+                              FencedWriterError, advance_fence, read_fence)
 
 from .faults import FleetSchedule
+from .lease import LeaseLost, LeaseManager, LeasePolicy
 from .policy import StragglerError
+
+_CTRL_SEQ = itertools.count()
 
 
 class AttemptCancelled(RuntimeError):
@@ -87,6 +109,15 @@ class FleetError(RuntimeError):
         super().__init__(msg)
         self.attempts = attempts
         self.cause = cause
+
+
+class LeadershipLost(FleetError):
+    """This controller was deposed mid-supervision: its lease expired
+    (missed renewals — frozen, partitioned) or a worker's commit came
+    back fenced, both meaning another controller now leads this
+    checkpoint directory. NOT a fleet failure — the usurper is already
+    resuming the fit from the last committed snapshot; this controller
+    must simply stop. ``attempts`` logs the deposed reign."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,7 +144,9 @@ class FleetPolicy:
     # Classification. Terminal is checked FIRST, so FileNotFoundError
     # (poisoned/empty checkpoint dir) stays terminal even though it is
     # an OSError; ValueError covers the config-fingerprint mismatch and
-    # shape mismatches — retrying cannot fix a wrong config.
+    # shape mismatches — retrying cannot fix a wrong config. Fencing
+    # errors are classified before either: they mean ANOTHER controller
+    # leads, which is LeadershipLost, not a worker fault.
     terminal: tuple = (ValueError, FileNotFoundError, AssertionError)
     retryable: tuple = (RuntimeError, IOError, OSError)
 
@@ -140,13 +173,18 @@ class HostContext:
     """Everything one attempt needs from the controller. ``fault_hook``
     composes the scheduled injectors with the controller's cancel check
     — pass it into ``fit(..., fault_hook=ctx.fault_hook)`` (or ignore it
-    for hosts, like subprocesses, that are cancelled externally)."""
+    for hosts, like subprocesses, that are cancelled externally).
+    ``epoch`` is the attempt's fence epoch — pass it into
+    ``fit(..., epoch=ctx.epoch)`` so this attempt's commits are fenced
+    against the directory (a host that ignores it writes unfenced,
+    which is safe but forfeits zombie-commit rejection for itself)."""
 
     attempt: int
     level: int
     resume_from: str | None
     fault_hook: Callable[[int], None]
     cancel: threading.Event
+    epoch: int = 0
 
 
 @dataclasses.dataclass
@@ -155,9 +193,10 @@ class AttemptRecord:
     level: int
     outcome: str                    # completed | retryable | straggler |
     #                                 watchdog | abandoned | reprovision |
-    #                                 terminal
+    #                                 lease-lost | fenced | terminal
     error: str | None = None
     resume_step: int | None = None  # latest valid snapshot at launch
+    epoch: int = 0                  # fence epoch minted for the attempt
     commits: int = 0                # checkpoint commits observed
     seconds: float = 0.0
     first_commit_s: float | None = None  # launch -> first commit (the
@@ -171,6 +210,8 @@ class FleetResult:
     final_level: int
     n_relaunches: int               # attempts beyond the first
     recovered: bool                 # True if any failure was absorbed
+    term: int = 0                   # lease term held while completing
+    #                                 (0 = no election configured)
 
 
 class SubprocessHost:
@@ -179,13 +220,15 @@ class SubprocessHost:
     ``code`` is a self-contained Python program (run via ``python -c``)
     that performs the fit and exits 0; it reads its attempt context from
     the environment: ``FLEET_ATTEMPT``, ``FLEET_LEVEL``,
-    ``FLEET_RESUME`` (empty string = fresh). Cancellation is REAL here:
-    the controller's cancel event becomes SIGTERM, then SIGKILL after
-    ``FleetPolicy.kill_grace_s` — no cooperative gap. Nonzero exit
-    raises :class:`HostDied` (retryable); on success ``load_result()``
-    (if given) produces the value returned to the controller — e.g.
-    reading the weights the program wrote, or loading the final
-    snapshot from the shared checkpoint directory.
+    ``FLEET_RESUME`` (empty string = fresh), ``FLEET_EPOCH`` (the fence
+    epoch — pass ``int(os.environ["FLEET_EPOCH"])`` into
+    ``fit(..., epoch=)`` for fenced commits). Cancellation is REAL
+    here: the controller's cancel event becomes SIGTERM, then SIGKILL
+    after ``FleetPolicy.kill_grace_s`` — no cooperative gap. Nonzero
+    exit raises :class:`HostDied` (retryable); on success
+    ``load_result()`` (if given) produces the value returned to the
+    controller — e.g. reading the weights the program wrote, or loading
+    the final snapshot from the shared checkpoint directory.
     """
 
     def __init__(self, code: str, *, env: dict | None = None,
@@ -202,6 +245,7 @@ class SubprocessHost:
         env["FLEET_ATTEMPT"] = str(ctx.attempt)
         env["FLEET_LEVEL"] = str(ctx.level)
         env["FLEET_RESUME"] = ctx.resume_from or ""
+        env["FLEET_EPOCH"] = str(ctx.epoch)
         proc = subprocess.Popen([sys.executable, "-c", self.code],
                                 env=env, stdout=subprocess.PIPE,
                                 stderr=subprocess.STDOUT, text=True)
@@ -256,14 +300,24 @@ class FleetController:
     (2,2) k-shard mesh at 0, the flat (4,) mesh at 1). ``n_levels``
     bounds degradation. The shared ``ckpt_dir`` is both the resume
     source and the progress heartbeat; the controller never parses
-    snapshots itself, only watches committed step ids advance.
+    snapshots itself, only watches committed (epoch, step) records
+    advance.
+
+    ``lease=LeasePolicy(...)`` opts into leader election: ``run()``
+    first wins (or stands by for) the directory's lease, and only the
+    leader supervises. ``owner`` names this controller in the lease and
+    fence files (defaults to a unique pid-scoped name). ``stop`` is an
+    external kill switch for a standby that should give up.
     """
 
     def __init__(self, make_host: Callable[[int], Callable],
                  ckpt_dir: str, *, policy: FleetPolicy | None = None,
                  n_levels: int = 1,
                  schedule: FleetSchedule | None = None,
-                 sleep: Callable[[float], None] = time.sleep):
+                 sleep: Callable[[float], None] = time.sleep,
+                 lease: LeasePolicy | None = None,
+                 owner: str | None = None,
+                 clock: Callable[[], float] = time.time):
         assert n_levels >= 1, n_levels
         self.make_host = make_host
         self.ckpt_dir = str(ckpt_dir)
@@ -271,14 +325,40 @@ class FleetController:
         self.n_levels = n_levels
         self.schedule = schedule or FleetSchedule()
         self.sleep = sleep
+        self.owner = owner or f"ctrl-pid{os.getpid()}-{next(_CTRL_SEQ)}"
+        self.stop = threading.Event()
+        self._lease = (LeaseManager(self.ckpt_dir, self.owner,
+                                    policy=lease, clock=clock)
+                       if lease is not None else None)
+        self._last_epoch = 0
         self._ckpt = Checkpointer(self.ckpt_dir)
 
     # ---------------------------------------------------------- internals
-    def _latest_step(self) -> int | None:
+    def _latest_record(self) -> tuple | None:
         try:
-            return self._ckpt.latest_step()
+            return self._ckpt.latest_record()
         except OSError:
             return None
+
+    def _latest_step(self) -> int | None:
+        rec = self._latest_record()
+        return rec[1] if rec is not None else None
+
+    def _mint_epoch(self, term: int) -> int:
+        """A fresh fence epoch for the next attempt — advanced BEFORE
+        the launch, so the previous attempt's line is already cut off
+        when the successor first touches the directory (a zombie's late
+        commit meets the fence, not a race). The first attempt under a
+        fresh lease term reuses the term itself: acquisition already
+        advanced the fence to it, and terms/epochs share one counter."""
+        cur = read_fence(self.ckpt_dir)
+        if term > 0 and cur <= term and self._last_epoch < term:
+            epoch = term
+        else:
+            epoch = max(cur, self._last_epoch) + 1
+        advance_fence(self.ckpt_dir, epoch, self.owner)
+        self._last_epoch = epoch
+        return epoch
 
     def _compose_hook(self, attempt: int, cancel: threading.Event
                       ) -> Callable[[int], None]:
@@ -296,12 +376,19 @@ class FleetController:
 
     def _supervise(self, thread: threading.Thread, cancel: threading.Event,
                    rec: AttemptRecord, level: int,
-                   last_step: int | None) -> str | None:
+                   last_rec: tuple | None) -> str | None:
         """Progress-monitor loop while the attempt thread runs. Returns
         the cancel reason (None if the attempt ended on its own).
-        ``last_step`` is the committed-step baseline sampled just before
-        ``thread.start()``, so a commit landing between launch and the
-        first poll still counts.
+        ``last_rec`` is the committed-record baseline sampled just
+        before ``thread.start()``, so a commit landing between launch
+        and the first poll still counts.
+
+        When an election is configured this loop is also the leader's
+        heartbeat: the lease is renewed every ``renew_s`` of wall
+        clock. A controller frozen inside ``self.sleep`` (the injected
+        GC pause) misses renewals; on wake-up ``renew()`` refuses to
+        touch the lease past its own deadline and raises ``LeaseLost``,
+        which cancels the attempt with reason "lease-lost".
 
         After a cancel the loop drains the thread for at most
         ``kill_grace_s`` more — a non-cooperative hang (worker stuck
@@ -313,12 +400,15 @@ class FleetController:
         last_advance = t0
         reason: str | None = None
         t_cancel = 0.0
+        leader = self._lease is not None and self._lease.state is not None
+        renew_s = self._lease.policy.renew_s if leader else None
+        last_renew = time.monotonic()
         while thread.is_alive():
             self.sleep(pol.poll_s)
-            step = self._latest_step()
-            if step != last_step:
+            step = self._latest_record()
+            if step != last_rec:
                 now = time.monotonic()
-                last_step = step
+                last_rec = step
                 last_advance = now
                 rec.commits += 1
                 if rec.first_commit_s is None:
@@ -327,6 +417,17 @@ class FleetController:
                 if time.monotonic() - t_cancel > pol.kill_grace_s:
                     break      # non-cooperative hang: abandon in run()
                 continue       # cancelled; drain within the grace window
+            if (leader and
+                    time.monotonic() - last_renew >= renew_s):
+                last_renew = time.monotonic()
+                try:
+                    self._lease.renew()
+                except LeaseLost as e:
+                    rec.error = str(e)
+                    reason = "lease-lost"
+                    t_cancel = time.monotonic()
+                    cancel.set()
+                    continue
             if (level > 0 and pol.recover_commits > 0
                     and rec.commits >= pol.recover_commits):
                 reason = "reprovision"   # healthy again: grow back
@@ -341,20 +442,55 @@ class FleetController:
 
     # --------------------------------------------------------------- run
     def run(self) -> FleetResult:
+        """Win (or wait for) leadership, then supervise to completion.
+        Without a lease policy this is single-controller supervision,
+        exactly the PR 8 behavior plus per-attempt epoch fencing."""
+        if self._lease is None:
+            return self._run_supervised(term=0)
+        lpol = self._lease.policy
+        t0 = time.monotonic()
+        while True:
+            if self.stop.is_set():
+                raise FleetError(
+                    f"controller {self.owner} stopped while standing "
+                    "by", [])
+            st = self._lease.try_acquire()
+            if st is not None:
+                try:
+                    result = self._run_supervised(term=st.term)
+                finally:
+                    # No-op if the lease was already lost (state is
+                    # cleared before LeaseLost propagates); otherwise
+                    # lets a standby take over without aging out the
+                    # ttl — including after normal completion.
+                    self._lease.release()
+                return result
+            if (lpol.standby_timeout_s is not None
+                    and time.monotonic() - t0 > lpol.standby_timeout_s):
+                raise FleetError(
+                    f"controller {self.owner} gave up standing by "
+                    f"after {lpol.standby_timeout_s}s (leader "
+                    f"{self._lease.read()})", [])
+            self.sleep(lpol.poll_s)
+
+    def _run_supervised(self, term: int) -> FleetResult:
         pol = self.policy
         attempts: list[AttemptRecord] = []
         level = 0
         consecutive = 0
         for attempt in range(pol.max_attempts):
             cancel = threading.Event()
+            epoch = self._mint_epoch(term)
             ctx = HostContext(
                 attempt=attempt, level=level,
                 resume_from=(self.ckpt_dir
-                             if self._latest_step() is not None else None),
+                             if self._latest_record() is not None
+                             else None),
                 fault_hook=self._compose_hook(attempt, cancel),
-                cancel=cancel)
+                cancel=cancel, epoch=epoch)
             rec = AttemptRecord(index=attempt, level=level, outcome="?",
-                                resume_step=self._latest_step())
+                                resume_step=self._latest_step(),
+                                epoch=epoch)
             attempts.append(rec)
             host = self.make_host(level)
             box: dict[str, Any] = {}
@@ -370,10 +506,9 @@ class FleetController:
                                       name=f"fleet-attempt-{attempt}")
             # Baseline for commit counting, sampled immediately before
             # launch (an abandoned prior worker may still commit late).
-            baseline_step = self._latest_step()
+            baseline = self._latest_record()
             thread.start()
-            reason = self._supervise(thread, cancel, rec, level,
-                                     baseline_step)
+            reason = self._supervise(thread, cancel, rec, level, baseline)
             thread.join(timeout=pol.kill_grace_s if cancel.is_set()
                         else None)
             rec.seconds = time.monotonic() - t0
@@ -384,21 +519,37 @@ class FleetController:
                 warnings.warn(
                     f"fleet attempt {attempt} did not exit within "
                     f"{pol.kill_grace_s}s of cancellation; abandoning "
-                    "the worker thread (it can no longer win: a stale "
-                    "commit would be superseded by the relaunch's)",
+                    f"the worker thread (it cannot win: epoch {epoch} "
+                    "is fenced out before the relaunch, so a late "
+                    "commit is rejected at the rename boundary)",
                     RuntimeWarning, stacklevel=2)
                 rec.outcome = "abandoned"
-                rec.error = f"cancelled ({reason}), thread abandoned"
+                rec.error = rec.error or (f"cancelled ({reason}), "
+                                          "thread abandoned")
                 consecutive += 1
-            elif "result" in box:
+            elif "result" in box and reason is None:
                 rec.outcome = "completed"
                 return FleetResult(result=box["result"], attempts=attempts,
                                    final_level=level,
                                    n_relaunches=attempt,
-                                   recovered=attempt > 0)
+                                   recovered=attempt > 0, term=term)
+            elif "result" in box:
+                # Completed, but only after a cancel was issued (e.g.
+                # the final commit and the watchdog raced, or the lease
+                # was lost mid-final-iteration). For reprovision/
+                # watchdog the result is still valid — the fit
+                # finished. For a lost lease it is NOT ours to return.
+                if reason != "lease-lost":
+                    rec.outcome = "completed"
+                    return FleetResult(result=box["result"],
+                                       attempts=attempts,
+                                       final_level=level,
+                                       n_relaunches=attempt,
+                                       recovered=attempt > 0, term=term)
+                rec.outcome = "lease-lost"
             else:
                 err = box.get("error")
-                rec.error = repr(err)
+                rec.error = rec.error or repr(err)
                 if isinstance(err, AttemptCancelled):
                     rec.outcome = reason or "cancelled"
                     if reason == "reprovision":
@@ -406,6 +557,17 @@ class FleetController:
                         consecutive = 0
                     else:
                         consecutive += 1             # watchdog kill
+                elif isinstance(err, (FencedCommitError,
+                                      FencedWriterError)):
+                    # Another controller advanced the fence past this
+                    # attempt's epoch: we have been deposed even if our
+                    # own renewal has not noticed yet.
+                    rec.outcome = "fenced"
+                    raise LeadershipLost(
+                        f"controller {self.owner} (term {term}) was "
+                        f"fenced out at epoch {epoch}: {err} — another "
+                        "controller leads this directory", attempts,
+                        cause=err) from err
                 elif isinstance(err, StragglerError):
                     rec.outcome = "straggler"
                     level = min(level + 1, self.n_levels - 1)  # degrade
@@ -426,6 +588,15 @@ class FleetController:
                         f"attempt {attempt} raised unclassified "
                         f"{type(err).__name__} — treating as terminal",
                         attempts, cause=err) from err
+
+            if reason == "lease-lost":
+                rec.outcome = ("abandoned" if rec.outcome == "abandoned"
+                               else "lease-lost")
+                raise LeadershipLost(
+                    f"controller {self.owner} lost the lease on "
+                    f"{self.ckpt_dir} during attempt {attempt} (term "
+                    f"{term}); the usurper's fence already rejects "
+                    "this reign's commits", attempts)
 
             if attempt + 1 < pol.max_attempts and consecutive > 0:
                 self.sleep(pol.relaunch_delay(consecutive, attempt + 1))

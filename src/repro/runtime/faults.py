@@ -33,6 +33,23 @@ moves up a level too:
     index -> hook factory, so chaos tests replay the exact same fault
     sequence on every run.
 
+Split-brain injectors (PR 9, fencing/election chaos): multi-controller
+co-supervision adds failure modes ABOVE the attempt level — a frozen
+leader, a zombie worker that outlives its controller's reign, a torn
+lease file — and each gets a deterministic injector:
+
+  * ``hold_at_iteration`` — the NON-cooperative zombie: blocks at
+    iteration k until a test-controlled release event, ignoring the
+    controller's cancel entirely, then lets the fit continue — so the
+    abandoned worker genuinely attempts its next commit after the
+    takeover, which is exactly the write epoch fencing must reject;
+  * ``freezable_sleep`` — a drop-in for the controller's injected
+    ``sleep`` that stalls (GC pause / partition simulation) while a
+    test event is set: the leader's supervision loop stops renewing
+    its lease without the thread dying;
+  * ``tear_file`` — truncates a file mid-record, simulating a torn
+    write to the lease (or any metadata) file.
+
 The injectors wrap *chunk factories* (zero-arg callables returning a
 fresh iterator — exactly what ``PEMSVM.fit_chunks`` consumes) or act as
 ``fit(..., fault_hook=...)`` callables; they never reach into solver
@@ -162,6 +179,66 @@ def hang_at_iteration(k: int, *, until: threading.Event,
                     f"{max_seconds}s — no watchdog cancelled it")
             sleep(poll)
     return hook
+
+
+def hold_at_iteration(k: int, *, release: threading.Event,
+                      poll: float = 0.01, max_seconds: float = 60.0,
+                      sleep: Callable[[float], None] = time.sleep
+                      ) -> Callable[[int], None]:
+    """``fault_hook`` simulating a NON-cooperative zombie: at iteration
+    ``k`` the worker blocks until the TEST-controlled ``release`` event
+    fires — the controller's cancel is ignored, so the controller
+    abandons the worker (or a standby takes over), and when the test
+    later releases it, the fit RESUMES and attempts its next boundary
+    commit as if nothing happened. That late commit is the zombie write
+    the epoch fence must reject at the rename boundary; contrast
+    ``hang_at_iteration``, whose cooperative worker aborts on cancel
+    and never writes again. ``max_seconds`` bounds the block so a test
+    that forgets to release fails instead of deadlocking."""
+    def hook(it: int) -> None:
+        if it != k:
+            return
+        t0 = time.monotonic()
+        while not release.is_set():
+            if time.monotonic() - t0 > max_seconds:
+                raise RuntimeError(
+                    f"hold_at_iteration({k}) gave up after "
+                    f"{max_seconds}s — the test never released it")
+            sleep(poll)
+    return hook
+
+
+def freezable_sleep(frozen: threading.Event, *,
+                    base: Callable[[float], None] = time.sleep,
+                    poll: float = 0.01, max_seconds: float = 60.0
+                    ) -> Callable[[float], None]:
+    """A ``sleep`` replacement for ``FleetController(sleep=...)`` that
+    simulates a GC pause / partition: while ``frozen`` is set, every
+    call blocks (the supervision loop stops polling AND stops renewing
+    its lease) until the event clears — the thread never dies, it just
+    goes dark, which is exactly the leader failure lease expiry exists
+    to catch. ``max_seconds`` bounds the freeze so a stuck test fails
+    loudly."""
+    def sleep_fn(seconds: float) -> None:
+        base(seconds)
+        t0 = time.monotonic()
+        while frozen.is_set():
+            if time.monotonic() - t0 > max_seconds:
+                raise RuntimeError(
+                    f"freezable_sleep frozen for over {max_seconds}s — "
+                    "the test never thawed it")
+            base(poll)
+    return sleep_fn
+
+
+def tear_file(path: str, nbytes: int = 8) -> None:
+    """Simulate a torn write: truncate ``path`` to its first ``nbytes``
+    bytes (a crash mid-write from a non-atomic writer). Readers must
+    treat the result as absent/breakable, never crash on it."""
+    with open(path, "rb") as f:
+        head = f.read(max(nbytes, 0))
+    with open(path, "wb") as f:
+        f.write(head)
 
 
 class FleetSchedule:

@@ -1,0 +1,246 @@
+"""Lease-based leader election over the shared checkpoint directory
+(DESIGN.md §Reliability).
+
+Several controllers co-supervising one fleet must agree on exactly one
+supervisor, with takeover when the leader dies — and the takeover must
+compose with checkpoint EPOCH FENCING so a deposed leader's workers
+cannot corrupt the recovery line. The two mechanisms share ONE
+monotonic counter, the checkpoint directory's ``FENCE`` file
+(``repro.checkpoint.advance_fence``):
+
+  * a lease TERM is minted by advancing the fence (``term = fence+1``),
+    so acquiring leadership immediately fences out every attempt epoch
+    the previous leader ever granted — its in-flight workers find
+    their commits rejected at the rename boundary before the new
+    leader launches anything;
+  * the leader mints each attempt's epoch the same way, so epochs and
+    terms interleave on one total order and ``(epoch, step)`` snapshot
+    ordering resolves the newest line unambiguously.
+
+The lease itself is a crash-safe file (``LEASE``) in the checkpoint
+directory:
+
+    acquire   O_EXCL create — the filesystem arbitrates a dueling
+              startup; exactly one creator wins, losers go standby
+    renew     atomic replace (tmp + fsync + rename + dir fsync) with a
+              fresh wall-clock stamp; BEFORE writing, the leader checks
+              its OWN deadline — a leader that wakes from a long pause
+              (GC, partition) past its ttl declares the lease lost
+              without touching the file, so it can never clobber a
+              usurper's lease (the standard check-your-own-clock
+              fencing discipline)
+    takeover  allowed only once ``stamp + ttl_s`` has passed (or the
+              lease file is torn/corrupt — an unreadable lease cannot
+              be renewed by anyone, so it is breakable); writes
+              ``term = fence+1`` then verifies it won by re-reading
+    release   unlink, only while still the owner
+
+Wall-clock expiry is the single-host simulation of a heartbeat
+session; the injectable ``clock`` keeps chaos tests deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Callable
+
+from repro.checkpoint import advance_fence, read_fence
+from repro.checkpoint.checkpointer import _fsync_path
+
+LEASE_FILE = "LEASE"
+
+
+class LeaseLost(RuntimeError):
+    """The caller no longer holds the lease: its own deadline passed
+    (missed renewals — GC pause, partition) or another controller's
+    term is on disk. The holder must stop supervising immediately; its
+    workers' commits are already fenced out by the usurper's term."""
+
+
+@dataclasses.dataclass(frozen=True)
+class LeasePolicy:
+    """Election knobs. ``ttl_s`` is the takeover latency floor: a dead
+    leader is only safe to replace once its last renewal has aged out.
+    Renewals should land several times per ttl (default ttl/3) so one
+    slow poll does not read as death."""
+
+    ttl_s: float = 2.0
+    renew_every_s: float | None = None   # default ttl_s / 3
+    poll_s: float = 0.05                 # standby watch interval
+    standby_timeout_s: float | None = None  # give up standing by (None
+    #                                       = stand by forever)
+
+    def __post_init__(self):
+        assert self.ttl_s > 0.0, self.ttl_s
+        assert (self.renew_every_s is None
+                or 0.0 < self.renew_every_s < self.ttl_s)
+        assert self.poll_s > 0.0, self.poll_s
+
+    @property
+    def renew_s(self) -> float:
+        return (self.renew_every_s if self.renew_every_s is not None
+                else self.ttl_s / 3.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class LeaseState:
+    term: int
+    owner: str
+    stamp: float                 # wall-clock seconds at grant/renewal
+    ttl_s: float
+
+    def expired(self, now: float | None = None) -> bool:
+        return (time.time() if now is None else now) \
+            > self.stamp + self.ttl_s
+
+
+class LeaseManager:
+    """One controller's handle on the election. Not thread-safe: a
+    controller renews from its single supervision loop."""
+
+    def __init__(self, directory: str, owner: str, *,
+                 policy: LeasePolicy | None = None,
+                 clock: Callable[[], float] = time.time):
+        self.dir = str(directory)
+        self.owner = str(owner)
+        self.policy = policy or LeasePolicy()
+        self.clock = clock
+        self.path = os.path.join(self.dir, LEASE_FILE)
+        self.state: LeaseState | None = None   # held lease, if any
+
+    # ------------------------------------------------------------ file io
+    def read(self) -> LeaseState | None:
+        """The lease on disk, or None if absent OR unreadable. A torn
+        lease write (injected chaos; a crash mid-write from a
+        fsync-less older version) parses as None — no owner could renew
+        it either, so takeover treats it as immediately breakable."""
+        try:
+            with open(self.path) as f:
+                d = json.load(f)
+            return LeaseState(term=int(d["term"]), owner=str(d["owner"]),
+                              stamp=float(d["stamp"]),
+                              ttl_s=float(d["ttl_s"]))
+        except FileNotFoundError:
+            return None
+        except (OSError, ValueError, KeyError, json.JSONDecodeError):
+            return None
+
+    def _payload(self, st: LeaseState) -> str:
+        return json.dumps({"term": st.term, "owner": st.owner,
+                           "stamp": st.stamp, "ttl_s": st.ttl_s})
+
+    def _write_excl(self, st: LeaseState) -> bool:
+        """O_EXCL create — the dueling-startup arbiter. Returns False
+        if another controller created the lease first."""
+        try:
+            fd = os.open(self.path,
+                         os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+        except FileExistsError:
+            return False
+        try:
+            os.write(fd, self._payload(st).encode())
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+        _fsync_path(self.dir)
+        return True
+
+    def _write_replace(self, st: LeaseState) -> None:
+        tmp = f"{self.path}.tmp.{self.owner}"
+        with open(tmp, "w") as f:
+            f.write(self._payload(st))
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self.path)
+        _fsync_path(self.dir)
+
+    # ----------------------------------------------------------- election
+    def _mint_term(self, *extra: int) -> int:
+        term = max(read_fence(self.dir), *extra, 0) + 1
+        advance_fence(self.dir, term, self.owner)
+        return term
+
+    def try_acquire(self) -> LeaseState | None:
+        """One election round. Returns the held lease when this
+        controller is (now) the leader, None when it should stand by.
+        Acquiring ADVANCES THE FENCE to the new term first, so by the
+        time leadership is visible every write the previous leader's
+        workers could attempt is already doomed at the commit boundary.
+        """
+        os.makedirs(self.dir, exist_ok=True)
+        cur = self.read()
+        if cur is None and not os.path.exists(self.path):
+            # No lease: contend via O_EXCL — filesystem picks one winner.
+            st = LeaseState(term=self._mint_term(), owner=self.owner,
+                            stamp=self.clock(), ttl_s=self.policy.ttl_s)
+            if self._write_excl(st):
+                self.state = st
+                return st
+            return None
+        if cur is not None and cur.owner == self.owner \
+                and not cur.expired(self.clock()):
+            self.state = cur                      # already the leader
+            return cur
+        if cur is not None and not cur.expired(self.clock()):
+            return None                           # healthy foreign leader
+        # Expired or torn: break it. Mint term past both the fence and
+        # the dead lease's term, replace atomically, then verify the
+        # takeover stuck (another standby may have raced this one; the
+        # last rename wins and the loser sees a foreign owner).
+        st = LeaseState(
+            term=self._mint_term(cur.term if cur is not None else 0),
+            owner=self.owner, stamp=self.clock(),
+            ttl_s=self.policy.ttl_s)
+        self._write_replace(st)
+        back = self.read()
+        if back is not None and back.owner == self.owner \
+                and back.term == st.term:
+            self.state = st
+            return st
+        return None
+
+    def renew(self) -> LeaseState:
+        """Refresh the stamp. Raises :class:`LeaseLost` if this
+        controller's own deadline has already passed (it must not
+        write — a usurper may hold the lease) or if the file shows a
+        foreign owner/term."""
+        if self.state is None:
+            raise LeaseLost(f"{self.owner} holds no lease on {self.dir}")
+        now = self.clock()
+        if self.state.expired(now):
+            held = self.state
+            self.state = None
+            raise LeaseLost(
+                f"{self.owner} missed its own lease deadline on "
+                f"{self.dir} (term {held.term}: last renewal "
+                f"{now - held.stamp:.3f}s ago > ttl {held.ttl_s}s) — "
+                "standing down without touching the lease file")
+        cur = self.read()
+        if cur is None or cur.owner != self.owner \
+                or cur.term != self.state.term:
+            self.state = None
+            raise LeaseLost(
+                f"{self.owner} found a foreign lease on {self.dir}: "
+                f"{cur} — superseded")
+        st = dataclasses.replace(cur, stamp=now)
+        self._write_replace(st)
+        self.state = st
+        return st
+
+    def release(self) -> None:
+        """Drop leadership cleanly (normal completion): removes the
+        lease file so a standby can take over without waiting out the
+        ttl. No-op when not the owner."""
+        if self.state is None:
+            return
+        cur = self.read()
+        if cur is not None and cur.owner == self.owner \
+                and cur.term == self.state.term:
+            try:
+                os.remove(self.path)
+                _fsync_path(self.dir)
+            except OSError:
+                pass
+        self.state = None

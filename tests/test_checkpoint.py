@@ -1,11 +1,15 @@
-"""Checkpointer: atomicity, keep-K GC, async errors, restore."""
+"""Checkpointer: atomicity, keep-K GC, async errors, restore, epoch
+fencing (multi-writer safety)."""
 import os
+import shutil
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import Checkpointer
+from repro.checkpoint import (Checkpointer, CheckpointWriteError,
+                              FencedCommitError, FencedWriterError,
+                              advance_fence, read_fence)
 
 
 def _tree(x=1.0):
@@ -51,12 +55,45 @@ def test_async_save_overlaps_and_waits(tmp_path):
     assert ck.all_steps() == [1, 2]
 
 
-def test_shape_mismatch_detected(tmp_path):
+def test_shape_mismatch_is_diagnosable_valueerror(tmp_path):
+    """A shape mismatch at restore is an operator-facing config error,
+    not an internal invariant: the message must name the leaf, both
+    shapes, and explain that an elastic remesh changes SHARDING never
+    shape (so the operator doesn't misattribute it to resizing the
+    fleet)."""
     ck = Checkpointer(str(tmp_path))
     ck.save(1, _tree(), blocking=True)
     bad = {"a": jnp.zeros((2, 2)), "b": {"c": jnp.arange(5)}}
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError) as ei:
         ck.restore(bad)
+    msg = str(ei.value)
+    assert "'a'" in msg and "(4, 3)" in msg and "(2, 2)" in msg
+    assert "remesh" in msg and "SHARDING" in msg
+
+
+def test_background_write_failure_carries_step_and_dir(tmp_path,
+                                                       monkeypatch):
+    """An async write failure surfaces at the next save()/wait() as
+    CheckpointWriteError carrying the step id and directory (so a fleet
+    log can attribute the lost commit), with the original error as
+    __cause__."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree(1.0), blocking=True)
+
+    def boom(*a, **k):
+        raise IOError("injected: disk full")
+    monkeypatch.setattr(np, "save", boom)
+    ck.save(5, _tree(5.0))
+    with pytest.raises(CheckpointWriteError) as ei:
+        ck.wait()
+    assert ei.value.step == 5
+    assert ei.value.directory == str(tmp_path)
+    assert "step_000000005" in str(ei.value)
+    assert isinstance(ei.value.__cause__, IOError)
+    monkeypatch.undo()
+    assert ck.all_steps() == [1]          # on-disk state untouched
+    ck.save(5, _tree(5.0), blocking=True)  # writer still usable
+    assert ck.all_steps() == [1, 5]
 
 
 def test_stale_tmp_swept_at_construction(tmp_path):
@@ -164,3 +201,162 @@ def test_pinned_step_loads_strictly(tmp_path):
         ck.restore(_tree(0.0), step=2)
     out = ck.restore(_tree(0.0), step=1)         # older pin still fine
     np.testing.assert_allclose(np.asarray(out["a"]), 1.0)
+
+
+# ------------------------------------ crash window + GC races (PR 9)
+def test_crash_between_rename_and_commit_is_recoverable(tmp_path):
+    """Death in the window between os.rename(tmp, final) and the COMMIT
+    write leaves a final dir with no marker. Restore must never
+    consider it, and the NEXT writer of the same step must replace it
+    cleanly rather than erroring or committing the orphan's bits."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree(1.0), blocking=True)
+    # Simulate the crash window for step 2: full final dir, no COMMIT.
+    ck.save(2, _tree(99.0), blocking=True)
+    os.remove(tmp_path / "step_000000002.COMMIT")
+    assert ck.latest_step() == 1                  # orphan invisible
+    # The relaunch re-saves step 2 (different bits — the orphan's were
+    # never acknowledged): it must win.
+    ck2 = Checkpointer(str(tmp_path))
+    ck2.save(2, _tree(2.0), blocking=True)
+    assert ck2.latest_step() == 2
+    out = ck2.restore(_tree(0.0), step=2)
+    np.testing.assert_allclose(np.asarray(out["a"]), 2.0)
+
+
+def test_competitor_gc_race_falls_back_with_warning(tmp_path):
+    """all_records() -> _read_record() can race another writer's _gc:
+    the listed snapshot vanishes between listing and load. That must be
+    absorbed by skip-and-warn (FileNotFoundError is just another form
+    of 'this entry is unreadable'), falling back to the previous
+    record."""
+    ck = Checkpointer(str(tmp_path), keep_k=3)
+    for s in [1, 2, 3]:
+        ck.save(s, _tree(float(s)), blocking=True)
+    # Competitor's _gc deleted the newest snapshot dir but its COMMIT
+    # marker still lists it (the rmtree-then-remove window).
+    shutil.rmtree(tmp_path / "step_000000003")
+    assert ck.latest_step() == 3                  # still listed...
+    with pytest.warns(RuntimeWarning, match="step_000000003"):
+        out = ck.restore(_tree(0.0))              # ...but skipped
+    np.testing.assert_allclose(np.asarray(out["a"]), 2.0)
+    with pytest.warns(RuntimeWarning):
+        assert ck.latest_valid_step() == 2
+
+
+def test_same_record_never_clobbered(tmp_path):
+    """save() must not rmtree a COMMITTED copy of the same (epoch,
+    step) — under co-supervision that can be a competitor's live
+    restore source. The duplicate save is dropped (same epoch + step
+    implies identical trajectory bits in production; here we use
+    different bits to observe which copy survives)."""
+    ck = Checkpointer(str(tmp_path), epoch=1, owner="w1")
+    ck.save(5, _tree(1.0), blocking=True)
+    ck2 = Checkpointer(str(tmp_path), epoch=1, owner="w2")
+    ck2.save(5, _tree(7.0), blocking=True)        # dropped, no error
+    out = ck2.restore(_tree(0.0))
+    np.testing.assert_allclose(np.asarray(out["a"]), 1.0)
+
+
+# ---------------------------------------------- epoch fencing (PR 9)
+def test_fence_reads_zero_and_advances_monotonically(tmp_path):
+    d = str(tmp_path)
+    assert read_fence(d) == 0
+    assert advance_fence(d, 3, "a") == 3
+    assert advance_fence(d, 2, "b") == 3          # advance-only
+    assert read_fence(d) == 3
+    _truncate(tmp_path / "FENCE", 2)              # torn fence
+    assert read_fence(d) == 0                     # under-estimates, never crashes
+
+
+def test_legacy_writer_stays_unfenced(tmp_path):
+    """epoch=None (every pre-PR-9 call site) must behave exactly as
+    before: no FENCE file appears, names carry no epoch tag, commits
+    are never rejected even if someone else fences the directory."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree(1.0), blocking=True)
+    assert not (tmp_path / "FENCE").exists()
+    assert (tmp_path / "step_000000001").exists()
+    advance_fence(str(tmp_path), 9, "other")
+    ck.save(2, _tree(2.0), blocking=True)         # still commits
+    assert ck.all_steps() == [1, 2]
+
+
+def test_stale_fence_token_rejected_at_open(tmp_path):
+    Checkpointer(str(tmp_path), epoch=4)
+    with pytest.raises(FencedWriterError, match="epoch 4"):
+        Checkpointer(str(tmp_path), epoch=3)
+    Checkpointer(str(tmp_path), epoch=4)          # same epoch reopens
+
+
+def test_zombie_commit_rejected_at_rename_boundary(tmp_path):
+    """The core fencing guarantee: a writer superseded AFTER it
+    enqueued a save has the commit rejected at the rename boundary —
+    the snapshot never becomes visible, bitwise nothing on disk
+    changes, and the error carries enough context to log."""
+    zombie = Checkpointer(str(tmp_path), epoch=1, owner="zombie")
+    zombie.save(1, _tree(1.0), blocking=True)
+    before = sorted(os.listdir(tmp_path))
+    successor = Checkpointer(str(tmp_path), epoch=2, owner="succ")
+    zombie.save(10, _tree(666.0))                 # late zombie write
+    with pytest.raises(FencedCommitError) as ei:
+        zombie.wait()
+    assert (ei.value.step, ei.value.epoch, ei.value.fence) == (10, 1, 2)
+    assert zombie.fenced_commits == 1
+    # Bitwise: the directory is unchanged except the advanced FENCE.
+    after = sorted(os.listdir(tmp_path))
+    assert after == before
+    successor.save(2, _tree(2.0), blocking=True)
+    assert successor.latest_record() == (2, 2)
+
+
+def test_epoch_major_ordering_beats_step_ordering(tmp_path):
+    """Belt-and-suspenders: even if a zombie's HIGHER step id had
+    landed (simulating a commit that raced past the fence check), the
+    successor's lower-step snapshot outranks it — records order
+    epoch-major, and a pinned step resolves to its newest epoch."""
+    old = Checkpointer(str(tmp_path), epoch=1, owner="old")
+    old.save(5, _tree(5.0), blocking=True)
+    old.save(10, _tree(10.0), blocking=True)      # zombie's high step
+    succ = Checkpointer(str(tmp_path), epoch=2, owner="succ")
+    succ.save(5, _tree(50.0), blocking=True)      # resumed line, low step
+    assert succ.all_records() == [(1, 5), (1, 10), (2, 5)]
+    assert succ.latest_record() == (2, 5)
+    out = succ.restore(_tree(0.0))
+    np.testing.assert_allclose(np.asarray(out["a"]), 50.0)
+    out = succ.restore(_tree(0.0), step=5)        # pin -> newest epoch
+    np.testing.assert_allclose(np.asarray(out["a"]), 50.0)
+
+
+def test_keep_k_gc_ages_out_superseded_line_first(tmp_path):
+    ck1 = Checkpointer(str(tmp_path), keep_k=2, epoch=1)
+    ck1.save(8, _tree(8.0), blocking=True)
+    ck1.save(9, _tree(9.0), blocking=True)
+    ck2 = Checkpointer(str(tmp_path), keep_k=2, epoch=2)
+    ck2.save(1, _tree(1.0), blocking=True)
+    ck2.save(2, _tree(2.0), blocking=True)
+    assert ck2.all_records() == [(2, 1), (2, 2)]  # old line gc'd first
+
+
+def test_tmp_sweep_is_owner_scoped(tmp_path):
+    """A new fenced writer must not sweep a live competitor's in-flight
+    tmp dir (same epoch, different owner); it must sweep its own
+    leftovers, legacy untagged tmps, and fenced-out lines' tmps."""
+    d = tmp_path
+    os.makedirs(d / ".tmp_step_000000001.e000002.alice" / "arrays")
+    os.makedirs(d / ".tmp_step_000000002.e000002.bob" / "arrays")
+    os.makedirs(d / ".tmp_step_000000003.e000001.carol" / "arrays")
+    os.makedirs(d / ".tmp_step_000000004" / "arrays")   # legacy
+    Checkpointer(str(d), epoch=2, owner="bob")
+    assert (d / ".tmp_step_000000001.e000002.alice").exists()  # live peer
+    assert not (d / ".tmp_step_000000002.e000002.bob").exists()   # own
+    assert not (d / ".tmp_step_000000003.e000001.carol").exists()  # fenced
+    assert not (d / ".tmp_step_000000004").exists()               # legacy
+
+
+def test_manifest_records_epoch(tmp_path):
+    ck = Checkpointer(str(tmp_path), epoch=3)
+    ck.save(1, _tree(1.0), blocking=True)
+    _, manifest = ck.restore_named()
+    assert manifest["epoch"] == 3
+    assert (tmp_path / "step_000000001.e000003").exists()

@@ -14,6 +14,13 @@ Also here: the windowed-statistics (hard data expiry) semantics that
 ride the same checkpoint substrate, and the controller unit surface
 (deterministic backoff, terminal classification order, retry budgets,
 real-OS-process SubprocessHost lifecycles).
+PR 9 adds the split-brain chaos proofs: epoch-fenced commits under
+multi-controller co-supervision, lease-based leader election (dueling
+startup, frozen-leader takeover, torn lease files), and the acceptance
+scenario — leader A frozen mid-supervision with a NON-cooperative
+zombie worker, standby B takes over at term+1, the zombie's late
+commit is rejected at the rename boundary, and B's recovered model is
+bitwise the undisturbed single-controller fit.
 """
 import dataclasses
 import os
@@ -21,18 +28,22 @@ import subprocess
 import sys
 import textwrap
 import threading
+import time
 import warnings
 
 import numpy as np
 import pytest
 
-from repro.checkpoint import Checkpointer
+from repro.checkpoint import Checkpointer, FencedCommitError, read_fence
 from repro.core import PEMSVM, SVMConfig
 from repro.core.linear import SVMData
 from repro.runtime import faults
 from repro.runtime.controller import (FleetController, FleetError,
-                                      FleetPolicy, SubprocessHost)
+                                      FleetPolicy, LeadershipLost,
+                                      SubprocessHost)
 from repro.runtime.faults import FleetSchedule
+from repro.runtime.lease import (LeaseLost, LeaseManager, LeasePolicy,
+                                 LEASE_FILE)
 from repro.runtime.policy import FaultPolicy
 
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -577,3 +588,278 @@ def test_retrying_chunks_jitter_deterministic():
         assert 0.5 <= s <= 0.5 * 1.3                  # base * (1+j*U)
     assert st_a.retries == 3 and st_a.exhausted == 0
     assert st_a.backoff_s == pytest.approx(sum(slept_a))
+
+
+# ------------------------------------------ lease election units (PR 9)
+def _clockpair(d, ttl=2.0):
+    """Two managers on one dir sharing a settable fake clock."""
+    t = [0.0]
+    pol = LeasePolicy(ttl_s=ttl)
+    a = LeaseManager(str(d), "A", policy=pol, clock=lambda: t[0])
+    b = LeaseManager(str(d), "B", policy=pol, clock=lambda: t[0])
+    return a, b, t
+
+
+def test_lease_dueling_startup_one_winner(tmp_path):
+    """O_EXCL arbitration: of two controllers starting on an empty
+    directory, exactly one becomes leader at term 1 (and the fence
+    advances with it); the other stands by."""
+    a, b, t = _clockpair(tmp_path)
+    la, lb = a.try_acquire(), b.try_acquire()
+    assert la is not None and lb is None
+    assert la.term == 1 and la.owner == "A"
+    assert read_fence(str(tmp_path)) == 1
+    assert b.try_acquire() is None                   # still standing by
+    assert a.try_acquire().term == 1                 # re-entrant for owner
+
+
+def test_lease_expiry_takeover_advances_term_and_fence(tmp_path):
+    a, b, t = _clockpair(tmp_path, ttl=2.0)
+    assert a.try_acquire().term == 1
+    t[0] = 1.0
+    a.renew()                                        # healthy heartbeat
+    assert b.try_acquire() is None
+    t[0] = 3.5                                       # stamp 1.0 + ttl 2.0 < now
+    lb = b.try_acquire()
+    assert lb is not None and lb.term == 2           # term+1 takeover
+    assert read_fence(str(tmp_path)) == 2            # fence rides along
+    with pytest.raises(LeaseLost, match="deadline"):
+        a.renew()                                    # deposed leader
+    assert b.read().owner == "B"                     # A never wrote
+
+
+def test_lease_renew_refuses_past_own_deadline_before_writing(tmp_path):
+    """The frozen-leader-wakes race: a leader past its OWN ttl must not
+    touch the lease file even if no usurper has appeared yet — the
+    check is on its own stamp, not on what is on disk."""
+    a, b, t = _clockpair(tmp_path, ttl=1.0)
+    a.try_acquire()
+    t[0] = 5.0                                       # woke from a long pause
+    with pytest.raises(LeaseLost, match="standing down"):
+        a.renew()
+    assert a.read().owner == "A"                     # file untouched
+    assert a.state is None                           # holder gave it up
+
+
+def test_lease_torn_file_is_breakable(tmp_path):
+    a, b, t = _clockpair(tmp_path)
+    assert a.try_acquire().term == 1
+    faults.tear_file(os.path.join(str(tmp_path), LEASE_FILE), 7)
+    assert a.read() is None                          # unreadable != crash
+    lb = b.try_acquire()                             # torn -> breakable now
+    assert lb is not None and lb.term == 2
+
+
+def test_lease_release_lets_standby_in_immediately(tmp_path):
+    a, b, t = _clockpair(tmp_path)
+    a.try_acquire()
+    b.release()                                      # non-owner: no-op
+    assert a.read().owner == "A"
+    a.release()
+    assert a.read() is None
+    assert b.try_acquire().term == 2                 # no ttl wait needed
+
+
+def test_controller_mints_fresh_epoch_per_attempt(tmp_path):
+    """Even without an election, every launch gets a fresh fence epoch
+    advanced BEFORE the attempt starts — the PR 8 abandoned-worker
+    caveat is closed by construction, not by the election feature."""
+    seen = []
+
+    def make_host(level):
+        def host(ctx):
+            seen.append(ctx.epoch)
+            if ctx.attempt == 0:
+                raise IOError("flaky host")
+            return "ok"
+        return host
+
+    fc = FleetController(make_host, str(tmp_path),
+                         policy=FleetPolicy(max_attempts=3, backoff_s=0.0))
+    fr = fc.run()
+    assert seen == [1, 2]
+    assert [a.epoch for a in fr.attempts] == [1, 2]
+    assert read_fence(str(tmp_path)) == 2
+    assert fr.term == 0                              # no election configured
+
+
+def test_standby_timeout_gives_up_cleanly(tmp_path):
+    foreign = LeaseManager(str(tmp_path), "other")
+    assert foreign.try_acquire() is not None         # healthy live leader
+
+    def make_host(level):
+        def host(ctx):                               # must never launch
+            raise AssertionError("standby launched a host")
+        return host
+
+    fc = FleetController(
+        make_host, str(tmp_path), policy=FleetPolicy(max_attempts=1),
+        lease=LeasePolicy(ttl_s=30.0, poll_s=0.02, standby_timeout_s=0.15),
+        owner="B")
+    with pytest.raises(FleetError, match="standing by"):
+        fc.run()
+
+
+# ------------------------------------- split-brain chaos proofs (PR 9)
+def test_dueling_controllers_elect_and_both_finish_bitwise(tmp_path):
+    """Two controllers started on the SAME checkpoint directory with no
+    coordination beyond the lease file: one leads and fits; the other
+    stands by, acquires after the release, resumes from the final
+    snapshot (instantly — the fit is already converged), and both
+    return the bitwise-identical model."""
+    kw = dict(algorithm="EM", task="CLS", driver="loop", max_iters=8,
+              min_iters=8)
+    ref = PEMSVM(SVMConfig(**kw)).fit(X, Y_CLS)
+    cfg = SVMConfig(**kw, fault=FaultPolicy(ckpt_dir=str(tmp_path),
+                                            ckpt_every=1))
+
+    def make_host(level):
+        def host(ctx):
+            return PEMSVM(cfg).fit(X, Y_CLS, resume_from=ctx.resume_from,
+                                   fault_hook=ctx.fault_hook,
+                                   epoch=ctx.epoch)
+        return host
+
+    def ctrl(owner):
+        return FleetController(
+            make_host, str(tmp_path),
+            policy=FleetPolicy(max_attempts=2, poll_s=0.02),
+            lease=LeasePolicy(ttl_s=5.0, poll_s=0.05), owner=owner)
+
+    out = {}
+    ts = [threading.Thread(target=lambda o=o: out.update({o: ctrl(o).run()}))
+          for o in ("A", "B")]
+    for th in ts:
+        th.start()
+    for th in ts:
+        th.join(timeout=120)
+        assert not th.is_alive()
+
+    terms = sorted(fr.term for fr in out.values())
+    assert terms[0] >= 1 and terms[1] > terms[0]      # distinct reigns
+    for fr in out.values():
+        assert np.array_equal(ref.weights, fr.result.weights)
+    # The loser's fit resumed from the winner's FINAL snapshot.
+    late = max(out.values(), key=lambda fr: fr.term)
+    assert late.result.resumed_at == 8
+
+
+def test_frozen_leader_takeover_fences_zombie_commit(tmp_path):
+    """THE acceptance scenario (ISSUE 9). Controller A leads and its
+    worker commits; A freezes mid-supervision (injected GC pause) while
+    its worker blocks NON-cooperatively inside an iteration (ignores
+    cancel — a genuine zombie). Standby B's lease expires A, takes over
+    at term+1 (fence rides along), resumes from A's last commit and
+    completes. The zombie is then released: it attempts its next
+    boundary commit and is REJECTED at the rename boundary
+    (FencedCommitError) — the on-disk record set does not change. A
+    thaws, notices its lease is gone, and raises LeadershipLost. B's
+    model is bitwise the undisturbed single-controller fit on the same
+    layout."""
+    kw = dict(algorithm="EM", task="CLS", driver="loop", max_iters=14,
+              min_iters=14)
+    ref = PEMSVM(SVMConfig(**kw)).fit(X, Y_CLS)
+    d = str(tmp_path)
+    cfg = SVMConfig(**kw, fault=FaultPolicy(ckpt_dir=d, ckpt_every=1))
+
+    frozen = threading.Event()
+    release = threading.Event()
+    zombie = {}
+
+    def make_host_a(level):
+        def host(ctx):
+            # ROGUE worker: ignores ctx.fault_hook (and with it the
+            # controller's cancel) — blocks at iteration 5 until the
+            # TEST releases it, then keeps fitting and tries to commit.
+            try:
+                return PEMSVM(cfg).fit(
+                    X, Y_CLS, resume_from=ctx.resume_from,
+                    fault_hook=faults.hold_at_iteration(
+                        5, release=release, max_seconds=120.0),
+                    epoch=ctx.epoch)
+            except Exception as e:
+                zombie["error"] = e
+                raise
+        return host
+
+    def make_host_b(level):
+        def host(ctx):
+            return PEMSVM(cfg).fit(X, Y_CLS, resume_from=ctx.resume_from,
+                                   fault_hook=ctx.fault_hook,
+                                   epoch=ctx.epoch)
+        return host
+
+    lease = LeasePolicy(ttl_s=0.6, renew_every_s=0.1, poll_s=0.05)
+    A = FleetController(
+        make_host_a, d,
+        policy=FleetPolicy(max_attempts=2, poll_s=0.02,
+                           kill_grace_s=0.3),
+        lease=lease, owner="A",
+        sleep=faults.freezable_sleep(frozen, max_seconds=120.0))
+    B = FleetController(
+        make_host_b, d,
+        policy=FleetPolicy(max_attempts=2, poll_s=0.02),
+        lease=lease, owner="B")
+
+    out = {}
+
+    def run_a():
+        try:
+            out["A"] = A.run()
+        except FleetError as e:
+            out["A"] = e
+
+    ta = threading.Thread(target=run_a)
+    ta.start()
+    # Wait until A's worker has committed and is held at iteration 5.
+    deadline = time.monotonic() + 60.0
+    ck = Checkpointer(d, keep_k=0)
+    while (ck.latest_record() or (0, 0))[1] < 5_000_000:
+        assert time.monotonic() < deadline, "A's worker never reached it=5"
+        time.sleep(0.02)
+    assert read_fence(d) == 1                        # A's reign, epoch 1
+    frozen.set()                                     # leader goes dark
+
+    fr_b = None
+    tb = threading.Thread(
+        target=lambda: out.__setitem__("B", B.run()))
+    tb.start()
+    tb.join(timeout=120)
+    assert not tb.is_alive()
+    fr_b = out["B"]
+    assert fr_b.term == 2                            # takeover at term+1
+    assert fr_b.attempts[0].epoch == 2
+    assert fr_b.result.resumed_at == 5               # resumed A's line
+    assert np.array_equal(ref.weights, fr_b.result.weights)  # BITWISE
+
+    # Release the zombie: it fits on and attempts its next boundary
+    # commit, which the fence must reject without touching the records.
+    records_before = ck.all_records()
+    release.set()
+    deadline = time.monotonic() + 60.0
+    while "error" not in zombie:
+        assert time.monotonic() < deadline, "zombie never hit the fence"
+        time.sleep(0.02)
+    assert isinstance(zombie["error"], FencedCommitError)
+    assert zombie["error"].epoch == 1 and zombie["error"].fence == 2
+    assert ck.all_records() == records_before        # nothing landed
+    assert ck.latest_record()[0] == 2                # B's line on top
+
+    # Thaw A: its next renewal sees the missed deadline and it stands
+    # down with LeadershipLost (abandoning the already-dead worker).
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        frozen.clear()
+        ta.join(timeout=120)
+    assert not ta.is_alive()
+    assert isinstance(out["A"], LeadershipLost)
+    # Depending on whether the zombie thread was already dead at thaw,
+    # A notices via the fenced commit or via its missed renewal.
+    assert out["A"].attempts[0].outcome in ("fenced", "abandoned",
+                                            "lease-lost")
+
+    # The directory's resolved restore is B's line — epoch-major, so
+    # even a zombie commit that HAD raced past the fence could not
+    # outrank it.
+    arrays, manifest = ck.restore_named()
+    assert manifest["epoch"] == 2
