@@ -120,16 +120,39 @@ def _fsync_path(path: str) -> None:
         os.close(fd)
 
 
+def _fence_floor(directory: str) -> int:
+    """Lower bound on the max epoch ever granted, recovered from the
+    epoch tags in step/COMMIT/tmp names. Every tagged entry was written
+    by a writer whose epoch the fence had been advanced to, so the
+    advance-only counter can never legitimately sit below this."""
+    try:
+        names = os.listdir(directory)
+    except OSError:
+        return 0
+    floor = 0
+    for f in names:
+        m = _STEP_RE.match(f) or _COMMIT_RE.match(f) or _TMP_RE.match(f)
+        if m is not None:
+            floor = max(floor, int(m.group(2) or 0))
+    return floor
+
+
 def read_fence(directory: str) -> int:
     """Max epoch ever granted on this checkpoint directory (0 if no
-    fenced writer has opened it). Torn/corrupt fence files read as 0 —
-    advance-only semantics mean a reader can only under-estimate, and
-    an under-estimate never fences a legitimate writer out."""
+    fenced writer has opened it). A torn/corrupt/deleted FENCE file
+    does NOT read as 0 — that would let ``advance_fence`` roll the
+    advance-only counter backward and previously-fenced zombie epochs
+    would pass the commit-boundary check again. Instead the fence is
+    recovered from the epoch tags present in the directory
+    (``_fence_floor``): a lower bound, but one that covers every epoch
+    with on-disk evidence, so zombie rejection survives torn
+    metadata."""
     try:
         with open(os.path.join(directory, FENCE_FILE)) as f:
             return int(json.load(f)["epoch"])
-    except (OSError, ValueError, KeyError, json.JSONDecodeError):
-        return 0
+    except (OSError, TypeError, ValueError, KeyError,
+            json.JSONDecodeError):
+        return _fence_floor(directory)
 
 
 def advance_fence(directory: str, epoch: int, owner: str | None = None
@@ -139,7 +162,10 @@ def advance_fence(directory: str, epoch: int, owner: str | None = None
     (tmp + fsync + rename + directory fsync), so a concurrent reader
     sees either the old or the new epoch, never a tear. Advance-only:
     the fence is the single monotonic counter that attempt epochs AND
-    lease terms are minted from (``runtime/lease.py``)."""
+    lease terms are minted from (``runtime/lease.py``); because
+    ``read_fence`` recovers a floor from on-disk epoch tags when the
+    FENCE file itself is torn, corruption cannot be leveraged to write
+    an epoch below what the directory's contents already prove."""
     # The lock serializes in-process advancers (several controllers in
     # one test process): without it, two threads could interleave
     # read-then-replace and roll the fence BACKWARD. Cross-process the

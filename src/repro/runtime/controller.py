@@ -58,18 +58,27 @@ Multi-controller co-supervision (PR 9): pass ``lease=LeasePolicy(...)``
 and several controllers may call ``run()`` on the SAME checkpoint
 directory. They elect a leader through a crash-safe lease file
 (``runtime.lease``): one acquires and supervises, the rest stand by and
-watch. The leader renews inside its supervision poll loop; if it
-freezes (GC pause, partition) past the ttl, a standby takes over at
-``term+1`` — which also advances the fence, so every worker the old
-leader ever launched is fenced out BEFORE the new leader launches its
-first resume. A deposed leader discovers the loss at its next renewal
-(or via a worker's ``FencedCommitError``) and raises
-:class:`LeadershipLost` rather than continuing a split brain.
+watch. The leader's heartbeat covers its WHOLE reign, not just the
+happy-path poll loop: renewals continue through the cancel-drain
+window (abandoning one hung worker must not cost the lease — with
+defaults ``kill_grace_s`` equals the lease ttl), through the
+post-supervise join, and through the relaunch backoff. If the leader
+freezes (GC pause, partition) past the ttl anyway, a standby takes
+over at ``term+1`` — which also advances the fence, so every worker
+the old leader ever launched is fenced out BEFORE the new leader
+launches its first resume. The deposed leader can never retaliate:
+epoch minting is renew-before-mint (``LeaseManager.mint_epoch``), so
+a controller whose lease silently expired stands down with
+:class:`LeadershipLost` WITHOUT advancing the fence — it cannot fence
+out the legitimate new leader's workers. Loss is also discovered at
+the supervision-loop renewal and via a worker's ``FencedCommitError``;
+all three paths end the reign rather than continuing a split brain.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import math
 import os
 import subprocess
 import sys
@@ -331,6 +340,8 @@ class FleetController:
                                     policy=lease, clock=clock)
                        if lease is not None else None)
         self._last_epoch = 0
+        self._last_renew = 0.0       # monotonic time of last heartbeat
+        self._renew_failing = False  # warn once per OSError streak
         self._ckpt = Checkpointer(self.ckpt_dir)
 
     # ---------------------------------------------------------- internals
@@ -348,17 +359,115 @@ class FleetController:
         """A fresh fence epoch for the next attempt — advanced BEFORE
         the launch, so the previous attempt's line is already cut off
         when the successor first touches the directory (a zombie's late
-        commit meets the fence, not a race). The first attempt under a
-        fresh lease term reuses the term itself: acquisition already
-        advanced the fence to it, and terms/epochs share one counter."""
-        cur = read_fence(self.ckpt_dir)
-        if term > 0 and cur <= term and self._last_epoch < term:
-            epoch = term
+        commit meets the fence, not a race).
+
+        With an election configured this is RENEW-BEFORE-MINT: the
+        mint goes through ``LeaseManager.mint_epoch``, which verifies
+        ownership against the lease file in the same critical section
+        that advances the fence. A leader whose lease silently expired
+        (however briefly unnoticed) raises ``LeaseLost`` here and
+        stands down WITHOUT advancing the fence — so a stale leader
+        can never fence out the legitimate new leader's workers, which
+        would invert the split-brain guarantee. The first attempt
+        under a fresh lease term reuses the term itself: acquisition
+        already advanced the fence to it, and terms/epochs share one
+        counter (reusing never advances the fence, so it cannot cause
+        an inversion either — at worst the worker opens superseded and
+        gets ``FencedWriterError``)."""
+        if self._lease is not None:
+            if (term > 0 and self._last_epoch < term
+                    and read_fence(self.ckpt_dir) <= term):
+                try:
+                    self._lease.renew()      # LeaseLost -> stand down
+                    self._renew_failing = False
+                    self._last_renew = time.monotonic()
+                except OSError as e:
+                    # Stamp write failed AFTER ownership verified (a
+                    # renew OSError can only come from the write; read
+                    # errors parse as foreign -> LeaseLost): missed
+                    # heartbeat, and reusing the term advances nothing.
+                    self._warn_renew_failure(e)
+                epoch = term
+            else:
+                epoch = self._lease.mint_epoch()
+                self._last_renew = time.monotonic()
         else:
+            cur = read_fence(self.ckpt_dir)
             epoch = max(cur, self._last_epoch) + 1
-        advance_fence(self.ckpt_dir, epoch, self.owner)
+            advance_fence(self.ckpt_dir, epoch, self.owner)
         self._last_epoch = epoch
         return epoch
+
+    def _renew_if_due(self) -> LeaseLost | None:
+        """The lease heartbeat: renew once ``renew_s`` has elapsed
+        since the last renewal; no-op without an election or when the
+        lease is already gone. Returns the ``LeaseLost`` when
+        leadership is lost (callers cancel and stand down), else None.
+        An ``OSError`` from the lease write (ENOSPC, EIO) is a MISSED
+        heartbeat, not loss: warn once per failure streak and retry at
+        the next poll — if failures persist past the ttl, the
+        own-deadline check converts them into ``LeaseLost`` with the
+        proper stand-down, and meanwhile the worker stays supervised."""
+        if self._lease is None or self._lease.state is None:
+            return None
+        if time.monotonic() - self._last_renew < self._lease.policy.renew_s:
+            return None
+        try:
+            self._lease.renew()
+        except LeaseLost as e:
+            return e
+        except OSError as e:
+            self._warn_renew_failure(e)
+            return None
+        self._renew_failing = False
+        self._last_renew = time.monotonic()
+        return None
+
+    def _warn_renew_failure(self, e: OSError) -> None:
+        """One RuntimeWarning per OSError streak; the stamp stays
+        unrenewed so the next poll retries, and persistent failures
+        age out through the lease's own-deadline check."""
+        if not self._renew_failing:
+            warnings.warn(
+                f"controller {self.owner} failed to renew its lease "
+                f"on {self.ckpt_dir} ({e!r}); treating as a missed "
+                "heartbeat and retrying — persistent failures stand "
+                "down via the lease ttl", RuntimeWarning, stacklevel=3)
+        self._renew_failing = True
+
+    def _join_renewing(self, thread: threading.Thread,
+                       timeout: float | None) -> None:
+        """``thread.join`` that keeps the lease heartbeat alive while
+        waiting (the inter-attempt window the ttl must survive).
+        Without an election this is a plain join. Loss detected here
+        is not raised — the next attempt's mint stands down via
+        ``LeadershipLost`` before the fence is touched."""
+        if self._lease is None or self._lease.state is None:
+            thread.join(timeout=timeout)
+            return
+        deadline = (None if timeout is None
+                    else time.monotonic() + timeout)
+        while thread.is_alive():
+            thread.join(timeout=self.policy.poll_s)
+            self._renew_if_due()
+            if deadline is not None and time.monotonic() > deadline:
+                return
+
+    def _sleep_renewing(self, delay: float) -> None:
+        """Relaunch backoff that keeps the lease heartbeat alive: the
+        delay is sliced so renewals land every ~renew_s/2 (sliced by
+        COUNT, not wall clock, so an injected test sleep still sees
+        the same total). As with the join, loss here surfaces at the
+        next mint, which stands down without advancing the fence."""
+        if (self._lease is None or self._lease.state is None
+                or delay <= 0.0):
+            self.sleep(delay)
+            return
+        slice_s = max(self._lease.policy.renew_s / 2.0, 1e-3)
+        n = max(1, math.ceil(delay / slice_s))
+        for _ in range(n):
+            self.sleep(delay / n)
+            self._renew_if_due()
 
     def _compose_hook(self, attempt: int, cancel: threading.Event
                       ) -> Callable[[int], None]:
@@ -385,10 +494,16 @@ class FleetController:
 
         When an election is configured this loop is also the leader's
         heartbeat: the lease is renewed every ``renew_s`` of wall
-        clock. A controller frozen inside ``self.sleep`` (the injected
-        GC pause) misses renewals; on wake-up ``renew()`` refuses to
-        touch the lease past its own deadline and raises ``LeaseLost``,
-        which cancels the attempt with reason "lease-lost".
+        clock — INCLUDING while draining a cancelled attempt (with
+        defaults ``kill_grace_s`` equals the lease ttl, so a
+        renewal-free drain would guarantee an unnecessary takeover
+        just for abandoning one hung worker). A controller frozen
+        inside ``self.sleep`` (the injected GC pause) misses renewals;
+        on wake-up ``renew()`` refuses to touch the lease past its own
+        deadline and raises ``LeaseLost``, which cancels the attempt
+        with reason "lease-lost". A renewal that fails with ``OSError``
+        counts as a missed heartbeat and is retried (``_renew_if_due``)
+        — the worker is never left running unsupervised.
 
         After a cancel the loop drains the thread for at most
         ``kill_grace_s`` more — a non-cooperative hang (worker stuck
@@ -400,9 +515,6 @@ class FleetController:
         last_advance = t0
         reason: str | None = None
         t_cancel = 0.0
-        leader = self._lease is not None and self._lease.state is not None
-        renew_s = self._lease.policy.renew_s if leader else None
-        last_renew = time.monotonic()
         while thread.is_alive():
             self.sleep(pol.poll_s)
             step = self._latest_record()
@@ -413,21 +525,17 @@ class FleetController:
                 rec.commits += 1
                 if rec.first_commit_s is None:
                     rec.first_commit_s = now - t0
+            lost = self._renew_if_due()   # heartbeat, drain included
+            if lost is not None and reason != "lease-lost":
+                rec.error = rec.error or str(lost)
+                if reason is None:        # keep an earlier drain clock
+                    t_cancel = time.monotonic()
+                    cancel.set()
+                reason = "lease-lost"
             if reason is not None:
                 if time.monotonic() - t_cancel > pol.kill_grace_s:
                     break      # non-cooperative hang: abandon in run()
                 continue       # cancelled; drain within the grace window
-            if (leader and
-                    time.monotonic() - last_renew >= renew_s):
-                last_renew = time.monotonic()
-                try:
-                    self._lease.renew()
-                except LeaseLost as e:
-                    rec.error = str(e)
-                    reason = "lease-lost"
-                    t_cancel = time.monotonic()
-                    cancel.set()
-                    continue
             if (level > 0 and pol.recover_commits > 0
                     and rec.commits >= pol.recover_commits):
                 reason = "reprovision"   # healthy again: grow back
@@ -456,6 +564,7 @@ class FleetController:
                     "by", [])
             st = self._lease.try_acquire()
             if st is not None:
+                self._last_renew = time.monotonic()
                 try:
                     result = self._run_supervised(term=st.term)
                 finally:
@@ -480,7 +589,17 @@ class FleetController:
         consecutive = 0
         for attempt in range(pol.max_attempts):
             cancel = threading.Event()
-            epoch = self._mint_epoch(term)
+            try:
+                epoch = self._mint_epoch(term)
+            except LeaseLost as e:
+                # Renew-before-mint refused: the lease expired (or was
+                # usurped) somewhere renewals could not reach — the
+                # fence was NOT advanced, so the new leader's workers
+                # are untouched; this controller simply stops.
+                raise LeadershipLost(
+                    f"controller {self.owner} (term {term}) stood down "
+                    f"before launching attempt {attempt}: {e}",
+                    attempts) from e
             ctx = HostContext(
                 attempt=attempt, level=level,
                 resume_from=(self.ckpt_dir
@@ -509,8 +628,8 @@ class FleetController:
             baseline = self._latest_record()
             thread.start()
             reason = self._supervise(thread, cancel, rec, level, baseline)
-            thread.join(timeout=pol.kill_grace_s if cancel.is_set()
-                        else None)
+            self._join_renewing(thread, pol.kill_grace_s
+                                if cancel.is_set() else None)
             rec.seconds = time.monotonic() - t0
 
             if thread.is_alive():
@@ -599,7 +718,8 @@ class FleetController:
                     "this reign's commits", attempts)
 
             if attempt + 1 < pol.max_attempts and consecutive > 0:
-                self.sleep(pol.relaunch_delay(consecutive, attempt + 1))
+                self._sleep_renewing(
+                    pol.relaunch_delay(consecutive, attempt + 1))
 
         raise FleetError(
             f"retry budget exhausted: {pol.max_attempts} attempts, none "

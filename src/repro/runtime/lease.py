@@ -35,6 +35,24 @@ directory:
               ``term = fence+1`` then verifies it won by re-reading
     release   unlink, only while still the owner
 
+Election operations are serialized by an in-process lock (the same
+discipline as ``advance_fence``'s ``_FENCE_LOCK``), so several
+controllers in one process — the chaos-test topology — have NO
+takeover race at all. Cross-process, the takeover's replace-then-
+verify is a bounded window, not an arbiter: two standbys that both
+saw the lease expired can both replace it and both re-read their own
+write before seeing the other's, so both believe they lead for at
+most one renewal interval (``renew_s``). That window is SAFE because
+correctness never rests on the lease alone — it rests on fence
+ordering: minting an attempt epoch goes through :meth:`mint_epoch`,
+which re-verifies ownership against the lease file (under the lock)
+in the same critical section that advances the fence, so the loser of
+the window can never advance the fence past the winner's term; its
+next renewal (or the mint itself) sees the foreign owner and stands
+down, having launched nothing. A true multi-host deployment over a
+store without POSIX O_EXCL/rename semantics needs a real CAS here —
+see ROADMAP (cross-host fence minting).
+
 Wall-clock expiry is the single-host simulation of a heartbeat
 session; the injectable ``clock`` keeps chaos tests deterministic.
 """
@@ -43,6 +61,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import threading
 import time
 from typing import Callable
 
@@ -50,6 +69,14 @@ from repro.checkpoint import advance_fence, read_fence
 from repro.checkpoint.checkpointer import _fsync_path
 
 LEASE_FILE = "LEASE"
+
+# Serializes acquire/renew/mint/release across the controllers of one
+# process: in-process (the chaos-test topology) the takeover and the
+# leader's epoch minting cannot interleave at all. Cross-process the
+# remaining replace-then-verify window is bounded and documented in
+# the module docstring. Nests over the checkpointer's _FENCE_LOCK
+# (mint_epoch -> advance_fence); nothing takes them in reverse order.
+_ELECTION_LOCK = threading.Lock()
 
 
 class LeaseLost(RuntimeError):
@@ -168,7 +195,19 @@ class LeaseManager:
         Acquiring ADVANCES THE FENCE to the new term first, so by the
         time leadership is visible every write the previous leader's
         workers could attempt is already doomed at the commit boundary.
+
+        In-process, the election lock makes the expiry takeover
+        atomic. Cross-process, two standbys racing an expired lease
+        can BOTH pass the replace-then-verify for up to one renewal
+        interval (the bounded dual-leader window, module docstring);
+        the fence ordering enforced by :meth:`mint_epoch` keeps that
+        window harmless — the loser launches nothing and stands down
+        at its next renewal.
         """
+        with _ELECTION_LOCK:
+            return self._try_acquire_locked()
+
+    def _try_acquire_locked(self) -> LeaseState | None:
         os.makedirs(self.dir, exist_ok=True)
         cur = self.read()
         if cur is None and not os.path.exists(self.path):
@@ -205,7 +244,40 @@ class LeaseManager:
         """Refresh the stamp. Raises :class:`LeaseLost` if this
         controller's own deadline has already passed (it must not
         write — a usurper may hold the lease) or if the file shows a
-        foreign owner/term."""
+        foreign owner/term. May raise ``OSError`` from the lease write
+        itself (ENOSPC, EIO) — the caller should treat that as a
+        missed heartbeat, not as loss: the stamp is unchanged, so the
+        next renewal either succeeds or ages out via the own-deadline
+        check."""
+        with _ELECTION_LOCK:
+            return self._renew_locked()
+
+    def mint_epoch(self) -> int:
+        """Verify leadership and advance the shared fence to a fresh
+        attempt epoch — ATOMICALLY, in one critical section, so a
+        leader whose lease silently expired (a drain window, a
+        relaunch backoff) can never advance the fence past a usurper's
+        term: the renewal inside the lock sees the foreign owner (or
+        this controller's own missed deadline) and raises
+        :class:`LeaseLost` BEFORE the fence is touched. This is the
+        renew-before-mint discipline the split-brain proof rests on;
+        controllers must mint attempt epochs through here, never via a
+        bare ``advance_fence``."""
+        with _ELECTION_LOCK:
+            try:
+                st = self._renew_locked()
+            except OSError:
+                # The stamp WRITE failed (ENOSPC, EIO) — but only
+                # after ownership was verified (read errors parse as a
+                # foreign lease and raise LeaseLost above): a missed
+                # heartbeat, not loss. The mint may proceed; the stamp
+                # is refreshed by the supervision loop's next renewal.
+                st = self.state
+            epoch = max(read_fence(self.dir), st.term) + 1
+            advance_fence(self.dir, epoch, self.owner)
+            return epoch
+
+    def _renew_locked(self) -> LeaseState:
         if self.state is None:
             raise LeaseLost(f"{self.owner} holds no lease on {self.dir}")
         now = self.clock()
@@ -235,6 +307,10 @@ class LeaseManager:
         ttl. No-op when not the owner."""
         if self.state is None:
             return
+        with _ELECTION_LOCK:
+            self._release_locked()
+
+    def _release_locked(self) -> None:
         cur = self.read()
         if cur is not None and cur.owner == self.owner \
                 and cur.term == self.state.term:

@@ -266,7 +266,35 @@ def test_fence_reads_zero_and_advances_monotonically(tmp_path):
     assert advance_fence(d, 2, "b") == 3          # advance-only
     assert read_fence(d) == 3
     _truncate(tmp_path / "FENCE", 2)              # torn fence
-    assert read_fence(d) == 0                     # under-estimates, never crashes
+    # No epoch-tagged entries on disk -> nothing to recover a floor
+    # from; reads 0 rather than crashing.
+    assert read_fence(d) == 0
+
+
+def test_torn_fence_recovers_floor_from_epoch_tags(tmp_path):
+    """A torn/deleted FENCE must not roll the advance-only counter
+    backward: read_fence recovers a floor from the epoch tags in
+    step/COMMIT names, advance_fence refuses to write below it, and a
+    previously-fenced zombie epoch STAYS fenced after the corruption
+    (tear_file chaos simulates exactly this torn metadata)."""
+    d = str(tmp_path)
+    zombie = Checkpointer(d, epoch=1, owner="z")
+    zombie.save(1, _tree(1.0), blocking=True)
+    succ = Checkpointer(d, epoch=2, owner="s")
+    succ.save(2, _tree(2.0), blocking=True)
+
+    _truncate(tmp_path / "FENCE", 2)              # torn fence
+    assert read_fence(d) == 2                     # floor from .e tags
+    assert advance_fence(d, 1, "x") == 2          # cannot roll back
+    zombie.save(10, _tree(666.0))                 # zombie still fenced
+    with pytest.raises(FencedCommitError) as ei:
+        zombie.wait()
+    assert ei.value.fence == 2
+
+    os.remove(tmp_path / "FENCE")                 # deleted outright
+    assert read_fence(d) == 2                     # same floor
+    with pytest.raises(FencedWriterError):
+        Checkpointer(d, epoch=1, owner="late")    # stale open refused
 
 
 def test_legacy_writer_stays_unfenced(tmp_path):

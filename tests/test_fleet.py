@@ -660,6 +660,140 @@ def test_lease_release_lets_standby_in_immediately(tmp_path):
     assert b.try_acquire().term == 2                 # no ttl wait needed
 
 
+def test_mint_epoch_requires_live_lease(tmp_path):
+    """Renew-before-mint at the lease level: mint_epoch verifies
+    ownership in the SAME critical section that advances the fence, so
+    a manager whose lease expired (or was usurped) raises LeaseLost
+    WITHOUT advancing — the usurper's term stays the top of the
+    counter."""
+    a, b, t = _clockpair(tmp_path, ttl=2.0)
+    assert a.try_acquire().term == 1
+    assert a.mint_epoch() == 2                   # healthy leader mints
+    assert read_fence(str(tmp_path)) == 2
+    t[0] = 5.0                                   # a's lease ages out
+    lb = b.try_acquire()
+    assert lb is not None and lb.term == 3       # past fence AND term
+    with pytest.raises(LeaseLost):
+        a.mint_epoch()                           # deposed: refuses
+    assert read_fence(str(tmp_path)) == 3        # fence NOT advanced
+    assert b.renew().term == 3                   # usurper unharmed
+
+
+def test_stale_leader_cannot_fence_out_usurper(tmp_path):
+    """THE fence-inversion regression: leader A's lease silently
+    expires mid-attempt (a renewal-free window) and standby B takes
+    over at term 2. A's relaunch must NOT advance the shared fence
+    past B's term — that would fence out the LEGITIMATE leader's
+    workers and outrank B's line in (epoch, step) restore order. With
+    renew-before-mint, A stands down with LeadershipLost and the fence
+    still reads B's term."""
+    d = str(tmp_path)
+    t = [0.0]
+    lease = LeasePolicy(ttl_s=2.0)
+    usurper = LeaseManager(d, "B", policy=lease, clock=lambda: t[0])
+
+    def make_host(level):
+        def host(ctx):
+            # While A's attempt runs: its lease ages out unnoticed
+            # (the clock jump) and B takes over; then a retryable
+            # failure sends A toward a relaunch it must refuse.
+            t[0] = 5.0
+            assert usurper.try_acquire() is not None
+            raise IOError("flaky host")
+        return host
+
+    A = FleetController(
+        make_host, d,
+        policy=FleetPolicy(max_attempts=3, backoff_s=1e-3, poll_s=0.01),
+        lease=lease, owner="A", clock=lambda: t[0])
+    with pytest.raises(LeadershipLost):
+        A.run()
+    assert read_fence(d) == 2                    # B's term, NOT beyond
+    assert usurper.read().owner == "B"           # lease untouched by A
+
+
+def test_leader_renews_through_drain_window(tmp_path):
+    """Abandoning one non-cooperative worker must not cost the lease:
+    kill_grace_s EXCEEDS the ttl here, so a renewal-free cancel-drain
+    would guarantee an unnecessary takeover (and the relaunch mint
+    would then stand down). With the drain heartbeat the same
+    controller keeps its term across the abandon and completes."""
+    kw = dict(algorithm="EM", task="CLS", driver="loop", max_iters=6,
+              min_iters=6)
+    ref = PEMSVM(SVMConfig(**kw)).fit(X, Y_CLS)
+    d = str(tmp_path)
+    cfg = SVMConfig(**kw, fault=FaultPolicy(ckpt_dir=d, ckpt_every=1))
+    release = threading.Event()
+
+    def make_host(level):
+        def host(ctx):
+            if ctx.attempt == 0:
+                release.wait(30.0)               # ignores cancel
+                raise RuntimeError("hung worker released")
+            return PEMSVM(cfg).fit(X, Y_CLS, resume_from=ctx.resume_from,
+                                   fault_hook=ctx.fault_hook,
+                                   epoch=ctx.epoch)
+        return host
+
+    fc = FleetController(
+        make_host, d,
+        policy=FleetPolicy(max_attempts=3, backoff_s=1e-3,
+                           watchdog_s=0.3, poll_s=0.02,
+                           kill_grace_s=1.2),
+        lease=LeasePolicy(ttl_s=0.6, renew_every_s=0.1), owner="A")
+    try:
+        with pytest.warns(RuntimeWarning, match="abandoning"):
+            fr = fc.run()
+    finally:
+        release.set()
+
+    assert [a.outcome for a in fr.attempts] == ["abandoned", "completed"]
+    assert fr.term == 1                          # never deposed
+    assert fc._lease.read() is None              # released cleanly
+    assert np.array_equal(ref.weights, fr.result.weights)
+
+
+def test_renew_oserror_is_missed_heartbeat(tmp_path, monkeypatch):
+    """An OSError from the lease WRITE (ENOSPC-style) mid-supervision
+    must neither crash the controller out from under a live worker nor
+    depose it: the failure is a missed heartbeat (one RuntimeWarning
+    per streak), renewals retry next poll, and once the disk recovers
+    the reign completes with its term intact."""
+    kw = dict(algorithm="EM", task="CLS", driver="loop", max_iters=8,
+              min_iters=8)
+    d = str(tmp_path)
+    cfg = SVMConfig(**kw, fault=FaultPolicy(ckpt_dir=d, ckpt_every=1))
+
+    def make_host(level):
+        def host(ctx):
+            return PEMSVM(cfg).fit(X, Y_CLS, resume_from=ctx.resume_from,
+                                   fault_hook=ctx.fault_hook,
+                                   epoch=ctx.epoch)
+        return host
+
+    real = LeaseManager._write_replace
+    fails = {"n": 0}
+
+    def flaky_write(self, st):
+        # Acquisition goes through _write_excl, so this hits RENEWALS:
+        # fail the first two, then recover.
+        if fails["n"] < 2:
+            fails["n"] += 1
+            raise OSError(28, "No space left on device")
+        return real(self, st)
+
+    monkeypatch.setattr(LeaseManager, "_write_replace", flaky_write)
+    fc = FleetController(
+        make_host, d, policy=FleetPolicy(max_attempts=2, poll_s=0.01),
+        lease=LeasePolicy(ttl_s=5.0, renew_every_s=0.01), owner="A")
+    with pytest.warns(RuntimeWarning, match="missed heartbeat"):
+        fr = fc.run()
+
+    assert fails["n"] >= 1                       # failure was exercised
+    assert fr.term == 1
+    assert [a.outcome for a in fr.attempts] == ["completed"]
+
+
 def test_controller_mints_fresh_epoch_per_attempt(tmp_path):
     """Even without an election, every launch gets a fresh fence epoch
     advanced BEFORE the attempt starts — the PR 8 abandoned-worker
