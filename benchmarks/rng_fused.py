@@ -1,0 +1,266 @@
+"""In-kernel counter RNG vs materialized noise operands, and multichain
+scaling (ISSUE 10 acceptance benchmark) -> ``BENCH_rng.json``.
+
+Two claims are measured and gated:
+
+  1. OPERAND ELIMINATION: rng='fused' replaces the ``n_noise`` (N,) f32
+     noise operands of the MC epilogues with one (4,) uint32 seed — the
+     kernel input traffic drops by exactly ``4 * N * n_noise - 16``
+     bytes, and the host pre-draw pass (its own O(N * n_noise) write +
+     read) disappears entirely.  In the memory-bound regime the
+     roofline memory-time drops by the same ratio.
+  2. MULTICHAIN IS NEARLY FREE: C chains are C counter planes over ONE
+     X stream, so the incremental cost of a chain is the O(N) epilogue
+     math + the O(K^2) statistic — never another X pass.  The roofline
+     memory-time of the C-chain statistic is far below C x the
+     single-chain one, and measured wall-clock beats running C
+     independent single-chain statistics.
+
+Gates (asserted, any backend):
+  * analytic operand-byte reduction == 4 * N * n_noise - 16 per MC
+    epilogue, and roofline memory-time strictly lower for fused;
+  * BITWISE parity: seed-mode outputs == operand-mode outputs on the
+    statistic (ref + kernel backends), and an rng='fused' whole fit ==
+    the rng='fused_predraw' oracle fit;
+  * C-chain roofline memory-time < 0.5 * C x single-chain at C = 8
+    (the "nearly free" bound-level claim);
+  * measured: the C-chain statistic beats C independent single-chain
+    calls (< 0.9 * C x single) — the shared X stream is real time, not
+    just a model, even compute-bound on CPU.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import PEMSVM, SVMConfig
+from repro.kernels import epilogues, ops
+from repro.kernels import rng as rng_mod
+
+from .common import append_json, emit
+
+BENCH_JSON = os.environ.get("BENCH_RNG_JSON", "BENCH_rng.json")
+
+PEAK_FLOPS = 197e12     # v5e, matches benchmarks/roofline.py
+HBM_BW = 819e9
+
+
+def _roofline(n: int, k: int, n_noise: int, chains: int) -> dict:
+    """Analytic per-call roofline terms for the fused MC statistic.
+
+    Input bytes: the X stream (4nk), ~3 row operands (targets, beta,
+    mask), w (4k * C), plus the noise source — ``4 n n_noise`` under
+    predraw operands, 16 bytes of seed under the counter.  Outputs:
+    margin + draws ((1 + n_noise/2) * 4n * C), b (4k * C), Sigma
+    (4k^2 * C).  FLOPs: the margin/b matmuls (4nk * C) + the dense
+    Sigma SYRK (2nk^2 * C) + the cipher (~100 int ops per draw pair,
+    counted at 50 * n * n_noise * C when in-kernel)."""
+    noise_bytes = {"operands": 4.0 * n * n_noise, "seed": 16.0}
+    out = {}
+    for name, nb in noise_bytes.items():
+        in_bytes = 4.0 * n * k + 3 * 4.0 * n + 4.0 * k * chains + nb
+        out_bytes = ((1 + n_noise // 2) * 4.0 * n * chains
+                     + 4.0 * k * chains + 4.0 * k * k * chains)
+        flops = (4.0 * n * k * chains + 2.0 * n * k * k * chains
+                 + (50.0 * n * n_noise * chains if name == "seed" else 0))
+        byts = in_bytes + out_bytes
+        out[name] = {"compute_s": flops / PEAK_FLOPS,
+                     "memory_s": byts / HBM_BW,
+                     "bound_s": max(flops / PEAK_FLOPS, byts / HBM_BW),
+                     "in_bytes": in_bytes}
+    return out
+
+
+def _time_best(fn, repeats: int = 3) -> float:
+    fn()                                    # warm the jit caches
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _operand_rows(n: int, ks, backend: str, failures: list) -> list:
+    """Per (epilogue, K): seed-vs-operand byte accounting, roofline,
+    measured wall-clock (predraw timing INCLUDES the host pre-draw —
+    that is what rng='fused_predraw' pays every iteration), and the
+    bitwise-parity gate."""
+    rng = np.random.default_rng(0)
+    key = jax.random.PRNGKey(1)
+    rows = []
+    for k in ks:
+        X = jnp.asarray(rng.normal(size=(n, k)).astype(np.float32))
+        y = jnp.asarray(rng.choice([-1.0, 1.0], n).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=k).astype(np.float32))
+        zeros = jnp.zeros((n,), jnp.float32)
+        seed = rng_mod.pack_seed(key, 0, 0)
+        for epilogue in ("mc_hinge", "mc_svr"):
+            n_noise = epilogues.noise_arity(epilogue)
+            tgt = y if epilogue == "mc_hinge" else jnp.asarray(
+                (np.asarray(X) @ rng.normal(size=k)).astype(np.float32))
+            beta = y if epilogue == "mc_hinge" else zeros
+            kw = dict(epilogue=epilogue, eps=1e-6, eps_ins=0.2,
+                      backend=backend)
+
+            def fused():
+                return [np.asarray(o) for o in ops.fused_stats(
+                    X, tgt, beta, w, None, None, seed=seed, **kw)]
+
+            def predraw():
+                noise = rng_mod.draw_fused_noise(key, n, 0, 0, n_noise)
+                return [np.asarray(o) for o in ops.fused_stats(
+                    X, tgt, beta, w, None, noise, **kw)]
+
+            for a, b in zip(fused(), predraw()):
+                if not np.array_equal(a, b):
+                    failures.append(
+                        f"K={k} {epilogue}: seed vs operands NOT bitwise")
+                    break
+            roof = _roofline(n, k, n_noise, 1)
+            saved = (roof["operands"]["in_bytes"]
+                     - roof["seed"]["in_bytes"])
+            if saved != 4.0 * n * n_noise - 16:
+                failures.append(
+                    f"K={k} {epilogue}: operand bytes saved {saved}")
+            mem_ratio = (roof["operands"]["memory_s"]
+                         / roof["seed"]["memory_s"])
+            if mem_ratio <= 1.0:
+                failures.append(
+                    f"K={k} {epilogue}: roofline memory ratio "
+                    f"{mem_ratio:.3f} not > 1")
+            secs = {"seed": _time_best(fused),
+                    "predraw": _time_best(predraw)}
+            rows.append({
+                "name": f"operand_elim_{epilogue}_K{k}", "n": n, "k": k,
+                "epilogue": epilogue, "backend": backend,
+                "noise_operand_bytes": 4 * n * n_noise,
+                "seed_bytes": 16,
+                "seconds_seed": secs["seed"],
+                "seconds_predraw": secs["predraw"],
+                "measured_ratio_seed_over_predraw": round(
+                    secs["seed"] / secs["predraw"], 4),
+                "roofline_memory_ratio": round(mem_ratio, 4),
+                "bitwise": True,
+            })
+    return rows
+
+
+def _chain_rows(n: int, k: int, backend: str, failures: list,
+                cs=(1, 2, 4, 8)) -> list:
+    """Multichain statistic scaling: C counter planes over one X
+    stream, measured against C independent single-chain calls and the
+    roofline's memory-time model."""
+    rng = np.random.default_rng(2)
+    X = jnp.asarray(rng.normal(size=(n, k)).astype(np.float32))
+    y = jnp.asarray(rng.choice([-1.0, 1.0], n).astype(np.float32))
+    key = jax.random.PRNGKey(3)
+    rows = []
+    base = None
+    for c in cs:
+        W = jnp.asarray(rng.normal(size=(k, c)).astype(np.float32))
+        seed = rng_mod.pack_seed(key, 0, 0)
+
+        def multi(W=W):
+            return [np.asarray(o) for o in ops.fused_stats(
+                X, y, y, W, None, None, seed=seed, epilogue="mc_hinge",
+                eps=1e-6, backend=backend)]
+
+        def singles(W=W, c=c):
+            out = []
+            for i in range(c):
+                out.append([np.asarray(o) for o in ops.fused_stats(
+                    X, y, y, W[:, i], None, None,
+                    seed=rng_mod.pack_seed(key, 0, i),
+                    epilogue="mc_hinge", eps=1e-6, backend=backend)])
+            return out
+
+        secs = {"multi": _time_best(multi), "singles": _time_best(singles)}
+        roof_c = _roofline(n, k, 2, c)["seed"]["memory_s"]
+        roof_1 = _roofline(n, k, 2, 1)["seed"]["memory_s"]
+        if base is None:
+            base = secs["multi"]
+        if c >= 4:
+            if roof_c / roof_1 >= 0.5 * c:
+                failures.append(
+                    f"C={c}: roofline memory {roof_c / roof_1:.2f}x not "
+                    f"< 0.5 * {c}")
+            if secs["multi"] >= 0.9 * secs["singles"]:
+                failures.append(
+                    f"C={c}: multichain {secs['multi']:.4f}s not < 0.9 x "
+                    f"{c} singles {secs['singles']:.4f}s")
+        rows.append({
+            "name": f"chain_scaling_C{c}", "n": n, "k": k, "chains": c,
+            "backend": backend,
+            "seconds_multichain": secs["multi"],
+            "seconds_c_singles": secs["singles"],
+            "measured_vs_c_singles": round(
+                secs["multi"] / secs["singles"], 4),
+            "measured_vs_c1": round(secs["multi"] / base, 4),
+            "roofline_memory_vs_c1": round(roof_c / roof_1, 4),
+        })
+    return rows
+
+
+def _fit_rows(n: int, k: int, failures: list) -> list:
+    """Whole-fit gates: rng='fused' == rng='fused_predraw' bitwise, and
+    a C-chain fit vs C independent chain0-staggered fits (the ensemble
+    the multichain mode replaces), dispatch backend."""
+    rng = np.random.default_rng(4)
+    X = rng.normal(size=(n, k)).astype(np.float32)
+    y = np.where(X @ rng.normal(size=k) > 0, 1.0, -1.0).astype(np.float32)
+    kw = dict(algorithm="MC", burnin=4, max_iters=12, min_iters=12)
+
+    t0 = time.perf_counter()
+    fused = PEMSVM(SVMConfig(**kw, rng="fused")).fit(X, y)
+    sec_fused = time.perf_counter() - t0
+    oracle = PEMSVM(SVMConfig(**kw, rng="fused_predraw")).fit(X, y)
+    bitwise = bool(np.array_equal(fused.weights, oracle.weights))
+    if not bitwise:
+        failures.append("whole fit: rng='fused' != 'fused_predraw'")
+
+    C = 4
+    t0 = time.perf_counter()
+    multi = PEMSVM(SVMConfig(**kw, rng="fused", n_chains=C)).fit(X, y)
+    sec_multi = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for c in range(C):
+        PEMSVM(SVMConfig(**kw, rng="fused", chain0=c)).fit(X, y)
+    sec_serial = time.perf_counter() - t0
+    if sec_multi >= 0.9 * sec_serial:
+        failures.append(
+            f"fit: {C}-chain {sec_multi:.3f}s not < 0.9 x serial "
+            f"{sec_serial:.3f}s")
+    assert multi.chain_weights.shape == (C, k + 1)
+    return [{"name": "whole_fit_parity", "n": n, "k": k,
+             "bitwise_fused_vs_predraw": bitwise,
+             "seconds": sec_fused},
+            {"name": f"whole_fit_chains_C{C}", "n": n, "k": k,
+             "chains": C, "seconds_multichain_fit": sec_multi,
+             "seconds_serial_fits": sec_serial,
+             "measured_vs_serial": round(sec_multi / sec_serial, 4)}]
+
+
+def run(full: bool = False, backend: str | None = None):
+    # Statistic rows exercise the real kernel body (interpret off TPU);
+    # fit rows use the dispatch default (ref -> XLA on CPU).
+    kernel_backend = backend or (
+        "pallas" if jax.default_backend() == "tpu" else "interpret")
+    n = 16384 if full else 2048
+    failures: list[str] = []
+    rows = _operand_rows(n, (64, 256), kernel_backend, failures)
+    rows += _chain_rows(n, 128, kernel_backend, failures)
+    rows += _fit_rows(2048 if not full else 8192, 16, failures)
+    emit(rows, "rng_fused")
+    append_json(rows, BENCH_JSON)
+    assert not failures, "; ".join(failures)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -18,9 +18,9 @@ def main() -> None:
 
     from . import (elastic_overhead, fig2_cores, fig34_scaling,
                    fig56_convergence, fleet_recovery, kshard_fused,
-                   mc_fused, nystrom_fused, roofline, serve_latency,
-                   stream_vs_resident, table5_dna, table6_svr,
-                   table7_krn, table8_mlt, table9_gram)
+                   mc_fused, nystrom_fused, rng_fused, roofline,
+                   serve_latency, stream_vs_resident, table5_dna,
+                   table6_svr, table7_krn, table8_mlt, table9_gram)
     benches = {
         "table5_dna": table5_dna.run,
         "table6_svr": table6_svr.run,
@@ -34,6 +34,7 @@ def main() -> None:
         "stream_vs_resident": stream_vs_resident.run,
         "nystrom_fused": nystrom_fused.run,
         "mc_fused": mc_fused.run,
+        "rng_fused": rng_fused.run,
         "kshard_fused": kshard_fused.run,
         "elastic_overhead": elastic_overhead.run,
         "fleet_recovery": fleet_recovery.run,

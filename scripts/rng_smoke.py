@@ -1,0 +1,119 @@
+#!/usr/bin/env python
+"""CPU counter-RNG smoke for CI (mirrors scripts/mc_smoke.py): the
+in-kernel noise generator, the seed-operand kernel path and the
+multichain ensemble, gated on bitwise parity.
+
+Gates:
+
+  * BITWISE generator parity: the kernel-tile generator
+    (``tile_noise``) emits exactly the host oracle's
+    (``draw_fused_noise``) stream per chain plane, and chunk slices
+    are literal slices of the full stream;
+  * BITWISE kernel parity: ``ops.fused_stats`` under the (4,) counter
+    seed == the same call fed the materialized noise operands, for
+    both MC epilogues;
+  * BITWISE whole-fit parity: an rng='fused' MC fit == the
+    rng='fused_predraw' oracle fit (CLS and SVR, stream driver);
+  * multichain surface: a 3-chain fit's weights are the float64 chain
+    mean, chain_std the ddof-1 spread, chains pairwise distinct.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> int:
+    import numpy as np
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import PEMSVM, SVMConfig
+    from repro.kernels import ops
+    from repro.kernels import rng as rng_mod
+
+    rng = np.random.default_rng(0)
+    N, K = 1024, 16
+    X = rng.normal(size=(N, K)).astype(np.float32)
+    w_true = rng.normal(size=K)
+    y = np.where(X @ w_true + 0.3 * rng.normal(size=N) > 0,
+                 1.0, -1.0).astype(np.float32)
+    ys = (X @ w_true).astype(np.float32)
+    key = jax.random.PRNGKey(7)
+
+    # --- gate 1: generator parity (tile == oracle, slices == full) ---
+    seed = np.asarray(rng_mod.pack_seed(key, 100, 2))
+    tile = rng_mod.tile_noise(seed, 28, (64, 3), 2)
+    gen_ok = True
+    for c in range(3):
+        want = rng_mod.draw_fused_noise(key, 64, 128, 2 + c, 2)
+        gen_ok &= all(np.array_equal(np.asarray(t)[:, c], np.asarray(w))
+                      for t, w in zip(tile, want))
+    full = rng_mod.draw_fused_noise(key, 300, 0, 0, 4)
+    part = rng_mod.draw_fused_noise(key, 100, 150, 0, 4)
+    gen_ok &= all(np.array_equal(np.asarray(f)[150:250], np.asarray(p))
+                  for f, p in zip(full, part))
+    print(f"generator parity: tile/slice bitwise={gen_ok}")
+    if not gen_ok:
+        print("GENERATOR PARITY FAIL")
+        return 1
+
+    # --- gate 2: seed vs operand kernel parity, bitwise --------------
+    Xd, yd = jnp.asarray(X), jnp.asarray(y)
+    w = jnp.asarray(rng.normal(size=K).astype(np.float32))
+    for epilogue, tgt, beta, n_noise in (
+            ("mc_hinge", yd, yd, 2),
+            ("mc_svr", jnp.asarray(ys), jnp.zeros(N), 4)):
+        kw = dict(epilogue=epilogue, eps=1e-6, eps_ins=0.2,
+                  backend="ref")
+        got = ops.fused_stats(Xd, tgt, beta, w, None, None,
+                              seed=rng_mod.pack_seed(key, 5, 0), **kw)
+        want = ops.fused_stats(
+            Xd, tgt, beta, w, None,
+            rng_mod.draw_fused_noise(key, N, 5, 0, n_noise), **kw)
+        ok = all(np.array_equal(np.asarray(a), np.asarray(b))
+                 for a, b in zip(got, want))
+        print(f"kernel parity {epilogue}: bitwise={ok}")
+        if not ok:
+            print("KERNEL PARITY FAIL")
+            return 1
+
+    # --- gate 3: whole-fit fused == predraw oracle, bitwise ----------
+    for task, tgt in (("CLS", y), ("SVR", ys)):
+        kw = dict(algorithm="MC", task=task, eps=1e-2, eps_ins=0.3,
+                  burnin=4, max_iters=12, min_iters=12, driver="stream",
+                  chunk_rows=256)
+        a = PEMSVM(SVMConfig(**kw, rng="fused")).fit(X, tgt)
+        b = PEMSVM(SVMConfig(**kw, rng="fused_predraw")).fit(X, tgt)
+        ok = np.array_equal(a.weights, b.weights)
+        print(f"whole-fit parity {task}: bitwise={ok}")
+        if not ok:
+            print("WHOLE-FIT PARITY FAIL")
+            return 1
+
+    # --- gate 4: multichain ensemble surface -------------------------
+    res = PEMSVM(SVMConfig(algorithm="MC", burnin=4, max_iters=12,
+                           min_iters=12, rng="fused", n_chains=3)
+                 ).fit(X, y)
+    cw = res.chain_weights.astype(np.float64)
+    ok = (res.chain_weights.shape == (3, K + 1)
+          and np.array_equal(res.weights,
+                             cw.mean(axis=0).astype(np.float32))
+          and np.array_equal(res.chain_std,
+                             cw.std(axis=0, ddof=1).astype(np.float32))
+          and not np.array_equal(res.chain_weights[0],
+                                 res.chain_weights[1]))
+    print(f"multichain ensemble: ok={ok}")
+    if not ok:
+        print("MULTICHAIN FAIL")
+        return 1
+
+    print("rng smoke complete")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

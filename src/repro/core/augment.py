@@ -35,6 +35,11 @@ import jax.numpy as jnp
 
 from repro.kernels.epilogues import (_MU_MAX, ig_gamma_from_noise,  # noqa: F401
                                      ig_transform)
+# Counter-based noise (SVMConfig.rng = 'fused'/'fused_predraw'):
+# ``draw_fused_noise`` is the host materialization of the stream the
+# fused kernels derive in-body, ``pack_seed`` builds their (4,) uint32
+# seed operand. ``draw_ig_noise`` below stays the rng='host' oracle.
+from repro.kernels.rng import draw_fused_noise, pack_seed  # noqa: F401
 
 
 def sample_inverse_gaussian(key: jax.Array, mu: jnp.ndarray,

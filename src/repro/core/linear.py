@@ -71,7 +71,8 @@ def accumulate_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
                      row0: jnp.ndarray | int = 0,
                      phi=None, phi_spec: PhiSpec | None = None,
                      mask: jnp.ndarray | None = None,
-                     col_window: tuple | None = None):
+                     col_window: tuple | None = None,
+                     rng: str = "host", chain0: int = 0):
     """(margin, gamma, Sigma^p, mu^p) for the generic hinge over one row
     block — THE chunk-callable statistic every driver shares: the
     in-memory drivers call it on the whole (padded) set, the mesh SPMD
@@ -109,12 +110,30 @@ def accumulate_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
     phi path (where it selects PHI columns), so the single-X-stream
     property carries to the 2-D layout unchanged; margin/gamma/b stay
     full width.
+
+    ``rng`` selects the MC noise source (DESIGN.md §Perf/RNG):
+    'host' pre-draws the fold_in-keyed (nu, u) operands
+    (``augment.draw_ig_noise``, today's path); 'fused' ships only the
+    (4,) uint32 counter seed and the kernels derive the bits in-body;
+    'fused_predraw' materializes the SAME counter stream on the host
+    (``augment.draw_fused_noise``) and feeds it through the legacy
+    operand path — the whole-fit bitwise oracle for 'fused'.
+    ``chain0`` offsets the counter's chain coordinate; a 2-D (K, C)
+    ``w`` under 'fused' runs C Gibbs chains over the one X stream
+    (margin/gamma (N, C), b (K, C), S (C, K, K)).
     """
     if mode == "EM":
-        epilogue, noise = "em_hinge", None
-    else:
-        epilogue = "mc_hinge"
+        epilogue, noise, seed = "em_hinge", None, None
+    elif rng == "host":
+        epilogue, seed = "mc_hinge", None
         noise = augment.draw_ig_noise(key, X.shape[0], row0)
+    elif rng == "fused_predraw":
+        epilogue, seed = "mc_hinge", None
+        noise = augment.draw_fused_noise(key, X.shape[0], row0, chain0, 2)
+    else:
+        assert rng == "fused", rng
+        epilogue, noise = "mc_hinge", None
+        seed = augment.pack_seed(key, row0, chain0)
     if phi_spec is not None:
         landmarks, proj = phi
         if mask is None:
@@ -123,11 +142,11 @@ def accumulate_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
             X, landmarks, proj, rho, beta, w, mask, noise,
             sigma=phi_spec.sigma, kind=phi_spec.kind,
             add_bias=phi_spec.add_bias, epilogue=epilogue, eps=eps,
-            col_window=col_window, backend=backend)
+            col_window=col_window, seed=seed, backend=backend)
     else:
         margin, gamma, b, S = ops.fused_stats(
             X, rho, beta, w, None, noise, epilogue=epilogue, eps=eps,
-            col_window=col_window, backend=backend)
+            col_window=col_window, seed=seed, backend=backend)
     return margin, gamma, S, b
 
 
@@ -159,9 +178,35 @@ def _k_block(width: int, axis_name: str):
     return jax.lax.axis_index(axis_name) * blk, blk
 
 
+def chain_keys(key: jax.Array, chain0: int, n_chains: int) -> jax.Array:
+    """Per-chain weight-draw keys: ``fold_in(key, chain0 + c)``.
+
+    Under the counter rng modes EVERY weight draw is chain-keyed (even
+    n_chains = 1), so chain c's draw depends only on (iteration key,
+    absolute chain id) — never on how many chains ride the same fit."""
+    ids = jnp.asarray(chain0, jnp.int32) + jnp.arange(n_chains,
+                                                      dtype=jnp.int32)
+    return jax.vmap(jax.random.fold_in, in_axes=(None, 0))(key, ids)
+
+
+def multichain_draw(key: jax.Array, S: jnp.ndarray, b: jnp.ndarray,
+                    lam: float, jitter: float, chain0: int):
+    """Per-chain posterior solves + chain-keyed Gibbs weight draws.
+
+    ``S`` (C, K, K), ``b`` (K, C) -> (C, K) draws: C independent
+    Cholesky factorizations of lam*I + S_c and
+    ``draw_weight(fold_in(key, chain0 + c), L_c, mu_c)``."""
+    C = S.shape[0]
+    L, mu = jax.vmap(
+        lambda Sc, bc: stats.posterior_params(Sc, bc, lam, jitter=jitter)
+    )(S, b.T)
+    return jax.vmap(stats.draw_weight)(chain_keys(key, chain0, C), L, mu)
+
+
 @partial(jax.jit, static_argnames=("mode", "lam", "eps", "jitter", "axes",
                                    "triangle", "backend", "k_shard_axis",
-                                   "reduce_dtype", "phi_spec"))
+                                   "reduce_dtype", "phi_spec", "rng",
+                                   "n_chains", "chain0"))
 def cls_step(data: SVMData, w: jnp.ndarray, key: jax.Array, *,
              mode: str = "EM", lam: float = 1.0, eps: float = 1e-6,
              jitter: float = 1e-6, axes: Sequence[str] = (),
@@ -169,13 +214,21 @@ def cls_step(data: SVMData, w: jnp.ndarray, key: jax.Array, *,
              k_shard_axis: str | None = None,
              reduce_dtype: str | None = None,
              phi=None, phi_spec: PhiSpec | None = None,
-             live: jnp.ndarray | None = None):
+             live: jnp.ndarray | None = None,
+             rng: str = "host", n_chains: int = 1, chain0: int = 0):
     """One LIN-*-CLS iteration. Returns (w_new, aux dict).
 
     ``live`` (this shard's liveness weight) renormalizes every reduction
     around dropped replicas — see ``stats.preduce``; all-ones is bitwise
-    the plain psum."""
+    the plain psum.
+
+    ``rng``/``chain0`` select the MC noise source (see
+    ``accumulate_stats``). ``n_chains > 1`` (counter rng only) carries
+    the weight state CHAIN-MAJOR as (C, K): the statistic runs all C
+    chains over one X stream, the C posterior solves are vmapped, and
+    the reported objective/diagnostics are cross-chain means."""
     X, y, mask = data
+    multi = n_chains > 1
     # Rowwise MC draws are keyed by global row index, so shards need no
     # per-shard key folds — the row offset decorrelates them and keeps
     # the chain identical to the single-device and streaming drivers.
@@ -188,9 +241,9 @@ def cls_step(data: SVMData, w: jnp.ndarray, key: jax.Array, *,
     col_window = (_k_block(w.shape[0], k_shard_axis)
                   if k_shard_axis is not None else None)
     margin, gamma, S, b = accumulate_stats(
-        X, y, y, w, mode=mode, key=key, eps=eps, backend=backend,
-        row0=row0, phi=phi, phi_spec=phi_spec, mask=mask,
-        col_window=col_window)
+        X, y, y, w.T if multi else w, mode=mode, key=key, eps=eps,
+        backend=backend, row0=row0, phi=phi, phi_spec=phi_spec, mask=mask,
+        col_window=col_window, rng=rng, chain0=chain0)
     if k_shard_axis is None:
         S, b = stats.reduce_stats(S, b, axes, triangle=triangle,
                                   reduce_dtype=reduce_dtype, live=live)
@@ -198,21 +251,39 @@ def cls_step(data: SVMData, w: jnp.ndarray, key: jax.Array, *,
         S, b = stats.reduce_kshard(S, b, axes, k_shard_axis,
                                    reduce_dtype=reduce_dtype, live=live)
 
-    L, mu = stats.posterior_params(S, b, lam, jitter=jitter)
-    w_new = mu if mode == "EM" else stats.draw_weight(key, L, mu)
-
-    obj = objective.l2_reg(w_new, lam) + stats.preduce(
-        objective.hinge_obj_terms(margin, y, mask), axes, live)
-    n_sv = stats.preduce(jnp.sum(mask * (gamma <= 2.0 * eps)), axes, live)
+    if multi:
+        w_new = multichain_draw(key, S, b, lam, jitter, chain0)
+        maskc = jnp.broadcast_to(mask[:, None], margin.shape)
+        obj = objective.l2_reg(w_new, lam) / n_chains + stats.preduce(
+            objective.hinge_obj_terms(margin, y[:, None], maskc),
+            axes, live) / n_chains
+        n_sv = stats.preduce(jnp.sum(maskc * (gamma <= 2.0 * eps)),
+                             axes, live) / n_chains
+        gamma_mean = stats.masked_mean(gamma, maskc, axes, live)
+    else:
+        L, mu = stats.posterior_params(S, b, lam, jitter=jitter)
+        if mode == "EM":
+            w_new = mu
+        elif rng == "host":
+            w_new = stats.draw_weight(key, L, mu)
+        else:
+            w_new = stats.draw_weight(chain_keys(key, chain0, 1)[0], L, mu)
+        obj = objective.l2_reg(w_new, lam) + stats.preduce(
+            objective.hinge_obj_terms(margin, y, mask), axes, live)
+        n_sv = stats.preduce(jnp.sum(mask * (gamma <= 2.0 * eps)),
+                             axes, live)
+        gamma_mean = stats.masked_mean(gamma, mask, axes, live)
     return w_new, {"objective": obj,
-                   "gamma_mean": stats.masked_mean(gamma, mask, axes, live),
+                   "gamma_mean": gamma_mean,
                    "n_sv": n_sv}
 
 
 def cls_chunk_stats(chunk: SVMData, w: jnp.ndarray, key: jax.Array,
                     row0: jnp.ndarray, *, mode: str, eps: float,
                     backend: str | None, phi=None,
-                    phi_spec: PhiSpec | None = None) -> dict:
+                    phi_spec: PhiSpec | None = None,
+                    rng: str = "host", n_chains: int = 1,
+                    chain0: int = 0) -> dict:
     """Streaming E-step body for CLS: one chunk's additive contributions.
 
     Every field is an exact sum over the chunk's valid rows, so the
@@ -220,11 +291,29 @@ def cls_chunk_stats(chunk: SVMData, w: jnp.ndarray, key: jax.Array,
     same (Sigma, b, loss, aux) the in-memory step computes in one shot
     (padded rows contribute zero by the layout convention; in phi-space
     the mask enforces it — see ``accumulate_stats``).
+
+    Multichain (counter rng) chunks carry S (C, K, K) / b (K, C) and
+    chain-MEAN scalar diagnostics; the counter keying makes the draws —
+    and therefore the whole chain — invariant to the chunk grid, which
+    is what the elastic mid-pass resume test pins bitwise.
     """
     X, y, mask = chunk
+    multi = n_chains > 1
     margin, gamma, S, b = accumulate_stats(
-        X, y, y, w, mode=mode, key=key, eps=eps, backend=backend,
-        row0=row0, phi=phi, phi_spec=phi_spec, mask=mask)
+        X, y, y, w.T if multi else w, mode=mode, key=key, eps=eps,
+        backend=backend, row0=row0, phi=phi, phi_spec=phi_spec, mask=mask,
+        rng=rng, chain0=chain0)
+    if multi:
+        maskc = jnp.broadcast_to(mask[:, None], margin.shape)
+        return {
+            "S": S,
+            "b": b,
+            "loss": objective.hinge_obj_terms(margin, y[:, None],
+                                              maskc) / n_chains,
+            "gamma_sum": jnp.sum(gamma * maskc) / n_chains,
+            "mask_sum": jnp.sum(mask),
+            "n_sv": jnp.sum(maskc * (gamma <= 2.0 * eps)) / n_chains,
+        }
     return {
         "S": S,
         "b": b,

@@ -91,13 +91,15 @@ def mlt_class_chunk_stats(chunk: SVMData, W: jnp.ndarray, key: jax.Array,
                           row0: jnp.ndarray, y: jnp.ndarray, *,
                           num_classes: int, mode: str, eps: float,
                           backend: str | None, phi=None,
-                          phi_spec: PhiSpec | None = None) -> dict:
+                          phi_spec: PhiSpec | None = None,
+                          rng: str = "host", chain0: int = 0) -> dict:
     """Streaming class-y E-step body: one chunk's (Sigma, b) contribution.
 
     Recomputes the chunk's score matrix from the *current* W (classes
     before y already updated this sweep), reproducing the in-memory
     step's incrementally-maintained F exactly — see module docstring.
-    The gamma key is ``fold_in(key, y)`` + rowwise, matching
+    The gamma key is ``fold_in(key, y)`` + rowwise (counter rng modes
+    build their seed from the same per-class key), matching
     ``mlt_step``'s per-class keying, so MC chains agree bitwise with the
     in-memory drivers."""
     X, labels, mask = chunk
@@ -106,7 +108,7 @@ def mlt_class_chunk_stats(chunk: SVMData, W: jnp.ndarray, key: jax.Array,
     rho, beta = _rho_beta(F, labels, y, num_classes)
     _, _, S, b = accumulate_stats(
         X, rho, beta, W[y], mode=mode, key=jax.random.fold_in(key, y),
-        eps=eps, backend=backend, row0=row0)
+        eps=eps, backend=backend, row0=row0, rng=rng, chain0=chain0)
     return {"S": S, "b": b}
 
 
@@ -125,7 +127,7 @@ def mlt_chunk_obj(chunk: SVMData, W: jnp.ndarray, phi=None,
 @partial(jax.jit, static_argnames=("num_classes", "mode", "lam", "eps",
                                    "jitter", "axes", "triangle", "backend",
                                    "k_shard_axis", "reduce_dtype",
-                                   "phi_spec"))
+                                   "phi_spec", "rng", "chain0"))
 def mlt_step(data: SVMData, W: jnp.ndarray, key: jax.Array, *,
              num_classes: int, mode: str = "EM", lam: float = 1.0,
              eps: float = 1e-6, jitter: float = 1e-6,
@@ -134,13 +136,20 @@ def mlt_step(data: SVMData, W: jnp.ndarray, key: jax.Array, *,
              k_shard_axis: str | None = None,
              reduce_dtype: str | None = None,
              phi=None, phi_spec: PhiSpec | None = None,
-             live: jnp.ndarray | None = None):
+             live: jnp.ndarray | None = None,
+             rng: str = "host", chain0: int = 0):
     """One outer MLT iteration = one block sweep over all M classes.
 
     W: (M, K). Returns (W_new, aux dict). ``k_shard_axis`` switches
     every class conditional to the 2-D (data x model) column-windowed
     statistic (one window per shard, shared by all M passes — the
     class sweep stays M single-stream fused passes).
+
+    ``rng``/``chain0``: the counter modes key class y's in-kernel noise
+    from ``pack_seed(fold_in(key, y), row0, chain0)`` and its weight
+    draw from ``fold_in(fold_in(key, y), chain0)`` — MLT runs a single
+    chain (n_chains > 1 is CLS/SVR-only), so chain0 just addresses
+    which counter plane this fit occupies.
     """
     X, labels, mask = data
     X = _maybe_featurize(X, mask, phi, phi_spec, backend)
@@ -159,7 +168,7 @@ def mlt_step(data: SVMData, W: jnp.ndarray, key: jax.Array, *,
         _, gamma, S, b = accumulate_stats(
             X, rho, beta, W[y], mode=mode,
             key=jax.random.fold_in(key, y), eps=eps, backend=backend,
-            row0=row0, col_window=col_window)
+            row0=row0, col_window=col_window, rng=rng, chain0=chain0)
         if k_shard_axis is None:
             S, b = stats.reduce_stats(S, b, axes, triangle=triangle,
                                       reduce_dtype=reduce_dtype, live=live)
@@ -170,7 +179,10 @@ def mlt_step(data: SVMData, W: jnp.ndarray, key: jax.Array, *,
         if mode == "EM":
             w_new = mu
         else:
-            w_new = stats.draw_weight(jax.random.fold_in(key, y), L, mu)
+            ky = jax.random.fold_in(key, y)
+            if rng != "host":
+                ky = jax.random.fold_in(ky, chain0)
+            w_new = stats.draw_weight(ky, L, mu)
         W = W.at[y].set(w_new)
         F = F.at[:, y].set(Xf @ w_new)
         return (W, F)

@@ -50,12 +50,16 @@ _MIDPASS_STRIDE = 1_000_000
 
 # Fields whose values change the fit trajectory itself (as opposed to
 # its schedule or layout). max_iters is excluded on purpose: resuming
-# with a larger budget is how a preempted fit is EXTENDED.
+# with a larger budget is how a preempted fit is EXTENDED. rng /
+# n_chains / chain0 are semantic: the noise SOURCE and the chain
+# coordinates select which counter stream the Gibbs chain consumes, so
+# resuming a 'host' checkpoint under 'fused' (or at a different chain
+# block) would silently continue a DIFFERENT chain.
 _SEMANTIC_FIELDS = (
     "formulation", "algorithm", "task", "lam", "eps", "eps_ins",
     "num_classes", "kernel", "sigma", "min_iters", "patience", "tol",
     "burnin", "jitter", "add_bias", "seed", "pad_features", "decay",
-    "window",
+    "window", "rng", "n_chains", "chain0",
 )
 
 

@@ -81,6 +81,14 @@ class SVMConfig:
                                  # generations (stream only; 0 = off) —
                                  # the ring-of-partials alternative to
                                  # decay (stats.StatsWindow)
+    rng: str = "host"            # MC noise source: host pre-draw |
+                                 # fused (in-kernel counter cipher) |
+                                 # fused_predraw (counter stream fed
+                                 # through the operand path — the
+                                 # bitwise oracle for 'fused')
+    n_chains: int = 1            # parallel Gibbs chains over one X
+                                 # stream (rng='fused', CLS/SVR LIN)
+    chain0: int = 0              # first chain id (counter plane offset)
 
     def __post_init__(self):
         assert self.formulation in FORMULATIONS, self.formulation
@@ -88,6 +96,36 @@ class SVMConfig:
         assert self.task in TASKS, self.task
         assert self.driver in ("scan", "loop", "stream"), self.driver
         assert self.scan_chunk >= 1, self.scan_chunk
+        assert self.rng in ("host", "fused", "fused_predraw"), self.rng
+        assert self.n_chains >= 1, self.n_chains
+        assert self.chain0 >= 0, self.chain0
+        if self.rng != "host":
+            # The counter modes replace the MC Gibbs draws; EM has no
+            # draws. The exact-Gram KRN step has no counter plumbing,
+            # but a KRN config is also the user-facing surface of
+            # NystromSVM (which replaces it with a LIN + phi_spec
+            # delegate), so the formulation check lives in
+            # PEMSVM.__init__ where only real exact-Gram fits land.
+            assert self.algorithm == "MC", (
+                f"rng={self.rng!r} selects the MC noise source; "
+                "algorithm='EM' draws no noise")
+        if self.n_chains > 1:
+            # Multichain = C counter planes over one X stream: only the
+            # in-kernel counter can address them (the operand paths
+            # carry one (N,) stream), and the multichain kernel is the
+            # full-width linear CLS/SVR statistic.
+            assert self.rng == "fused", (
+                "n_chains > 1 requires rng='fused' (the per-chain noise "
+                "is derived in-kernel from the chain counter plane)")
+            assert self.task in ("CLS", "SVR"), (
+                "n_chains > 1 covers CLS/SVR; MLT's class sweep is one "
+                "chain (run separate fits with distinct chain0 instead)")
+            assert self.phi_spec is None, (
+                "n_chains > 1 is the LIN X-space multichain kernel; "
+                "the Nystrom phi route is single-chain")
+            assert self.k_shard_axis is None, (
+                "n_chains > 1 does not compose with the 2-D column-"
+                "windowed statistic; drop k_shard_axis")
         # pad_features targets the LIN X-space statistic width (the
         # k_shard divisibility helper); phi-space width is the landmark
         # count + bias, which the user picks directly.
@@ -166,6 +204,11 @@ class FitResult:
     loader_retries: int = 0         # transient loader failures absorbed
     #                                 by retrying_chunks during this fit
     loader_backoff_s: float = 0.0   # seconds slept backing those off
+    chain_weights: np.ndarray | None = None  # (C, K) per-chain posterior
+    #                                 means (n_chains > 1) — ``weights``
+    #                                 is their cross-chain mean
+    chain_std: np.ndarray | None = None      # (K,) cross-chain std
+    #                                 (ddof=1) of the per-chain means
 
 
 @functools.lru_cache(maxsize=256)
@@ -186,6 +229,11 @@ def _build_step_fn(cfg: SVMConfig, mesh: Mesh | None,
                   jitter=cfg.jitter, axes=tuple(axes),
                   triangle=cfg.triangle_reduce, backend=cfg.backend,
                   reduce_dtype=cfg.reduce_dtype)
+    if cfg.formulation != "KRN":
+        # Counter-rng plumbing (LIN steps only; KRN keeps the legacy
+        # host draw and the config rejects rng != 'host' there).
+        common.update(rng=cfg.rng, chain0=cfg.chain0)
+    chains = dict(n_chains=cfg.n_chains)
 
     def _live(rest):
         return rest[0] if rest else None
@@ -204,14 +252,16 @@ def _build_step_fn(cfg: SVMConfig, mesh: Mesh | None,
                 return linear.cls_step(data, state, key,
                                        k_shard_axis=cfg.k_shard_axis,
                                        phi=prior, phi_spec=cfg.phi_spec,
-                                       live=_live(rest), **common)
+                                       live=_live(rest), **common,
+                                       **chains)
         elif cfg.task == "SVR":
             def step(data, prior, state, key, *rest):
                 return svr.svr_step(data, state, key,
                                     eps_ins=cfg.eps_ins, phi=prior,
                                     k_shard_axis=cfg.k_shard_axis,
                                     phi_spec=cfg.phi_spec,
-                                    live=_live(rest), **common)
+                                    live=_live(rest), **common,
+                                    **chains)
         else:
             def step(data, prior, state, key, *rest):
                 return multiclass.mlt_step(data, state, key,
@@ -224,13 +274,13 @@ def _build_step_fn(cfg: SVMConfig, mesh: Mesh | None,
         def step(data, state, key, *rest):
             return linear.cls_step(data, state, key,
                                    k_shard_axis=cfg.k_shard_axis,
-                                   live=_live(rest), **common)
+                                   live=_live(rest), **common, **chains)
     elif cfg.task == "SVR":
         def step(data, state, key, *rest):
             return svr.svr_step(data, state, key,
                                 k_shard_axis=cfg.k_shard_axis,
                                 eps_ins=cfg.eps_ins,
-                                live=_live(rest), **common)
+                                live=_live(rest), **common, **chains)
     else:
         def step(data, state, key, *rest):
             return multiclass.mlt_step(data, state, key,
@@ -240,7 +290,8 @@ def _build_step_fn(cfg: SVMConfig, mesh: Mesh | None,
 
     if mesh is None:
         return step
-    state_spec = P(None, None) if cfg.task == "MLT" else P(None)
+    state_spec = (P(None, None) if cfg.task == "MLT" or cfg.n_chains > 1
+                  else P(None))
     prior_spec = ((P(None, None), P(None, None))
                   if cfg.phi_spec is not None else P(None, None))
     return distributed.shard_wrap(mesh, data_axes, step,
@@ -335,7 +386,8 @@ def _stream_fns(cfg: SVMConfig):
         def chunk(data, W, key, row0, y_cls, phi):
             return multiclass.mlt_class_chunk_stats(
                 data, W, key, row0, y_cls,
-                num_classes=cfg.num_classes, phi=phi, **common)
+                num_classes=cfg.num_classes, phi=phi, **common,
+                rng=cfg.rng, chain0=cfg.chain0)
 
         @jax.jit
         def mstep(W, S, b, key, y_cls):
@@ -344,8 +396,10 @@ def _stream_fns(cfg: SVMConfig):
             if cfg.algorithm == "EM":
                 w_new = mu
             else:
-                w_new = stats.draw_weight(
-                    jax.random.fold_in(key, y_cls), L, mu)
+                ky = jax.random.fold_in(key, y_cls)
+                if cfg.rng != "host":
+                    ky = jax.random.fold_in(ky, cfg.chain0)
+                w_new = stats.draw_weight(ky, L, mu)
             return W.at[y_cls].set(w_new)
 
         @jax.jit
@@ -360,23 +414,37 @@ def _stream_fns(cfg: SVMConfig):
         return dict(chunk=chunk, add=add, mstep=mstep, obj=obj,
                     obj_total=obj_total)
 
+    chains = dict(rng=cfg.rng, n_chains=cfg.n_chains, chain0=cfg.chain0)
     if cfg.task == "SVR":
         @jax.jit
         def chunk(data, w, key, row0, phi):
             return svr.svr_chunk_stats(data, w, key, row0,
                                        eps_ins=cfg.eps_ins, phi=phi,
-                                       **common)
+                                       **common, **chains)
     else:
         @jax.jit
         def chunk(data, w, key, row0, phi):
             return linear.cls_chunk_stats(data, w, key, row0, phi=phi,
-                                          **common)
+                                          **common, **chains)
 
     @jax.jit
     def mstep(S, b, loss_sum, key):
+        if cfg.n_chains > 1:
+            # Per-chain posterior solves + chain-keyed draws; the chunk
+            # loss is already the cross-chain mean, so only l2 scales.
+            w_new = linear.multichain_draw(key, S, b, cfg.lam,
+                                           cfg.jitter, cfg.chain0)
+            obj = (objective.l2_reg(w_new, cfg.lam) / cfg.n_chains
+                   + loss_sum)
+            return w_new, obj
         L, mu = stats.posterior_params(S, b, cfg.lam, jitter=cfg.jitter)
-        w_new = (mu if cfg.algorithm == "EM"
-                 else stats.draw_weight(key, L, mu))
+        if cfg.algorithm == "EM":
+            w_new = mu
+        elif cfg.rng == "host":
+            w_new = stats.draw_weight(key, L, mu)
+        else:
+            w_new = stats.draw_weight(
+                linear.chain_keys(key, cfg.chain0, 1)[0], L, mu)
         return w_new, objective.l2_reg(w_new, cfg.lam) + loss_sum
 
     return dict(chunk=chunk, add=add, mstep=mstep)
@@ -639,6 +707,14 @@ class PEMSVM:
 
     def __init__(self, config: SVMConfig, mesh: Mesh | None = None,
                  data_axes: Sequence[str] | None = None):
+        if config.formulation == "KRN" and config.rng != "host":
+            # NystromSVM never forwards its KRN surface config here (it
+            # builds a LIN + phi_spec delegate), so any KRN config that
+            # reaches PEMSVM is a real exact-Gram fit.
+            raise ValueError(
+                f"rng={config.rng!r} needs the fused LIN statistics; the "
+                "exact-Gram KRN step has no counter plumbing — use "
+                "NystromSVM for kernel models")
         self.config = config
         self.mesh = mesh
         if mesh is not None and data_axes is None:
@@ -660,6 +736,10 @@ class PEMSVM:
         # data-shard indices a health probe has flagged; consumed by the
         # fault policy's on_straggler='drop' reaction.
         self._suspect_shards: set[int] = set()
+        # (C, K) per-chain posterior means of the last multichain fit
+        # (None otherwise) — the serving export turns these into
+        # ensemble uncertainty columns.
+        self._chain_weights: np.ndarray | None = None
 
     def report_slow_shard(self, *shard_idx: int) -> None:
         """Designate data-shard indices as straggler suspects. With
@@ -959,14 +1039,35 @@ class PEMSVM:
             rt.save_snapshot(n_iters, carry[0], converged=converged,
                              samp_sum=samp_sum, n_syncs=n_syncs,
                              blocking=True)
-        return FitResult(weights=weights, last_sample=last, objective=objs,
+        return self._finalize_chains(FitResult(
+                         weights=weights, last_sample=last, objective=objs,
                          aux_history=aux_hist, n_iters=n_iters,
                          converged=converged, n_host_syncs=n_syncs,
                          straggler_events=rt.events,
                          resumed_at=rt.resumed_at,
                          n_checkpoints=rt.n_checkpoints,
                          loader_retries=rt.retry_stats.retries,
-                         loader_backoff_s=rt.retry_stats.backoff_s)
+                         loader_backoff_s=rt.retry_stats.backoff_s))
+
+    def _finalize_chains(self, result: FitResult) -> FitResult:
+        """Multichain post-processing, shared by every driver: the raw
+        fit state is the (C, K) per-chain posterior means — expose them
+        as ``chain_weights``, report their cross-chain mean as THE
+        weights (a C-chain posterior-mean estimate), and their ddof=1
+        std as the per-coordinate ensemble spread. Single-chain fits
+        pass through untouched."""
+        if self.config.n_chains <= 1:
+            self._chain_weights = None
+            return result
+        cw = np.asarray(result.weights, np.float32)
+        result.chain_weights = cw
+        result.chain_std = np.std(cw.astype(np.float64), axis=0,
+                                  ddof=1).astype(np.float32)
+        result.weights = np.mean(cw.astype(np.float64),
+                                 axis=0).astype(np.float32)
+        self._weights = result.weights
+        self._chain_weights = cw
+        return result
 
     def _fit_host_loop(self, iterate, state0,
                        rt: "_FitRuntime") -> FitResult:
@@ -1038,14 +1139,15 @@ class PEMSVM:
         weights = (np.asarray(rt.mean_w, np.float32)
                    if rt.mean_w is not None else last)
         self._weights = weights
-        return FitResult(weights=weights, last_sample=last, objective=objs,
+        return self._finalize_chains(FitResult(
+                         weights=weights, last_sample=last, objective=objs,
                          aux_history=aux_hist, n_iters=it,
                          converged=converged, n_host_syncs=len(objs),
                          straggler_events=rt.events,
                          resumed_at=rt.resumed_at,
                          n_checkpoints=rt.n_checkpoints,
                          loader_retries=rt.retry_stats.retries,
-                         loader_backoff_s=rt.retry_stats.backoff_s)
+                         loader_backoff_s=rt.retry_stats.backoff_s))
 
     def _fit_loop(self, data, prior, state, step, N: int,
                   rt: "_FitRuntime") -> FitResult:
@@ -1117,6 +1219,8 @@ class PEMSVM:
         is_mlt = cfg.task == "MLT"
         if is_mlt:
             state0 = jnp.zeros((cfg.num_classes, K), jnp.float32)
+        elif cfg.n_chains > 1:
+            state0 = jnp.zeros((cfg.n_chains, K), jnp.float32)
         else:
             state0 = jnp.zeros((K,), jnp.float32)
         # Nystrom featurizer arrays ride along to every chunk call; the
@@ -1338,6 +1442,8 @@ class PEMSVM:
                 prior = tuple(jax.device_put(a, rep) for a in prior)
         if cfg.task == "MLT":
             state = jnp.zeros((cfg.num_classes, K), jnp.float32)
+        elif cfg.n_chains > 1:
+            state = jnp.zeros((cfg.n_chains, K), jnp.float32)
         else:
             state = jnp.zeros((K,), jnp.float32)
         if self.mesh is not None:
@@ -1394,6 +1500,15 @@ class PEMSVM:
         if posterior_from is not None:
             U = self._posterior_columns(*posterior_from)
             W = np.concatenate([W, U], axis=1)
+        elif self._chain_weights is not None:
+            # Multichain ensemble uncertainty: extra columns
+            # (w_c - wbar) / sqrt(C - 1), so the scorer's row-wise
+            # ||x @ U|| (score_with_std) IS the ddof=1 std of the C
+            # chains' margins — posterior spread served from the same
+            # single fused dispatch as the mean margin.
+            cw = self._chain_weights.astype(np.float64)
+            U = (cw - cw.mean(axis=0)) / np.sqrt(cw.shape[0] - 1)
+            W = np.concatenate([W, U.T.astype(np.float32)], axis=1)
         if cfg.phi_spec is not None:
             lm, pj = self._phi_arrays
             return ServableModel(

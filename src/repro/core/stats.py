@@ -119,7 +119,12 @@ def reduce_stats(S: jnp.ndarray, b: jnp.ndarray,
     solve collapses to chance accuracy.
 
     ``live`` threads the failure-tolerant renormalized reduction (see
-    ``preduce``) through the fused collective."""
+    ``preduce``) through the fused collective.
+
+    A multichain statistic — S (C, K, K), b (K, C) — packs each chain's
+    triangle into the same single fused psum (C * K(K+1)/2 + C*K
+    payload): the symmetry win and the one-collective launch carry to C
+    chains unchanged."""
     if not axes:
         return S, b
 
@@ -132,6 +137,15 @@ def reduce_stats(S: jnp.ndarray, b: jnp.ndarray,
     if not triangle:
         return (uncast(preduce(maybe_cast(S), axes, live)),
                 uncast(preduce(maybe_cast(b), axes, live)))
+    if S.ndim == 3:
+        C, K = S.shape[0], S.shape[1]
+        tri = K * (K + 1) // 2
+        fused = jnp.concatenate([jax.vmap(triangle_pack)(S).reshape(-1),
+                                 b.reshape(-1)])
+        fused = uncast(preduce(maybe_cast(fused), axes, live))
+        S = jax.vmap(lambda p: triangle_unpack(p, K))(
+            fused[: C * tri].reshape(C, tri))
+        return S, fused[C * tri:].reshape(b.shape)
     K = S.shape[0]
     fused = jnp.concatenate([triangle_pack(S), b])
     fused = uncast(preduce(maybe_cast(fused), axes, live))

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ops
 from . import augment, objective, stats
-from .linear import PhiSpec, SVMData, _k_block
+from .linear import PhiSpec, SVMData, _k_block, chain_keys, multichain_draw
 
 
 def svr_local_stats(X: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray, *,
@@ -37,7 +37,8 @@ def svr_local_stats(X: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray, *,
                     row0: jnp.ndarray | int = 0,
                     phi=None, phi_spec: PhiSpec | None = None,
                     mask: jnp.ndarray | None = None,
-                    col_window: tuple | None = None):
+                    col_window: tuple | None = None,
+                    rng: str = "host", chain0: int = 0):
     """(pred, gamma, omega, Sigma^p, mu^p) over one row block.
 
     BOTH mixtures now run as a ``fused_stats`` epilogue (``em_svr`` /
@@ -60,14 +61,27 @@ def svr_local_stats(X: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray, *,
 
     ``col_window`` narrows Sigma to this model-shard's column block
     (the 2-D ``k_shard_axis`` statistic), composing with both modes
-    and the phi path — see ``linear.accumulate_stats``."""
+    and the phi path — see ``linear.accumulate_stats``.
+
+    ``rng``/``chain0`` select the MC noise source (see
+    ``linear.accumulate_stats``): under the counter modes BOTH
+    mixtures come from ONE key — the gamma mixture is counter plane
+    2m=0, omega's 2m=2 — replacing the host path's key split; a 2-D
+    (K, C) ``w`` under 'fused' runs C chains over the one X stream."""
     epilogue = "em_svr" if mode == "EM" else "mc_svr"
-    noise = None
+    noise, seed = None, None
     if mode == "MC":
-        k_lo, k_hi = jax.random.split(key)
-        nu_g, u_g = augment.draw_ig_noise(k_lo, X.shape[0], row0)
-        nu_o, u_o = augment.draw_ig_noise(k_hi, X.shape[0], row0)
-        noise = (nu_g, u_g, nu_o, u_o)
+        if rng == "host":
+            k_lo, k_hi = jax.random.split(key)
+            nu_g, u_g = augment.draw_ig_noise(k_lo, X.shape[0], row0)
+            nu_o, u_o = augment.draw_ig_noise(k_hi, X.shape[0], row0)
+            noise = (nu_g, u_g, nu_o, u_o)
+        elif rng == "fused_predraw":
+            noise = augment.draw_fused_noise(key, X.shape[0], row0,
+                                             chain0, 4)
+        else:
+            assert rng == "fused", rng
+            seed = augment.pack_seed(key, row0, chain0)
     beta0 = jnp.zeros((X.shape[0],), jnp.float32)  # hinge sign: unused
     if phi_spec is not None:
         landmarks, proj = phi
@@ -77,24 +91,43 @@ def svr_local_stats(X: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray, *,
             X, landmarks, proj, y, beta0, w, mask, noise,
             sigma=phi_spec.sigma, kind=phi_spec.kind,
             add_bias=phi_spec.add_bias, epilogue=epilogue, eps=eps,
-            eps_ins=eps_ins, col_window=col_window, backend=backend)
+            eps_ins=eps_ins, col_window=col_window, seed=seed,
+            backend=backend)
     else:
         pred, gamma, omega, b, S = ops.fused_stats(
             X, y, beta0, w, None, noise, epilogue=epilogue, eps=eps,
-            eps_ins=eps_ins, col_window=col_window, backend=backend)
+            eps_ins=eps_ins, col_window=col_window, seed=seed,
+            backend=backend)
     return pred, gamma, omega, S, b
 
 
 def svr_chunk_stats(chunk: SVMData, w: jnp.ndarray, key: jax.Array,
                     row0: jnp.ndarray, *, mode: str, eps: float,
                     eps_ins: float, backend: str | None, phi=None,
-                    phi_spec: PhiSpec | None = None) -> dict:
+                    phi_spec: PhiSpec | None = None,
+                    rng: str = "host", n_chains: int = 1,
+                    chain0: int = 0) -> dict:
     """Streaming E-step body for SVR: one chunk's additive contributions
-    (tree-summed across chunks by the stream driver)."""
+    (tree-summed across chunks by the stream driver). Multichain chunks
+    carry S (C, K, K) / b (K, C) and chain-mean scalar diagnostics —
+    see ``linear.cls_chunk_stats``."""
     X, y, mask = chunk
+    multi = n_chains > 1
     pred, gamma, omega, S, b = svr_local_stats(
-        X, y, w, mode=mode, key=key, eps=eps, eps_ins=eps_ins,
-        backend=backend, row0=row0, phi=phi, phi_spec=phi_spec, mask=mask)
+        X, y, w.T if multi else w, mode=mode, key=key, eps=eps,
+        eps_ins=eps_ins, backend=backend, row0=row0, phi=phi,
+        phi_spec=phi_spec, mask=mask, rng=rng, chain0=chain0)
+    if multi:
+        maskc = jnp.broadcast_to(mask[:, None], pred.shape)
+        return {
+            "S": S,
+            "b": b,
+            "loss": objective.svr_obj_terms(pred, y[:, None], eps_ins,
+                                            maskc) / n_chains,
+            "gamma_sum": jnp.sum(gamma * maskc) / n_chains,
+            "omega_sum": jnp.sum(omega * maskc) / n_chains,
+            "mask_sum": jnp.sum(mask),
+        }
     return {
         "S": S,
         "b": b,
@@ -108,7 +141,7 @@ def svr_chunk_stats(chunk: SVMData, w: jnp.ndarray, key: jax.Array,
 @partial(jax.jit, static_argnames=("mode", "lam", "eps", "eps_ins", "jitter",
                                    "axes", "triangle", "backend",
                                    "k_shard_axis", "reduce_dtype",
-                                   "phi_spec"))
+                                   "phi_spec", "rng", "n_chains", "chain0"))
 def svr_step(data: SVMData, w: jnp.ndarray, key: jax.Array, *,
              mode: str = "EM", lam: float = 1.0, eps: float = 1e-6,
              eps_ins: float = 1e-3, jitter: float = 1e-6,
@@ -117,18 +150,23 @@ def svr_step(data: SVMData, w: jnp.ndarray, key: jax.Array, *,
              k_shard_axis: str | None = None,
              reduce_dtype: str | None = None,
              phi=None, phi_spec: PhiSpec | None = None,
-             live: jnp.ndarray | None = None):
+             live: jnp.ndarray | None = None,
+             rng: str = "host", n_chains: int = 1, chain0: int = 0):
     """One LIN-*-SVR iteration. Returns (w_new, aux dict). ``live``
-    renormalizes the reductions around dropped replicas (stats.preduce)."""
+    renormalizes the reductions around dropped replicas (stats.preduce).
+    ``rng``/``n_chains``/``chain0`` mirror ``linear.cls_step``: the
+    weight state is chain-major (C, K) when n_chains > 1."""
     X, y, mask = data
+    multi = n_chains > 1
     row0 = stats.shard_row_offset(X.shape[0], axes)
 
     col_window = (_k_block(w.shape[0], k_shard_axis)
                   if k_shard_axis is not None else None)
     pred, gamma, omega, S, b = svr_local_stats(
-        X, y, w, mode=mode, key=key, eps=eps, eps_ins=eps_ins,
-        backend=backend, row0=row0, phi=phi, phi_spec=phi_spec, mask=mask,
-        col_window=col_window)
+        X, y, w.T if multi else w, mode=mode, key=key, eps=eps,
+        eps_ins=eps_ins, backend=backend, row0=row0, phi=phi,
+        phi_spec=phi_spec, mask=mask, col_window=col_window, rng=rng,
+        chain0=chain0)
     if k_shard_axis is None:
         S, b = stats.reduce_stats(S, b, axes, triangle=triangle,
                                   reduce_dtype=reduce_dtype, live=live)
@@ -136,8 +174,24 @@ def svr_step(data: SVMData, w: jnp.ndarray, key: jax.Array, *,
         S, b = stats.reduce_kshard(S, b, axes, k_shard_axis,
                                    reduce_dtype=reduce_dtype, live=live)
 
+    if multi:
+        w_new = multichain_draw(key, S, b, lam, jitter, chain0)
+        maskc = jnp.broadcast_to(mask[:, None], pred.shape)
+        obj = objective.l2_reg(w_new, lam) / n_chains + stats.preduce(
+            objective.svr_obj_terms(pred, y[:, None], eps_ins, maskc),
+            axes, live) / n_chains
+        return w_new, {
+            "objective": obj,
+            "gamma_mean": stats.masked_mean(gamma, maskc, axes, live),
+            "omega_mean": stats.masked_mean(omega, maskc, axes, live)}
+
     L, mu = stats.posterior_params(S, b, lam, jitter=jitter)
-    w_new = mu if mode == "EM" else stats.draw_weight(key, L, mu)
+    if mode == "EM":
+        w_new = mu
+    elif rng == "host":
+        w_new = stats.draw_weight(key, L, mu)
+    else:
+        w_new = stats.draw_weight(chain_keys(key, chain0, 1)[0], L, mu)
 
     obj = objective.l2_reg(w_new, lam) + stats.preduce(
         objective.svr_obj_terms(pred, y, eps_ins, mask), axes, live)

@@ -11,15 +11,18 @@ is that family, written as pure elementwise jnp so the SAME code runs
   * on (bn, 1) tiles inside a Pallas kernel body,
   * on (N,) vectors in the ``ref`` oracles and the K-tiled fallbacks.
 
-MC draws are split into *draw generation* and *transform*: the PRNG half
-(``core/augment.draw_ig_noise``) pre-draws per-row (nu, u) pairs keyed
-by GLOBAL row index — O(N) bytes streamed into the kernel as extra
-(N,) operands, noise next to the N*K*4 X stream — and the kernel applies
-the deterministic Michael-Schucany-Haas transform (``ig_transform``)
-below. Because the (nu, u) bits depend only on (iteration key, global
-row), the sampled chain is bitwise chunk/shard-invariant and identical
-to the ``augment.gamma_mc_rowwise`` oracle; the kernel never needs a
-PRNG (DESIGN.md §Perf/MC-SVR).
+MC draws are split into *draw generation* and *transform*: a PRNG half
+produces per-row (nu, u) pairs keyed by GLOBAL row index, and the kernel
+applies the deterministic Michael-Schucany-Haas transform
+(``ig_transform``) below. The PRNG half has two sources: the legacy
+host pre-draw (``core/augment.draw_ig_noise`` -> (N,) operands streamed
+next to the N*K*4 X stream) and, under rng mode 'fused', the in-kernel
+counter cipher (``fused_noise`` below / ``kernels/rng.py``) keyed by
+(iteration key, global row, chain id) — no operands at all. Either way
+the bits depend only on (key, row[, chain]), so the sampled chain is
+bitwise chunk/shard/mesh-invariant and identical to its host oracle
+(``augment.gamma_mc_rowwise`` resp. ``rng.draw_fused_noise``); the
+kernel never needs a stateful PRNG (DESIGN.md §Perf/MC-SVR, §Perf/RNG).
 
 Epilogue contract: ``apply_epilogue`` maps the margin tile to
 (aug, sigma_weight, coef) where
@@ -35,6 +38,8 @@ it, and core imports the kernels).
 from __future__ import annotations
 
 import jax.numpy as jnp
+
+from . import rng
 
 # Clamp for the IG mean (mu = 1/|residual| explodes as the margin hits
 # the hinge knee). 1/MU_MAX is far below any useful gamma clamp.
@@ -63,6 +68,20 @@ def noise_arity(epilogue: str) -> int:
 def aug_arity(epilogue: str) -> int:
     """Number of per-row augmentation outputs (1 hinge, 2 SVR)."""
     return _AUG_ARITY[epilogue]
+
+
+def fused_noise(seed, tile_row0, shape, epilogue: str):
+    """In-kernel counter noise for one margin tile (rng mode 'fused').
+
+    ``seed`` is the (4,) uint32 [k0, k1, row0, chain0] operand (an SMEM
+    ref or a host array); the derived (nu, u) streams are bitwise equal
+    to ``rng.draw_fused_noise`` at the same (row, chain, key)
+    coordinates — this is what replaces the pre-drawn (N,) noise
+    operands when the kernels run with an in-kernel RNG seed.  ``shape``
+    is the margin tile shape (bn, C): rows advance along dim 0, chain
+    ids along dim 1.
+    """
+    return rng.tile_noise(seed, tile_row0, shape, _NOISE_ARITY[epilogue])
 
 
 def ig_transform(mu: jnp.ndarray, nu: jnp.ndarray, u: jnp.ndarray,

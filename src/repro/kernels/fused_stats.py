@@ -65,8 +65,11 @@ from . import epilogues
 
 
 def _make_kernel(epilogue: str, eps: float, eps_ins: float,
-                 n_noise: int, n_aug: int, windowed: bool = False):
+                 n_noise: int, n_aug: int, windowed: bool = False,
+                 rng: bool = False, n_chains: int = 1):
     def _kernel(*refs):
+        if rng:
+            seed_ref, refs = refs[0], refs[1:]
         if windowed:
             c0_ref, refs = refs[0], refs[1:]
         x_ref, rho_ref, beta_ref, wmask_ref, w_ref = refs[:5]
@@ -76,16 +79,21 @@ def _make_kernel(epilogue: str, eps: float, eps_ins: float,
         b_ref, s_ref = outs[-2], outs[-1]
 
         x = x_ref[...].astype(jnp.float32)          # (bn, K)
-        wv = w_ref[...].astype(jnp.float32)         # (K, 1)
+        wv = w_ref[...].astype(jnp.float32)         # (K, C)
         rho = rho_ref[...].astype(jnp.float32)      # (bn, 1)
         beta = beta_ref[...].astype(jnp.float32)    # (bn, 1)
         wmask = wmask_ref[...].astype(jnp.float32)  # (bn, 1)
-        noise = tuple(r[...].astype(jnp.float32) for r in noise_refs)
 
-        margin = jax.lax.dot_general(                # (bn, 1) on the MXU
+        margin = jax.lax.dot_general(                # (bn, C) on the MXU
             x, wv, dimension_numbers=(((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
         margin_ref[...] = margin
+        if rng:                                      # in-kernel counter RNG
+            noise = epilogues.fused_noise(
+                seed_ref, pl.program_id(0) * x.shape[0], margin.shape,
+                epilogue)
+        else:                                        # pre-drawn operands
+            noise = tuple(r[...].astype(jnp.float32) for r in noise_refs)
         aug, weight, coef = epilogues.apply_epilogue(
             epilogue, margin, rho, beta, noise, eps, eps_ins)
         for ref, a in zip(aug_refs, aug):
@@ -96,18 +104,32 @@ def _make_kernel(epilogue: str, eps: float, eps_ins: float,
             b_ref[...] = jnp.zeros_like(b_ref)
             s_ref[...] = jnp.zeros_like(s_ref)
 
-        b_ref[...] += jax.lax.dot_general(           # x^T coef: (K, 1)
+        b_ref[...] += jax.lax.dot_general(           # x^T coef: (K, C)
             x, coef, dimension_numbers=(((0,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
-        xw = x * (wmask * weight)                    # (bn, K) weighted rows
         if windowed:                                 # aligned column window
             xc = jax.lax.dynamic_slice(
                 x, (0, c0_ref[0]), (x.shape[0], s_ref.shape[1]))
         else:
             xc = x
-        s_ref[...] += jax.lax.dot_general(           # x^T diag(m*w) x[:, w]
-            xw, xc, dimension_numbers=(((0,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
+        if n_chains == 1:
+            xw = x * (wmask * weight)                # (bn, K) weighted rows
+            s_ref[...] += jax.lax.dot_general(       # x^T diag(m*w) x[:, w]
+                xw, xc, dimension_numbers=(((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        else:
+            # One Sigma block per chain, laid side by side in a 2-D
+            # (Kp, C*Kp) accumulator: static per-chain column slices
+            # keep every block 128-lane aligned without a 3-D BlockSpec.
+            # The X tile is loaded ONCE; only the rank-bn updates (pure
+            # MXU work) scale with C — that is the nearly-free-chains
+            # claim.
+            cw = s_ref.shape[1] // n_chains
+            for c in range(n_chains):
+                xw = x * (wmask * weight[:, c:c + 1])
+                s_ref[:, c * cw:(c + 1) * cw] += jax.lax.dot_general(
+                    xw, xc, dimension_numbers=(((0,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
     return _kernel
 
 
@@ -133,7 +155,8 @@ def aligned_window_base(col_start, Kp: int, Cw: int):
 def fused_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
                 wvec: jnp.ndarray, wmask: jnp.ndarray | None = None,
                 noise: tuple | None = None,
-                col_start: jnp.ndarray | int | None = None, *,
+                col_start: jnp.ndarray | int | None = None,
+                seed: jnp.ndarray | None = None, *,
                 epilogue: str = "em_hinge", eps: float = 1e-6,
                 eps_ins: float = 0.0, block_n: int = 512,
                 col_blk: int | None = None,
@@ -146,21 +169,45 @@ def fused_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
 
     X: (N, K); rho/beta/wmask: (N,); wvec: (K,); noise: ``noise_arity``
     pre-drawn (N,) arrays for the MC epilogues (see ``epilogues.py``).
+    ``seed`` (a (4,) uint32 [k0, k1, row0, chain0] from
+    ``rng.pack_seed``) switches the MC epilogues to the IN-KERNEL
+    counter RNG: no noise operands enter the kernel at all, the (nu, u)
+    streams are derived per (global row, chain) inside the body and are
+    bitwise equal to ``rng.draw_fused_noise`` — so the whole draw is
+    chunk/shard/mesh-invariant with ZERO extra HBM traffic.
+
+    A 2-D ``wvec`` of shape (K, C) runs C Gibbs chains over the single
+    X stream (requires ``seed``; incompatible with a column window):
+    margin/aug become (N, C), b becomes (K, C) and S becomes (C, K, K)
+    — the X tile is read once and only MXU work scales with C.
     Zero-padded rows carry rho = beta = 0 so the hinge coef is exactly
     0, and their X-row is 0 so the b/S contributions vanish regardless
     of the augmentation values (SVR's MC coef is nonzero on padded rows
     — the zero X-row alone makes it a no-op).
     """
     N, K = X.shape
+    multi = wvec.ndim == 2
+    C = wvec.shape[1] if multi else 1
     windowed = col_blk is not None
     assert windowed == (col_start is not None), (
         "col_start and col_blk must be given together")
-    n_noise = epilogues.noise_arity(epilogue)
+    rng = seed is not None
     n_aug = epilogues.aug_arity(epilogue)
     noise = tuple(noise) if noise is not None else ()
-    assert len(noise) == n_noise, (
-        f"epilogue {epilogue!r} needs {n_noise} noise operands, "
-        f"got {len(noise)}")
+    if rng:
+        assert not noise, (
+            "seed (in-kernel RNG) and pre-drawn noise operands are "
+            "mutually exclusive")
+        n_noise = 0
+    else:
+        n_noise = epilogues.noise_arity(epilogue)
+        assert len(noise) == n_noise, (
+            f"epilogue {epilogue!r} needs {n_noise} noise operands, "
+            f"got {len(noise)}")
+    assert not (multi and windowed), (
+        "multichain fused_stats does not compose with a column window")
+    assert not multi or rng, (
+        "multichain fused_stats requires the in-kernel RNG seed")
     if wmask is None:
         wmask = jnp.ones((N,), jnp.float32)
     bn = min(block_n, _round_up(N, 8))
@@ -171,53 +218,64 @@ def fused_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
         rho = jnp.pad(rho, (0, Np - N))
         beta = jnp.pad(beta, (0, Np - N))
         wmask = jnp.pad(wmask, (0, Np - N))
-        wvec = jnp.pad(wvec, (0, Kp - K))
+        wvec = (jnp.pad(wvec, ((0, Kp - K), (0, 0))) if multi
+                else jnp.pad(wvec, (0, Kp - K)))
         noise = tuple(jnp.pad(z, (0, Np - N)) for z in noise)
 
+    extra_specs: list = []
+    extra_ops: tuple = ()
+    if rng:
+        extra_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+        extra_ops += (seed,)
     if windowed:
         Sw = col_window_geometry(Kp, col_blk)
         a0, off = aligned_window_base(col_start, Kp, Sw)
-        extra_specs = [pl.BlockSpec(memory_space=pltpu.SMEM)]
-        extra_ops = (a0.reshape(1),)
+        extra_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+        extra_ops += (a0.reshape(1),)
     else:
         Sw = Kp
-        extra_specs, extra_ops = [], ()
 
     grid = (Np // bn,)
     row_spec = pl.BlockSpec((bn, 1), lambda n: (n, 0))
+    chn_spec = pl.BlockSpec((bn, C), lambda n: (n, 0))
     outs = pl.pallas_call(
         _make_kernel(epilogue, float(eps), float(eps_ins), n_noise,
-                     n_aug, windowed),
+                     n_aug, windowed, rng, C),
         grid=grid,
-        in_specs=extra_specs + [                        # [aligned base]
+        in_specs=extra_specs + [                        # [seed] [base]
             pl.BlockSpec((bn, Kp), lambda n: (n, 0)),   # X rows
             row_spec,                                   # rho
             row_spec,                                   # beta
             row_spec,                                   # Sigma weight mask
-            pl.BlockSpec((Kp, 1), lambda n: (0, 0)),    # w (replicated)
+            pl.BlockSpec((Kp, C), lambda n: (0, 0)),    # w (replicated)
         ] + [row_spec] * n_noise,                       # pre-drawn noise
-        out_specs=[row_spec]                            # margin
-        + [row_spec] * n_aug                            # gamma (, omega)
+        out_specs=[chn_spec]                            # margin
+        + [chn_spec] * n_aug                            # gamma (, omega)
         + [
-            pl.BlockSpec((Kp, 1), lambda n: (0, 0)),    # b (revisited)
-            pl.BlockSpec((Kp, Sw), lambda n: (0, 0)),   # S (revisited)
+            pl.BlockSpec((Kp, C), lambda n: (0, 0)),    # b (revisited)
+            pl.BlockSpec((Kp, C * Sw), lambda n: (0, 0)),  # S (revisited)
         ],
-        out_shape=[jax.ShapeDtypeStruct((Np, 1), jnp.float32)]
+        out_shape=[jax.ShapeDtypeStruct((Np, C), jnp.float32)]
         * (1 + n_aug)
         + [
-            jax.ShapeDtypeStruct((Kp, 1), jnp.float32),
-            jax.ShapeDtypeStruct((Kp, Sw), jnp.float32),
+            jax.ShapeDtypeStruct((Kp, C), jnp.float32),
+            jax.ShapeDtypeStruct((Kp, C * Sw), jnp.float32),
         ],
         interpret=interpret,
     )(*extra_ops, X, rho.reshape(Np, 1), beta.reshape(Np, 1),
-      wmask.reshape(Np, 1), wvec.reshape(Kp, 1),
+      wmask.reshape(Np, 1),
+      wvec.reshape(Kp, C),
       *(z.reshape(Np, 1) for z in noise))
     per_row, (b, S) = outs[:1 + n_aug], outs[-2:]
     if windowed:
         S = jax.lax.dynamic_slice(S[:K], (jnp.int32(0), off),
                                   (K, col_blk))
+    elif multi:
+        S = jnp.stack([S[:K, c * Kp:c * Kp + K] for c in range(C)])
     else:
         S = S[:K, :K]
+    if multi:
+        return (*(v[:N] for v in per_row), b[:K], S)
     return (*(v[:N, 0] for v in per_row), b[:K, 0], S)
 
 

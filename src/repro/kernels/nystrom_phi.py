@@ -121,8 +121,10 @@ def _make_score_kernel(kind: str, inv_two_sigma_sq: float,
 def _make_fused_kernel(kind: str, inv_two_sigma_sq: float,
                        bias_col: int | None, epilogue: str, eps: float,
                        eps_ins: float, n_noise: int, n_aug: int,
-                       windowed: bool = False):
+                       windowed: bool = False, rng: bool = False):
     def _kernel(*refs):
+        if rng:
+            seed_ref, refs = refs[0], refs[1:]
         if windowed:
             c0_ref, refs = refs[0], refs[1:]
         x_ref, lm_ref, pj_ref, mask_ref, rho_ref, beta_ref, w_ref = refs[:7]
@@ -141,13 +143,18 @@ def _make_fused_kernel(kind: str, inv_two_sigma_sq: float,
         rho = rho_ref[...].astype(jnp.float32)               # (bn, 1)
         beta = beta_ref[...].astype(jnp.float32)             # (bn, 1)
         wv = w_ref[...].astype(jnp.float32)                  # (Wp, 1)
-        noise = tuple(r[...].astype(jnp.float32) for r in noise_refs)
 
         # From here this is exactly fused_stats' tile body with X := phi.
         margin = jax.lax.dot_general(
             phi, wv, dimension_numbers=(((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
         margin_ref[...] = margin
+        if rng:                                  # in-kernel counter RNG
+            noise = epilogues.fused_noise(
+                seed_ref, pl.program_id(0) * phi.shape[0], margin.shape,
+                epilogue)
+        else:                                    # pre-drawn operands
+            noise = tuple(r[...].astype(jnp.float32) for r in noise_refs)
         aug, weight, coef = epilogues.apply_epilogue(
             epilogue, margin, rho, beta, noise, eps, eps_ins)
         for ref, a in zip(aug_refs, aug):
@@ -278,7 +285,8 @@ def nystrom_fused_stats(X: jnp.ndarray, landmarks: jnp.ndarray,
                         beta: jnp.ndarray, wvec: jnp.ndarray,
                         mask: jnp.ndarray | None = None,
                         noise: tuple | None = None,
-                        col_start: jnp.ndarray | int | None = None, *,
+                        col_start: jnp.ndarray | int | None = None,
+                        seed: jnp.ndarray | None = None, *,
                         sigma: float = 1.0, kind: str = "rbf",
                         add_bias: bool = False,
                         epilogue: str = "em_hinge", eps: float = 1e-6,
@@ -306,12 +314,19 @@ def nystrom_fused_stats(X: jnp.ndarray, landmarks: jnp.ndarray,
     windowed = col_blk is not None
     assert windowed == (col_start is not None), (
         "col_start and col_blk must be given together")
-    n_noise = epilogues.noise_arity(epilogue)
+    rng = seed is not None
     n_aug = epilogues.aug_arity(epilogue)
     noise = tuple(noise) if noise is not None else ()
-    assert len(noise) == n_noise, (
-        f"epilogue {epilogue!r} needs {n_noise} noise operands, "
-        f"got {len(noise)}")
+    if rng:
+        assert not noise, (
+            "seed (in-kernel RNG) and pre-drawn noise operands are "
+            "mutually exclusive")
+        n_noise = 0
+    else:
+        n_noise = epilogues.noise_arity(epilogue)
+        assert len(noise) == n_noise, (
+            f"epilogue {epilogue!r} needs {n_noise} noise operands, "
+            f"got {len(noise)}")
     bn = min(block_n, _round_up(N, 8))
     X, landmarks, proj, mask, Np, Wp, M = _pad_operands(
         X, landmarks, proj, mask, add_bias, bn)
@@ -321,21 +336,25 @@ def nystrom_fused_stats(X: jnp.ndarray, landmarks: jnp.ndarray,
     noise = tuple(jnp.pad(z.astype(jnp.float32), (0, Np - N))
                   for z in noise)
 
+    extra_specs: list = []
+    extra_ops: tuple = ()
+    if rng:
+        extra_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+        extra_ops += (seed,)
     if windowed:
         Sw = col_window_geometry(Wp, col_blk)
         a0, off = aligned_window_base(col_start, Wp, Sw)
-        extra_specs = [pl.BlockSpec(memory_space=pltpu.SMEM)]
-        extra_ops = (a0.reshape(1),)
+        extra_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+        extra_ops += (a0.reshape(1),)
     else:
         Sw = Wp
-        extra_specs, extra_ops = [], ()
 
     row_spec = pl.BlockSpec((bn, 1), lambda n: (n, 0))
     outs = pl.pallas_call(
         _make_fused_kernel(kind, 1.0 / (2.0 * float(sigma) ** 2),
                            M - 1 if add_bias else None, epilogue,
                            float(eps), float(eps_ins), n_noise, n_aug,
-                           windowed),
+                           windowed, rng),
         grid=(Np // bn,),
         in_specs=extra_specs + [                            # [aligned base]
             pl.BlockSpec((bn, X.shape[1]), lambda n: (n, 0)),   # X rows

@@ -38,16 +38,31 @@ def _resolve(backend: str | None) -> str:
     return backend
 
 
-def _check_noise(epilogue: str, noise: tuple | None) -> None:
-    """Validate the pre-drawn noise arity HERE, once, so every route —
+def _check_noise(epilogue: str, noise: tuple | None,
+                 seed=None) -> None:
+    """Validate the noise configuration HERE, once, so every route —
     ref, kernel, K-tiled and VMEM fallbacks — fails with the same
-    message instead of an opaque unpack error inside the epilogue."""
-    want = epilogues.noise_arity(epilogue)
+    message instead of an opaque unpack error inside the epilogue.
+
+    Exactly one noise source is allowed: pre-drawn (N,) operands
+    (rng mode 'host'/'fused_predraw') or the in-kernel counter ``seed``
+    (rng mode 'fused') — never both."""
     got = 0 if noise is None else len(noise)
+    if seed is not None:
+        if got:
+            raise ValueError(
+                f"rng='fused' derives the {epilogue!r} noise in-kernel "
+                f"from the counter seed, but {got} pre-drawn noise= "
+                "operand(s) (augment.draw_ig_noise) were passed as "
+                "well — drop the noise= operands or set "
+                "SVMConfig.rng='host' to stream pre-drawn noise")
+        return
+    want = epilogues.noise_arity(epilogue)
     if got != want:
         raise ValueError(
             f"epilogue {epilogue!r} needs {want} pre-drawn noise "
-            f"operands (augment.draw_ig_noise), got {got}")
+            f"operands (augment.draw_ig_noise), got {got} — or pass "
+            "seed= (SVMConfig.rng='fused') to derive them in-kernel")
 
 
 def weighted_gram(X: jnp.ndarray, w: jnp.ndarray, *,
@@ -82,21 +97,25 @@ _FUSED_STATS_VMEM_BUDGET = 14 * 2 ** 20
 
 
 def _fused_stats_vmem_words(n_features: int, col_blk: int,
-                            block_n: int, epilogue: str) -> int:
+                            block_n: int, epilogue: str,
+                            rng: bool = False) -> int:
     """fp32 words resident per grid step of the COLUMN-WINDOWED fused
     statistic (DESIGN.md §Perf/k-shard): the X tile, w/b, the narrowed
     (Kp, Cw) Sigma accumulator, and the epilogue's per-row vectors
-    (rho/beta/wmask/margin + noise + aug)."""
+    (rho/beta/wmask/margin + noise + aug). Under the in-kernel RNG
+    (``rng=True``) the noise operands are derived in registers — zero
+    resident words."""
     Kp = _ru(n_features, 128)
     Cw = min(Kp, _ru(col_blk, 128) + 128)
-    per_row = (4 + epilogues.noise_arity(epilogue)
+    per_row = (4 + (0 if rng else epilogues.noise_arity(epilogue))
                + epilogues.aug_arity(epilogue))
     return block_n * Kp + 2 * Kp + Kp * Cw + per_row * block_n
 
 
 def fused_stats_fits(n_features: int, col_blk: int | None = None,
                      block_n: int = 512,
-                     epilogue: str = "em_hinge") -> bool:
+                     epilogue: str = "em_hinge",
+                     rng: bool = False) -> bool:
     """Whether the one-pass fused-statistic kernel's working set fits
     VMEM. Full-width Sigma keeps the documented FUSED_STATS_MAX_K cap;
     a column window narrows the accumulator to (K, Cw), so K beyond the
@@ -104,7 +123,8 @@ def fused_stats_fits(n_features: int, col_blk: int | None = None,
     if col_blk is None:
         return n_features <= FUSED_STATS_MAX_K
     return 4 * _fused_stats_vmem_words(
-        n_features, col_blk, block_n, epilogue) <= _FUSED_STATS_VMEM_BUDGET
+        n_features, col_blk, block_n, epilogue,
+        rng) <= _FUSED_STATS_VMEM_BUDGET
 
 
 def fused_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
@@ -112,34 +132,45 @@ def fused_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
                 noise: tuple | None = None, *,
                 epilogue: str = "em_hinge", eps: float = 1e-6,
                 eps_ins: float = 0.0, col_window: tuple | None = None,
+                seed: jnp.ndarray | None = None,
                 backend: str | None = None, **kw):
     """(margin, *aug, b, S): the whole iteration statistic in one X
     pass (single HBM stream instead of the split margin/b/Sigma
     passes), under any augmentation ``epilogue`` (``epilogues.py``):
     em_hinge/mc_hinge return (margin, gamma, b, S); the SVR double
     mixture returns (margin, gamma, omega, b, S). MC flavors consume
-    pre-drawn per-row ``noise`` arrays (``augment.draw_ig_noise``).
+    pre-drawn per-row ``noise`` arrays (``augment.draw_ig_noise``) OR,
+    when ``seed`` (the (4,) uint32 counter seed from ``rng.pack_seed``)
+    is given, derive them in-kernel with zero extra operands (rng mode
+    'fused'; mixing both sources is rejected).
+
+    A 2-D (K, C) ``wvec`` with ``seed`` runs C Gibbs chains over the
+    single X stream: margin/aug (N, C), b (K, C), S (C, K, K).
 
     ``col_window = (start, blk)`` narrows Sigma to its column block
     X^T diag(w) X[:, start:start+blk] — the 2-D (data x model)
     ``k_shard_axis`` statistic stays single-stream: ``blk`` is static,
     ``start`` may be traced (``axis_index * blk`` inside shard_map).
 
-    For K > FUSED_STATS_MAX_K (full width) or past the windowed byte
-    budget (``fused_stats_fits``) the Pallas flavors fall back to the
-    K-tiled split pair (E-step + syrk_tri; windowed: plain-XLA column
-    block) rather than blow VMEM — callers get the same outputs either
-    way."""
+    For K > FUSED_STATS_MAX_K (full width; C*K for C chains) or past
+    the windowed byte budget (``fused_stats_fits``) the Pallas flavors
+    fall back to the K-tiled split pair (E-step + syrk_tri; windowed:
+    plain-XLA column block) rather than blow VMEM — callers get the
+    same outputs either way."""
     backend = _resolve(backend)
-    _check_noise(epilogue, noise)
+    _check_noise(epilogue, noise, seed)
+    multi = wvec.ndim == 2
+    n_chains = wvec.shape[1] if multi else 1
     if backend == "ref":
         return ref.fused_stats(X, rho, beta, wvec, wmask, eps,
                                epilogue=epilogue, noise=noise,
-                               eps_ins=eps_ins, col_window=col_window)
+                               eps_ins=eps_ins, col_window=col_window,
+                               seed=seed)
     if col_window is not None:
         start, blk = col_window
         if not fused_stats_fits(X.shape[1], blk,
-                                kw.get("block_n", 512), epilogue):
+                                kw.get("block_n", 512), epilogue,
+                                seed is not None):
             # Windowed split fallback: the narrowed Sigma block is a
             # plain (weighted X)^T Xcols matmul XLA tiles itself —
             # the compute-bound regime where stream count stops being
@@ -148,13 +179,19 @@ def fused_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
             return ref.fused_stats(X, rho, beta, wvec, wmask, eps,
                                    epilogue=epilogue, noise=noise,
                                    eps_ins=eps_ins,
-                                   col_window=col_window)
+                                   col_window=col_window, seed=seed)
         return _fused_stats.fused_stats(
-            X, rho, beta, wvec, wmask, noise, start, epilogue=epilogue,
-            eps=eps, eps_ins=eps_ins, col_blk=blk,
+            X, rho, beta, wvec, wmask, noise, start, seed,
+            epilogue=epilogue, eps=eps, eps_ins=eps_ins, col_blk=blk,
             interpret=(backend == "interpret"), **kw)
-    if X.shape[1] > FUSED_STATS_MAX_K:
+    if X.shape[1] * n_chains > FUSED_STATS_MAX_K:
         kw.pop("block_n", None)
+        if multi:
+            # Multichain past the VMEM cap: the C stacked Sigma blocks
+            # are plain XLA matmuls (compute-bound regime).
+            return ref.fused_stats(X, rho, beta, wvec, wmask, eps,
+                                   epilogue=epilogue, noise=noise,
+                                   eps_ins=eps_ins, seed=seed)
         if epilogue == "em_hinge":
             margin, gamma, b = fused_estep(X, rho, beta, wvec, eps=eps,
                                            backend=backend)
@@ -164,6 +201,8 @@ def fused_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
         # coef) runs as plain XLA; only the O(NK^2) Sigma goes through
         # the K-tiled SYRK kernel. 3 X streams — the compute-bound
         # regime where stream count stops being the bound anyway.
+        if seed is not None:
+            noise = ref.seed_noise(seed, X.shape[0], 1, epilogue)
         Xf = X.astype(jnp.float32)
         margin = Xf @ wvec.astype(jnp.float32)
         aug, weight, coef = epilogues.apply_epilogue(
@@ -173,7 +212,8 @@ def fused_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
         b = Xf.T @ coef
         return (margin, *aug, b, syrk_tri(X, w, backend=backend))
     return _fused_stats.fused_stats(
-        X, rho, beta, wvec, wmask, noise, epilogue=epilogue, eps=eps,
+        X, rho, beta, wvec, wmask, noise, None, seed,
+        epilogue=epilogue, eps=eps,
         eps_ins=eps_ins, interpret=(backend == "interpret"), **kw)
 
 
@@ -216,7 +256,8 @@ def _ru(x: int, m: int) -> int:
 def _nystrom_vmem_words(n_landmarks: int, n_features: int, add_bias: bool,
                         block_n: int, with_stats: bool,
                         epilogue: str = "em_hinge",
-                        col_blk: int | None = None) -> int:
+                        col_blk: int | None = None,
+                        rng: bool = False) -> int:
     """fp32 words resident per grid step of the Nystrom kernels
     (DESIGN.md §Perf/Nystrom accounting). ``with_stats`` adds the
     Sigma/b accumulators only the fused flavor allocates; the epilogue
@@ -234,7 +275,7 @@ def _nystrom_vmem_words(n_landmarks: int, n_features: int, add_bias: bool,
              + block_n * Wp)     # phi tile
     if with_stats:
         per_row = (4                               # mask/rho/beta/margin
-                   + epilogues.noise_arity(epilogue)
+                   + (0 if rng else epilogues.noise_arity(epilogue))
                    + epilogues.aug_arity(epilogue))
         Cw = Wp if col_blk is None else min(Wp, _ru(col_blk, 128) + 128)
         words += (Wp * Cw        # Sigma accumulator (windowed: narrowed)
@@ -245,16 +286,17 @@ def _nystrom_vmem_words(n_landmarks: int, n_features: int, add_bias: bool,
 def nystrom_fused_fits(n_landmarks: int, n_features: int,
                        add_bias: bool = True, block_n: int = 256,
                        epilogue: str = "em_hinge",
-                       col_blk: int | None = None) -> bool:
+                       col_blk: int | None = None,
+                       rng: bool = False) -> bool:
     """Whether the one-pass featurize-and-accumulate kernel's working
     set fits the VMEM budget (epilogue-aware: MC/SVR flavors carry up
-    to 6 extra per-row vectors; a k-shard column window narrows the
-    Sigma accumulator)."""
+    to 6 extra per-row vectors — zero under the in-kernel RNG; a
+    k-shard column window narrows the Sigma accumulator)."""
     if n_landmarks > NYSTROM_FUSED_MAX_M:
         return False
     return 4 * _nystrom_vmem_words(n_landmarks, n_features, add_bias,
                                    block_n, True, epilogue,
-                                   col_blk) <= _NYSTROM_VMEM_BUDGET
+                                   col_blk, rng) <= _NYSTROM_VMEM_BUDGET
 
 
 def _nystrom_phi_fits(n_landmarks: int, n_features: int,
@@ -338,6 +380,7 @@ def nystrom_fused_stats(X: jnp.ndarray, landmarks: jnp.ndarray,
                         epilogue: str = "em_hinge", eps: float = 1e-6,
                         eps_ins: float = 0.0,
                         col_window: tuple | None = None,
+                        seed: jnp.ndarray | None = None,
                         backend: str | None = None, **kw):
     """(margin, *aug, b, S): the whole phi-space iteration statistic in
     one X pass — ``fused_stats`` (any augmentation epilogue: EM/MC
@@ -355,30 +398,32 @@ def nystrom_fused_stats(X: jnp.ndarray, landmarks: jnp.ndarray,
     (K-tiled past its own cap, window passed through) consumes it under
     the same epilogue — callers get the same outputs either way."""
     backend = _resolve(backend)
-    _check_noise(epilogue, noise)
+    _check_noise(epilogue, noise, seed)
     if backend == "ref":
         return ref.nystrom_fused_stats(X, landmarks, proj, rho, beta,
                                        wvec, mask, float(sigma), kind,
                                        add_bias, eps, epilogue=epilogue,
                                        noise=noise, eps_ins=eps_ins,
-                                       col_window=col_window)
+                                       col_window=col_window, seed=seed)
     if not nystrom_fused_fits(landmarks.shape[0], X.shape[1], add_bias,
                               kw.get("block_n", 256), epilogue,
-                              col_window[1] if col_window else None):
+                              col_window[1] if col_window else None,
+                              seed is not None):
         phi = nystrom_phi(X, landmarks, proj, mask, sigma=sigma, kind=kind,
                           add_bias=add_bias, backend=backend)
         return fused_stats(phi, rho, beta, wvec, mask, noise,
                            epilogue=epilogue, eps=eps, eps_ins=eps_ins,
-                           col_window=col_window, backend=backend)
+                           col_window=col_window, seed=seed,
+                           backend=backend)
     if col_window is not None:
         start, blk = col_window
         return _nystrom_phi.nystrom_fused_stats(
             X, landmarks, proj, rho, beta, wvec, mask, noise, start,
-            sigma=float(sigma), kind=kind, add_bias=add_bias,
+            seed, sigma=float(sigma), kind=kind, add_bias=add_bias,
             epilogue=epilogue, eps=eps, eps_ins=eps_ins, col_blk=blk,
             interpret=(backend == "interpret"), **kw)
     return _nystrom_phi.nystrom_fused_stats(
-        X, landmarks, proj, rho, beta, wvec, mask, noise,
+        X, landmarks, proj, rho, beta, wvec, mask, noise, None, seed,
         sigma=float(sigma), kind=kind, add_bias=add_bias,
         epilogue=epilogue, eps=eps, eps_ins=eps_ins,
         interpret=(backend == "interpret"), **kw)

@@ -8,7 +8,25 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from . import epilogues
+from . import epilogues, rng
+
+
+def seed_noise(seed, n: int, n_chains: int, epilogue: str):
+    """Materialize the in-kernel counter stream for ``n`` rows.
+
+    ``seed`` is the (4,) uint32 [k0, k1, row0, chain0] operand
+    (``rng.pack_seed``).  Returns the epilogue's noise tuple with (n,)
+    arrays for a single chain, (n, n_chains) for a multichain call —
+    bitwise identical to the values the fused kernels derive in-body,
+    because both sides run the same elementwise ``rng`` code.
+    """
+    rows = seed[2].astype(jnp.int32) + jnp.arange(n, dtype=jnp.int32)
+    chains = seed[3].astype(jnp.int32)
+    if n_chains > 1:
+        rows = rows[:, None]
+        chains = chains + jnp.arange(n_chains, dtype=jnp.int32)[None, :]
+    return rng.counter_noise(seed[0], seed[1], rows, chains,
+                             epilogues.noise_arity(epilogue))
 
 
 def weighted_gram(X: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
@@ -64,7 +82,8 @@ def fused_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
                 wvec: jnp.ndarray, wmask: jnp.ndarray | None,
                 eps: float, epilogue: str = "em_hinge",
                 noise: tuple | None = None, eps_ins: float = 0.0,
-                col_window: tuple | None = None):
+                col_window: tuple | None = None,
+                seed: jnp.ndarray | None = None):
     """One-sweep iteration statistic under any augmentation epilogue:
     margin -> (aug, sigma_weight, coef) -> (b, Sigma) in one logical
     pass (``kernels/epilogues.py`` holds the epilogue family; MC
@@ -79,12 +98,35 @@ def fused_stats(X: jnp.ndarray, rho: jnp.ndarray, beta: jnp.ndarray,
     ``k_shard_axis`` statistic. ``start`` may be TRACED (it is
     ``axis_index * blk`` inside shard_map); ``blk`` is static.
 
+    ``seed`` (the (4,) uint32 [k0, k1, row0, chain0] from
+    ``rng.pack_seed``) replaces pre-drawn ``noise`` with the counter
+    stream (rng mode 'fused'); a 2-D (K, C) ``wvec`` then runs C chains
+    at once — margin/aug become (N, C), b (K, C) and S (C, K, K).
+
     Returns:
       (margin (N,), *aug (N,) each, b (K,), S), all float32 — aug =
       (gamma,) for the hinge epilogues, (gamma, omega) for SVR; S is
       (K, K) full or (K, blk) windowed.
     """
     Xf = X.astype(jnp.float32)
+    if wvec.ndim == 2:
+        assert seed is not None, "multichain fused_stats requires seed"
+        assert col_window is None, (
+            "multichain fused_stats does not compose with a column "
+            "window")
+        C = wvec.shape[1]
+        margin = Xf @ wvec.astype(jnp.float32)            # (N, C)
+        noise = seed_noise(seed, X.shape[0], C, epilogue)
+        aug, weight, coef = epilogues.apply_epilogue(
+            epilogue, margin, rho.astype(jnp.float32)[:, None],
+            beta.astype(jnp.float32)[:, None], noise, eps, eps_ins)
+        w = (weight if wmask is None
+             else wmask.astype(jnp.float32)[:, None] * weight)
+        b = Xf.T @ coef                                   # (K, C)
+        S = jnp.stack([(Xf * w[:, c:c + 1]).T @ Xf for c in range(C)])
+        return (margin, *aug, b, S)
+    if seed is not None:
+        noise = seed_noise(seed, X.shape[0], 1, epilogue)
     margin = Xf @ wvec.astype(jnp.float32)
     aug, weight, coef = epilogues.apply_epilogue(
         epilogue, margin, rho.astype(jnp.float32),
@@ -142,7 +184,8 @@ def nystrom_fused_stats(X: jnp.ndarray, landmarks: jnp.ndarray,
                         add_bias: bool, eps: float,
                         epilogue: str = "em_hinge",
                         noise: tuple | None = None, eps_ins: float = 0.0,
-                        col_window: tuple | None = None):
+                        col_window: tuple | None = None,
+                        seed: jnp.ndarray | None = None):
     """Oracle for the featurize-and-accumulate kernel: fused_stats on
     nystrom_phi, i.e. the whole phi-space iteration statistic under any
     augmentation epilogue (EM/MC hinge, SVR's double mixture).
@@ -155,7 +198,7 @@ def nystrom_fused_stats(X: jnp.ndarray, landmarks: jnp.ndarray,
     phi = nystrom_phi(X, landmarks, proj, mask, sigma, kind, add_bias)
     return fused_stats(phi, rho, beta, wvec, mask, eps,
                        epilogue=epilogue, noise=noise, eps_ins=eps_ins,
-                       col_window=col_window)
+                       col_window=col_window, seed=seed)
 
 
 def rbf_gram(X1: jnp.ndarray, X2: jnp.ndarray, sigma: float) -> jnp.ndarray:

@@ -399,6 +399,34 @@ print("drop/live OK")
 """)
 
 
+# --------------------------------------- in-kernel counter RNG + chains
+def test_fused_multichain_midpass_kill_resume_bitwise(tmp_path):
+    """The counter-RNG elastic claim: a 3-chain rng='fused' stream fit
+    killed INSIDE a pass (mid-chunk snapshot) resumes bitwise — the
+    (C, K) chain state, the partial chunk totals (S is (C, K, K) here)
+    and the iteration subkey all ride the snapshot, and the in-kernel
+    counter re-derives identical noise for the replayed rows."""
+    kw = dict(algorithm="MC", task="CLS", driver="stream", chunk_rows=64,
+              max_iters=8, min_iters=8, burnin=2, rng="fused", n_chains=3)
+    ref = PEMSVM(SVMConfig(**kw)).fit_chunks(_five_chunks, K)
+
+    d = str(tmp_path)
+    pol = FaultPolicy(ckpt_dir=d, ckpt_every=100, ckpt_chunks=1)
+    cfg = SVMConfig(**kw, fault=pol)
+    with pytest.raises(faults.SimulatedPreemption):
+        PEMSVM(cfg).fit_chunks(faults.kill_after_chunks(_five_chunks, 18),
+                               K)
+    payload = resume_mod.load_snapshot(Checkpointer(d))
+    assert payload["in_pass"] and payload["chunk_idx"] > 0
+    assert payload["state"].shape == (3, K)   # chunk width, chain-major
+
+    res = PEMSVM(cfg).fit_chunks(_five_chunks, K, resume_from=d)
+    assert res.resumed_at is not None
+    assert np.array_equal(ref.weights, res.weights)
+    assert np.array_equal(ref.chain_weights, res.chain_weights)
+    assert np.array_equal(ref.chain_std, res.chain_std)
+
+
 # --------------------------------------------------------- Nystrom path
 def test_nystrom_stream_kill_resume_bitwise(tmp_path):
     """The nonlinear path inherits elasticity: landmark selection is
